@@ -1,0 +1,96 @@
+"""Shared benchmark context: systems, suites, trained predictors, timing.
+
+Building the NCF predictor is the expensive part, so one ``Context`` per
+system is built lazily and cached for the whole ``benchmarks.run`` session.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import numpy as np
+
+from repro.core import metrics, ncf, surfaces, types
+from repro.core.allocator import EcoShiftAllocator
+from repro.core.emulator import ClusterEmulator
+
+#: benchmark-grade NCF config (full runs use the default 3000 steps)
+NCF_CFG = ncf.NCFConfig(train_steps=2000, online_steps=400)
+
+#: apps held out from offline training (onboarded online, like production)
+N_HELDOUT = 12
+
+
+@dataclasses.dataclass
+class Context:
+    system: types.SystemSpec
+    apps: list[types.AppSpec]
+    true_surfaces: dict
+    allocator: EcoShiftAllocator
+    #: instance-independent predicted surfaces keyed by app name
+    predicted: dict
+    unseen: list[str]
+
+    def predicted_for(self, emu: ClusterEmulator) -> dict:
+        """Instance-name -> predicted surface mapping for a cluster."""
+        return {
+            n.app.name: self.predicted[n.base_app]
+            for n in emu.alive_nodes()
+        }
+
+
+@functools.lru_cache(maxsize=4)
+def get_suite(system_name: str):
+    """(system, apps, true_surfaces) without training the predictor."""
+    system = types.SYSTEMS[system_name]
+    apps, surfs = surfaces.build_paper_suite(system)
+    return system, apps, surfs
+
+
+@functools.lru_cache(maxsize=4)
+def get_context(system_name: str) -> Context:
+    system = types.SYSTEMS[system_name]
+    apps, surfs = surfaces.build_paper_suite(system)
+    train_apps = apps[: len(apps) - N_HELDOUT]
+    heldout = apps[len(apps) - N_HELDOUT :]
+    hist = {a.name: surfs[a.name] for a in train_apps}
+    alloc = EcoShiftAllocator.train_offline(system, hist, NCF_CFG)
+    for a in train_apps:
+        alloc.onboard_known(a.name)
+    for i, a in enumerate(heldout):
+        alloc.onboard(a.name, surfs[a.name], seed=i)
+    return Context(
+        system=system,
+        apps=apps,
+        true_surfaces=surfs,
+        allocator=alloc,
+        predicted=dict(alloc.predicted),
+        unseen=[a.name for a in heldout],
+    )
+
+
+def build_cluster(
+    ctx: Context, group: str, *, n_nodes: int = 100, seed: int = 0,
+    initial_caps=None,
+) -> ClusterEmulator:
+    apps = surfaces.workload_group(ctx.apps, group)
+    return ClusterEmulator.build(
+        ctx.system, apps, ctx.true_surfaces, n_nodes=n_nodes, seed=seed,
+        initial_caps=initial_caps,
+    )
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """(result, microseconds-per-call)."""
+    out = fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return out, us
+
+
+def csv_line(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

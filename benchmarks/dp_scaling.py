@@ -1,0 +1,79 @@
+"""§3.2.3 complexity: DP-search scaling in receivers and budget + kernels.
+
+Reports wall time of the faithful sparse Algorithm-1 solver, the vectorized
+dense DP and the jit'd JAX scan (with the Pallas (max,+) kernel path) as
+N_receivers and the budget grow, plus per-call timings of the Pallas
+kernels in interpret mode.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, get_context, timed
+from repro.core import curves, mckp
+
+
+def _options(ctx, n_apps: int, budget: float):
+    base = (ctx.system.init_cpu, ctx.system.init_gpu)
+    out = []
+    for i in range(n_apps):
+        app = ctx.apps[i % len(ctx.apps)]
+        out.append(
+            curves.build_options(
+                f"{app.name}#{i}",
+                ctx.true_surfaces[app.name],
+                base,
+                ctx.system.grid,
+                budget,
+            )
+        )
+    return out
+
+
+def run(lines: list[str], *, fast: bool = False) -> None:
+    ctx = get_context("system1-a100")
+    cases = [(10, 1000.0), (50, 3500.0), (100, 7000.0)]
+    if not fast:
+        cases.append((200, 14000.0))
+    for n_apps, budget in cases:
+        opts = _options(ctx, n_apps, budget)
+        sol_sparse, us_sparse = timed(mckp.solve_sparse, opts, budget, repeats=1)
+        sol_dense, us_dense = timed(mckp.solve_dense, opts, budget, repeats=1)
+        sol_jax, us_jax = timed(
+            mckp.solve_dense_jax, opts, budget, repeats=1
+        )
+        assert abs(sol_sparse.total_value - sol_dense.total_value) < 1e-6
+        lines.append(
+            csv_line(
+                f"dp_scaling.N{n_apps}.B{int(budget)}",
+                us_sparse,
+                f"sparse_us={us_sparse:.0f};dense_us={us_dense:.0f};"
+                f"jax_us={us_jax:.0f};value={sol_sparse.total_value:.3f}",
+            )
+        )
+
+    # Pallas kernel micro-benchmarks (interpret mode on CPU)
+    import jax.numpy as jnp
+
+    from repro.kernels import mckp_dp, ref
+
+    rng = np.random.default_rng(0)
+    nb = 512
+    dp = jnp.asarray(np.maximum.accumulate(rng.uniform(0, 1, nb)), jnp.float32)
+    f = jnp.asarray(np.maximum.accumulate(rng.uniform(0, 1, nb)), jnp.float32)
+    _, us_pallas = timed(
+        lambda: mckp_dp.maxplus_conv_pallas(dp, f)[0].block_until_ready(),
+        repeats=2,
+    )
+    _, us_ref = timed(
+        lambda: ref.maxplus_conv(dp, f)[0].block_until_ready(), repeats=2
+    )
+    lines.append(
+        csv_line(
+            "kernel.maxplus_conv.nb512",
+            us_pallas,
+            f"interpret_us={us_pallas:.0f};ref_us={us_ref:.0f};"
+            f"work={nb*nb} cell-ops",
+        )
+    )

@@ -1,0 +1,33 @@
+"""Fig. 11: Jain's fairness index on the mixed workloads, both systems."""
+
+from __future__ import annotations
+
+from benchmarks.common import csv_line, get_context
+from benchmarks.policy_eval import POLICIES, evaluate
+
+BUDGET = {"system1-a100": 3500.0, "system2-h100": 7000.0}
+
+
+def run(lines: list[str], *, fast: bool = False) -> None:
+    systems = ("system1-a100",) if fast else ("system1-a100", "system2-h100")
+    for system_name in systems:
+        ctx = get_context(system_name)
+        jains = {}
+        for policy in POLICIES:
+            res = evaluate(ctx, "mixed", policy, BUDGET[system_name], seeds=(0, 1, 2))
+            jains[policy] = res.jain
+            lines.append(
+                csv_line(
+                    f"fig11.{ctx.system.name}.{policy}",
+                    0.0,
+                    f"jain={res.jain:.3f};mean_impr={res.mean*100:.2f}%",
+                )
+            )
+        gap = jains["ecoshift"] - min(jains["dps"], jains["mixed_adaptive"])
+        lines.append(
+            csv_line(
+                f"fig11.{ctx.system.name}.summary",
+                0.0,
+                f"ecoshift_jain_vs_worst_baseline={gap:+.3f}",
+            )
+        )

@@ -1,0 +1,36 @@
+"""Fig. 1: performance heatmaps across (cpu, gpu) cap pairs, 4 classes."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, get_suite
+
+#: one representative app per sensitivity class (paper uses these four)
+REPRESENTATIVES = {
+    "C": "hecbench.softmax",
+    "G": "spec.tealeaf",
+    "B": "mlperf.ResNet50",
+    "N": "spec.minisweep",
+}
+
+
+def run(lines: list[str]) -> None:
+    system, apps, surfs = get_suite("system2-h100")
+    grid = system.grid
+    cc, gg = np.meshgrid(grid.cpu_levels, grid.gpu_levels, indexing="ij")
+    for sclass, name in REPRESENTATIVES.items():
+        surf = surfs[name]
+        t = np.asarray(surf.runtime(cc, gg))
+        norm = t / t.min()  # normalized runtime (1.0 = fastest corner)
+        # sensitivity along each axis: relative runtime range
+        cpu_sens = float((norm.max(axis=0) / norm.min(axis=0)).max() - 1)
+        gpu_sens = float((norm.max(axis=1) / norm.min(axis=1)).max() - 1)
+        lines.append(
+            csv_line(
+                f"fig1.heatmap.{sclass}.{name}",
+                0.0,
+                f"cpu_sens={cpu_sens:.3f};gpu_sens={gpu_sens:.3f};"
+                f"worst_over_best={norm.max():.3f}",
+            )
+        )

@@ -1,0 +1,35 @@
+"""Fig. 2: diminishing marginal gains from extra CPU/GPU budget.
+
+Validates the published anchors: cfd +17%/+7.6% per 100 W CPU step,
+raytracing +15.5%/+2.1% per 100 W GPU step, plus cross-component
+insensitivity.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import csv_line
+from repro.core import surfaces
+
+
+def run(lines: list[str]) -> None:
+    cfd = surfaces.cfd_surface()
+    rt = surfaces.raytracing_surface()
+    base = (300.0, 200.0)
+
+    def gain(surf, a, b):
+        ta, tb = float(surf.runtime(*a)), float(surf.runtime(*b))
+        return (ta - tb) / ta * 100
+
+    rows = [
+        ("cfd.cpu_300_400", gain(cfd, (300, 200), (400, 200)), 17.0),
+        ("cfd.cpu_400_500", gain(cfd, (400, 200), (500, 200)), 7.6),
+        ("raytracing.gpu_200_300", gain(rt, (300, 200), (300, 300)), 15.5),
+        ("raytracing.gpu_300_400", gain(rt, (300, 300), (300, 400)), 2.1),
+        ("cfd.gpu_200_400_cross", gain(cfd, (300, 200), (300, 400)), None),
+        ("raytracing.cpu_300_500_cross", gain(rt, (300, 200), (500, 200)), None),
+    ]
+    for name, got, want in rows:
+        tag = f"got={got:.2f}%"
+        if want is not None:
+            tag += f";paper={want}%;abs_err={abs(got - want):.3f}pp"
+        lines.append(csv_line(f"fig2.{name}", 0.0, tag))

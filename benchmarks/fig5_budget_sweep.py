@@ -1,0 +1,49 @@
+"""Figs. 5 & 7: avg improvement vs reclaimed budget, per workload group.
+
+System 1 (Fig. 5, initial caps 140/150 W) and System 2 (Fig. 7, 300/300 W),
+100-node clusters, EcoShift (NCF-predicted surfaces) vs DPS vs
+MixedAdaptive, 98% CIs over 5 seeds.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import csv_line, get_context, timed
+from benchmarks.policy_eval import GROUPS, POLICIES, evaluate
+
+BUDGETS = {
+    "system1-a100": (1000.0, 3500.0, 7000.0),
+    "system2-h100": (3500.0, 7000.0, 14000.0),
+}
+FIG = {"system1-a100": "fig5", "system2-h100": "fig7"}
+
+
+def run(lines: list[str], *, fast: bool = False) -> None:
+    for system_name, budgets in BUDGETS.items():
+        ctx = get_context(system_name)
+        groups = ("mixed",) if fast else GROUPS
+        budgets_use = budgets[1:2] if fast else budgets
+        for group in groups:
+            for budget in budgets_use:
+                results = {}
+                for policy in POLICIES:
+                    res, us = timed(
+                        evaluate, ctx, group, policy, budget, repeats=1
+                    )
+                    results[policy] = res
+                    lines.append(
+                        csv_line(
+                            f"{FIG[system_name]}.{group}.B{int(budget)}.{policy}",
+                            us,
+                            f"mean={res.mean*100:.2f}%;ci=[{res.lo*100:.2f},{res.hi*100:.2f}]",
+                        )
+                    )
+                adv = results["ecoshift"].mean - max(
+                    results["dps"].mean, results["mixed_adaptive"].mean
+                )
+                lines.append(
+                    csv_line(
+                        f"{FIG[system_name]}.{group}.B{int(budget)}.advantage",
+                        0.0,
+                        f"ecoshift_vs_best_baseline={adv*100:+.2f}pp",
+                    )
+                )

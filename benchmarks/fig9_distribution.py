@@ -1,0 +1,24 @@
+"""Fig. 9: distribution of per-application improvements (violin stand-in)."""
+
+from __future__ import annotations
+
+from benchmarks.common import csv_line, get_context
+from benchmarks.policy_eval import POLICIES, evaluate
+from repro.core import metrics
+
+
+def run(lines: list[str], *, fast: bool = False) -> None:
+    ctx = get_context("system1-a100")
+    groups = ("mixed",) if fast else ("cpu", "gpu", "both", "mixed")
+    for group in groups:
+        for policy in POLICIES:
+            res = evaluate(ctx, group, policy, 3500.0, seeds=(0, 1, 2))
+            q = metrics.violin_quantiles(res.improvements)
+            lines.append(
+                csv_line(
+                    f"fig9.{group}.{policy}",
+                    0.0,
+                    f"median={q['median']*100:.2f}%;p25={q['p25']*100:.2f}%;"
+                    f"p75={q['p75']*100:.2f}%;p95={q['p95']*100:.2f}%",
+                )
+            )

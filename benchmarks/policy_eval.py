@@ -1,0 +1,62 @@
+"""Emulation-based policy evaluation engine (paper §5.4, Figs. 5-9, 11).
+
+One ``evaluate`` call runs a policy on an emulated cluster for several
+seeds and returns the mean/CI of the average improvement plus per-app
+distributions — the quantity every results figure is built from.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import Context, build_cluster
+from repro.core import metrics
+
+
+@dataclasses.dataclass
+class PolicyResult:
+    policy: str
+    mean: float
+    lo: float
+    hi: float
+    jain: float
+    improvements: np.ndarray  # pooled per-app improvements
+
+
+def evaluate(
+    ctx: Context,
+    group: str,
+    policy: str,
+    budget: float,
+    *,
+    initial_caps: tuple[float, float] | None = None,
+    n_nodes: int = 100,
+    seeds: tuple[int, ...] = (0, 1, 2, 3, 4),
+) -> PolicyResult:
+    means, jains, pooled = [], [], []
+    for seed in seeds:
+        emu = build_cluster(
+            ctx, group, n_nodes=n_nodes, seed=seed, initial_caps=initial_caps
+        )
+        kw = {}
+        if policy == "ecoshift":
+            kw["policy_surfaces"] = ctx.predicted_for(emu)
+        res = emu.run_round(policy, budget=budget, **kw)
+        means.append(res.avg_improvement)
+        jains.append(res.jain_index)
+        pooled.extend(res.improvements.values())
+    mean, lo, hi = metrics.mean_ci98(np.array(means))
+    return PolicyResult(
+        policy=policy,
+        mean=mean,
+        lo=lo,
+        hi=hi,
+        jain=float(np.mean(jains)),
+        improvements=np.array(pooled),
+    )
+
+
+POLICIES = ("ecoshift", "dps", "mixed_adaptive")
+GROUPS = ("cpu", "gpu", "both", "insensitive", "mixed")

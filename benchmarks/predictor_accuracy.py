@@ -1,0 +1,39 @@
+"""§6.1 predictor accuracy: NCF mean accuracy per system (paper: 93-95%).
+
+Accuracy = 1 - |p_hat - p| / p over normalized performance relative to the
+initial-cap baseline, averaged over all grid cells of the held-out
+(online-onboarded) applications.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, get_context
+from repro.core import metrics
+
+
+def run(lines: list[str]) -> None:
+    for system_name in ("system1-a100", "system2-h100"):
+        ctx = get_context(system_name)
+        system = ctx.system
+        base = (system.init_cpu, system.init_gpu)
+        grid = system.grid
+        cc, gg = np.meshgrid(grid.cpu_levels, grid.gpu_levels, indexing="ij")
+        accs = []
+        for name in ctx.unseen:
+            true, pred = ctx.true_surfaces[name], ctx.predicted[name]
+            p_true = true.runtime(*base) / true.runtime(cc, gg)
+            p_pred = pred.runtime(*base) / pred.runtime(cc, gg)
+            accs.append(
+                np.mean(metrics.prediction_accuracy(p_true.ravel(), p_pred.ravel()))
+            )
+        mean, lo, hi = metrics.mean_ci98(np.array(accs))
+        lines.append(
+            csv_line(
+                f"predictor.accuracy.{system.name}",
+                0.0,
+                f"mean={mean*100:.2f}%;ci=[{lo*100:.2f},{hi*100:.2f}];"
+                f"n_unseen={len(accs)};paper_band=93-95%",
+            )
+        )

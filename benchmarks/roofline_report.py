@@ -1,0 +1,48 @@
+"""Roofline table from the multi-pod dry-run artifacts (§Roofline).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+reports, per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, peak memory, and MODEL_FLOPS / HLO_FLOPs usefulness ratio.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import csv_line
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def run(lines: list[str]) -> None:
+    if not DRYRUN_DIR.exists():
+        lines.append(csv_line("roofline.missing", 0.0, "run repro.launch.dryrun first"))
+        return
+    files = sorted(DRYRUN_DIR.glob("*.json"))
+    n_ok = n_skip = n_fail = 0
+    for path in files:
+        rec = json.loads(path.read_text())
+        tag = f"roofline.{rec['arch']}.{rec['shape']}.{rec.get('mesh','?')}"
+        if "skipped" in rec:
+            n_skip += 1
+            continue
+        if "error" in rec:
+            n_fail += 1
+            lines.append(csv_line(tag, 0.0, f"ERROR={rec['error'][:80]}"))
+            continue
+        n_ok += 1
+        r = rec["roofline"]
+        lines.append(
+            csv_line(
+                tag,
+                r["step_s"] * 1e6,
+                f"compute={r['compute_s']*1e3:.2f}ms;mem={r['memory_s']*1e3:.2f}ms;"
+                f"coll={r['collective_s']*1e3:.2f}ms;bneck={r['bottleneck']};"
+                f"peak={rec['peak_bytes_per_device']/1e9:.2f}GB;"
+                f"fits={rec['fits_16gb']};useful={rec['useful_flops_ratio']:.3f}",
+            )
+        )
+    lines.append(
+        csv_line("roofline.summary", 0.0, f"ok={n_ok};skipped={n_skip};failed={n_fail}")
+    )

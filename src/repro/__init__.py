@@ -1,0 +1,1 @@
+"""EcoShift-on-TPU reproduction framework."""

@@ -1,0 +1,1 @@
+"""EcoShift core: the paper's contribution (predictor + DP allocator)."""

@@ -1,0 +1,135 @@
+"""Power-performance surfaces for the 10 assigned architectures.
+
+This is the integration that makes the framework's jobs first-class
+EcoShift applications (DESIGN.md §2): the multi-pod dry-run's compiled-HLO
+analysis (per-device flops / HBM bytes / collective bytes) feeds the
+power-scaled roofline, producing T(host_cap, chip_cap) surfaces for every
+(arch x shape) cell.  EcoShift then allocates reclaimed pod power across
+training and serving jobs exactly as the paper allocates across CPU-GPU
+benchmarks.
+
+CPU(host)-vs-chip sensitivity emerges structurally:
+ * decode jobs: small per-step device work + fixed host overhead
+   (batching, sampling, detokenization) -> host-cap sensitive;
+ * train/prefill of big models: MXU/HBM-bound -> chip-cap sensitive;
+ * collective-bound jobs: ICI doesn't scale with either cap -> insensitive
+   (pure donors, like the paper's minisweep class).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core.surfaces import PowerSurface
+from repro.core.types import AppSpec, SystemSpec, SYSTEM_TPU_V5E
+from repro.roofline import model as roof
+
+#: host-side fixed overhead per step (s) at full host clock
+HOST_BASE_S = {"train": 0.010, "prefill": 0.010, "decode": 0.020}
+#: host pipeline bandwidth at full clock (bytes/s)
+HOST_BW = 2.0e9
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineSurface(PowerSurface):
+    """T(host_cap, chip_cap) from per-device roofline terms."""
+
+    flops_pd: float
+    bytes_pd: float
+    coll_pd: float
+    host_bytes_pd: float
+    host_base_s: float
+
+    def runtime(self, c, g) -> np.ndarray:
+        c = np.asarray(c, np.float64)
+        g = np.asarray(g, np.float64)
+
+        def one(ci, gi):
+            ff = roof.freq_fraction(float(gi))
+            hf = roof.host_fraction(float(ci))
+            compute = self.flops_pd / (roof.PEAK_BF16_FLOPS * ff)
+            memory = self.bytes_pd / (roof.HBM_BW * ff**0.5)
+            coll = self.coll_pd / roof.ICI_BW
+            host = self.host_base_s / hf + self.host_bytes_pd / (HOST_BW * hf)
+            return max(compute, memory, coll, host)
+
+        return np.vectorize(one)(c, g)
+
+    def power_draw(self, c, g):
+        """Natural draw scales with engine utilization at the cap."""
+        t = self.runtime(c, g)
+        ff = np.vectorize(lambda gi: roof.freq_fraction(float(gi)))(g)
+        compute = self.flops_pd / (roof.PEAK_BF16_FLOPS * ff)
+        memory = self.bytes_pd / (roof.HBM_BW * ff**0.5)
+        util_chip = np.maximum(compute, memory) / np.maximum(t, 1e-12)
+        hf = np.vectorize(lambda ci: roof.host_fraction(float(ci)))(c)
+        host_t = self.host_base_s / hf + self.host_bytes_pd / (HOST_BW * hf)
+        util_host = host_t / np.maximum(t, 1e-12)
+        draw_g = np.minimum(g, (0.35 + 0.65 * util_chip) * roof.CHIP_TDP_W)
+        draw_c = np.minimum(c, (0.30 + 0.70 * util_host) * roof.HOST_TDP_W)
+        return draw_c, draw_g
+
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _host_bytes(rec: dict) -> float:
+    """Per-device host pipeline bytes per step, from the cell's batch."""
+    kind = rec["kind"]
+    if kind == "train":
+        # tokens + targets + mask, amortized per device
+        shape = {"train_4k": (256, 4096)}.get(rec["shape"], (256, 4096))
+        return shape[0] * shape[1] * 12 / rec["n_devices"]
+    if kind == "prefill":
+        return 32768 * 32 * 4 / rec["n_devices"]
+    return 128 * 8 / rec["n_devices"]  # one token per sequence
+
+
+def build_arch_suite(
+    dryrun_dir: pathlib.Path | str | None = None,
+    *,
+    mesh: str = "16x16",
+) -> tuple[list[AppSpec], dict[str, PowerSurface]]:
+    """Load every successful dry-run cell as an EcoShift application.
+
+    Class labels are derived from the cell's bottleneck at nominal power:
+    host-bound -> 'C', compute/memory-bound -> 'G', near-tied -> 'B',
+    collective-bound -> 'N' (insensitive: ICI scales with neither cap).
+    """
+    d = pathlib.Path(dryrun_dir or DRYRUN_DIR)
+    apps: list[AppSpec] = []
+    surfaces: dict[str, PowerSurface] = {}
+    for path in sorted(d.glob("*.json")):
+        rec = json.loads(path.read_text())
+        if "error" in rec or "skipped" in rec or rec.get("mesh") != mesh:
+            continue
+        if rec.get("layout", "fsdp_tp") != "fsdp_tp":
+            continue  # hillclimb-variant artifacts duplicate baseline cells
+        surf = RooflineSurface(
+            flops_pd=rec["hlo_dot_flops_per_device"],
+            bytes_pd=rec["hlo_traffic_bytes_per_device"],
+            coll_pd=rec["hlo_collective_bytes_per_device"],
+            host_bytes_pd=_host_bytes(rec),
+            host_base_s=HOST_BASE_S[rec["kind"]],
+        )
+        name = f"{rec['arch']}:{rec['shape']}"
+        # classify by sensitivity of the actual surface on the TPU grid
+        grid = SYSTEM_TPU_V5E.grid
+        base = (grid.cpu_min + 50, grid.gpu_min + 30)
+        d_cpu = float(surf.improvement(base, grid.cpu_max, base[1]))
+        d_gpu = float(surf.improvement(base, base[0], grid.gpu_max))
+        if d_cpu > 0.05 and d_gpu > 0.05:
+            sclass = "B"
+        elif d_cpu > 0.05:
+            sclass = "C"
+        elif d_gpu > 0.05:
+            sclass = "G"
+        else:
+            sclass = "N"
+        apps.append(AppSpec(name=name, sclass=sclass, surface_id=name))
+        surfaces[name] = surf
+    return apps, surfaces

@@ -1,0 +1,277 @@
+"""Multiple-choice-knapsack solvers for reclaimed-power distribution (§3.2.2).
+
+Three equivalent solvers (equivalence-tested against each other and against
+exhaustive brute force):
+
+ * ``solve_sparse``   — faithful Algorithm 1: dict-keyed sparse DP over the
+                        distinct per-app extra-power levels, O(B * Σ K_i).
+ * ``solve_dense``    — vectorized numpy DP over dense F_i(b) curves; each
+                        stage is a (max,+)-convolution restricted to the K_i
+                        option costs, O(B * Σ K_i) with numpy inner loops.
+ * ``solve_dense_jax``— the same dense DP as a jit-compiled ``lax.scan``
+                        (one stage per receiver), used by the Pallas kernel
+                        path (repro.kernels.mckp_dp) and by the scaling
+                        benchmarks.
+
+All solvers return allocations in *watts spent per receiver* plus the cap
+pair realizing it, and they all respect the monotone-upgrade model: a
+receiver may always take the zero-cost baseline option.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.curves import OptionTable, dense_curves_matrix
+
+
+@dataclasses.dataclass
+class MCKPSolution:
+    """Solution of one distribution round."""
+
+    total_value: float  # Σ_i I_i  (N * average improvement)
+    spent: float  # watts used out of the budget
+    #: per-receiver picks: name -> (cost_watts, value, (c, g))
+    picks: dict[str, tuple[float, float, tuple[float, float]]]
+
+    def average_improvement(self) -> float:
+        n = len(self.picks)
+        return self.total_value / n if n else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Faithful Algorithm 1 (sparse dict DP)
+# ---------------------------------------------------------------------------
+
+
+def solve_sparse(options: Sequence[OptionTable], budget: float) -> MCKPSolution:
+    """Paper Algorithm 1 with parent-pointer backtracking.
+
+    States are keyed by *used power* (floats straight from the option
+    tables — no budget discretization), exactly like the pseudo-code's
+    ``DP`` dict.  Costs within 1e-6 W are merged to keep the state count
+    equal to the number of distinct achievable sums.
+    """
+
+    def qkey(u: float) -> float:
+        return round(u, 6)
+
+    # DP: used -> (score, parent_used, option_index)
+    dp: dict[float, tuple[float, float, int]] = {0.0: (0.0, -1.0, -1)}
+    stages: list[dict[float, tuple[float, float, int]]] = []
+    for opt in options:
+        ndp: dict[float, tuple[float, float, int]] = {}
+        for u, (score, _, _) in dp.items():
+            for j in range(opt.k):
+                e = float(opt.costs[j])
+                if u + e > budget + 1e-9:
+                    continue
+                key = qkey(u + e)
+                s = score + float(opt.values[j])
+                cur = ndp.get(key)
+                if cur is None or s > cur[0]:
+                    ndp[key] = (s, u, j)
+        stages.append(ndp)
+        dp = ndp
+
+    # best end state, then walk parents backwards
+    best_u = max(dp, key=lambda u: dp[u][0])
+    total = dp[best_u][0]
+    picks: dict[str, tuple[float, float, tuple[float, float]]] = {}
+    u = best_u
+    for i in range(len(options) - 1, -1, -1):
+        score, parent, j = stages[i][qkey(u)]
+        opt = options[i]
+        picks[opt.name] = (
+            float(opt.costs[j]),
+            float(opt.values[j]),
+            (float(opt.caps[j, 0]), float(opt.caps[j, 1])),
+        )
+        u = parent
+    spent = sum(c for c, _, _ in picks.values())
+    return MCKPSolution(total_value=total, spent=spent, picks=picks)
+
+
+# ---------------------------------------------------------------------------
+# Dense-grid DP (numpy)
+# ---------------------------------------------------------------------------
+
+
+def _stage_maxplus(
+    dp: np.ndarray, costs_u: np.ndarray, values: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """One (max,+) stage restricted to option costs.
+
+    dp' [b] = max_j dp[b - cost_j] + value_j   (invalid b-cost_j masked)
+    Returns (dp', argmax_j).
+    """
+    nb = dp.shape[0]
+    k = costs_u.shape[0]
+    # cand[j, b] = dp[b - c_j] + v_j
+    idx = np.arange(nb)[None, :] - costs_u[:, None]  # [k, nb]
+    valid = idx >= 0
+    cand = np.where(valid, dp[np.clip(idx, 0, nb - 1)], -np.inf) + values[:, None]
+    arg = np.argmax(cand, axis=0)  # [nb]
+    out = cand[arg, np.arange(nb)]
+    return out, arg.astype(np.int32)
+
+
+def solve_dense(
+    options: Sequence[OptionTable], budget: float, unit: float = 1.0
+) -> MCKPSolution:
+    """Vectorized dense DP at ``unit``-watt budget granularity."""
+    nb = int(np.floor(budget / unit + 1e-9)) + 1
+    dp = np.zeros(nb, dtype=np.float64)
+    args: list[np.ndarray] = []
+    costs_per_app: list[np.ndarray] = []
+    for opt in options:
+        cu = np.ceil(opt.costs / unit - 1e-9).astype(np.int64)
+        keep = cu < nb
+        cu, vals = cu[keep], opt.values[keep]
+        dp, arg = _stage_maxplus(dp, cu, vals)
+        args.append(arg)
+        costs_per_app.append(cu)
+
+    b = int(np.argmax(dp))
+    total = float(dp[b])
+    picks: dict[str, tuple[float, float, tuple[float, float]]] = {}
+    for i in range(len(options) - 1, -1, -1):
+        opt = options[i]
+        keep = np.ceil(opt.costs / unit - 1e-9).astype(np.int64) < nb
+        kept_idx = np.nonzero(keep)[0]
+        j_local = int(args[i][b])
+        j = int(kept_idx[j_local])
+        picks[opt.name] = (
+            float(opt.costs[j]),
+            float(opt.values[j]),
+            (float(opt.caps[j, 0]), float(opt.caps[j, 1])),
+        )
+        b -= int(costs_per_app[i][j_local])
+    spent = sum(c for c, _, _ in picks.values())
+    return MCKPSolution(total_value=total, spent=spent, picks=picks)
+
+
+# ---------------------------------------------------------------------------
+# Dense-grid DP (JAX, scan over receivers)
+# ---------------------------------------------------------------------------
+
+
+def _jax_dp(f_mat, backend: str = "jax"):
+    """jit-compiled forward DP over dense curves.
+
+    f_mat: [N, NB] monotone curves (F_i). Returns (dp_final [NB],
+    argk [N, NB]) where argk[i, b] is the spend chosen for receiver i when b
+    units are available to receivers 0..i.
+
+    The inner maximization DP'[b] = max_k DP[b-k] + F[k] is a full
+    (max,+)-convolution; ``backend='pallas'`` routes it through the Pallas
+    TPU kernel (repro.kernels.mckp_dp), 'jax' uses a pure-jnp masked gather.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+
+        conv = kops.maxplus_conv
+    else:
+        from repro.kernels import ref as kref
+
+        conv = kref.maxplus_conv
+
+    def stage(dp, f_row):
+        out, arg = conv(dp, f_row)
+        return out, arg
+
+    @jax.jit
+    def run(f_mat):
+        dp0 = jnp.zeros(f_mat.shape[1], dtype=f_mat.dtype)
+        dp_final, args = jax.lax.scan(stage, dp0, f_mat)
+        return dp_final, args
+
+    return run(f_mat)
+
+
+def solve_dense_jax(
+    options: Sequence[OptionTable],
+    budget: float,
+    unit: float = 1.0,
+    backend: str = "jax",
+) -> MCKPSolution:
+    """Dense DP via jit'd lax.scan (+ optional Pallas (max,+) kernel)."""
+    import numpy as np
+
+    f_mat, choices = dense_curves_matrix(list(options), budget, unit)
+    dp_final, args = _jax_dp(f_mat, backend=backend)
+    dp_final = np.asarray(dp_final)
+    args = np.asarray(args)
+
+    b = int(np.argmax(dp_final))
+    total = float(dp_final[b])
+    picks: dict[str, tuple[float, float, tuple[float, float]]] = {}
+    for i in range(len(options) - 1, -1, -1):
+        opt = options[i]
+        k = int(args[i, b])  # units granted to receiver i
+        j = int(choices[i][k])  # option index realizing F_i(k)
+        picks[opt.name] = (
+            float(opt.costs[j]),
+            float(opt.values[j]),
+            (float(opt.caps[j, 0]), float(opt.caps[j, 1])),
+        )
+        b -= k
+    spent = sum(c for c, _, _ in picks.values())
+    return MCKPSolution(total_value=total, spent=spent, picks=picks)
+
+
+# ---------------------------------------------------------------------------
+# Exhaustive brute force (Oracle ground truth for small cases)
+# ---------------------------------------------------------------------------
+
+
+def brute_force(options: Sequence[OptionTable], budget: float) -> MCKPSolution:
+    """Exhaustive DFS over the cross product of option sets.
+
+    Exponential — used for the §6.3 Oracle on <= ~10 apps with pruned
+    option sets, and to certify the DP solvers in tests.  A simple
+    optimistic bound (sum of per-app max remaining values) prunes branches.
+    """
+    n = len(options)
+    # optimistic suffix bound
+    suffix_max = np.zeros(n + 1)
+    for i in range(n - 1, -1, -1):
+        suffix_max[i] = suffix_max[i + 1] + float(np.max(options[i].values))
+
+    best = {"total": -1.0, "choice": [0] * n}
+    choice = [0] * n
+
+    def dfs(i: int, used: float, value: float) -> None:
+        if value + suffix_max[i] <= best["total"]:
+            return
+        if i == n:
+            if value > best["total"]:
+                best["total"] = value
+                best["choice"] = list(choice)
+            return
+        opt = options[i]
+        for j in range(opt.k - 1, -1, -1):
+            e = float(opt.costs[j])
+            if used + e > budget + 1e-9:
+                continue
+            choice[i] = j
+            dfs(i + 1, used + e, value + float(opt.values[j]))
+        choice[i] = 0
+
+    dfs(0, 0.0, 0.0)
+    picks: dict[str, tuple[float, float, tuple[float, float]]] = {}
+    for i, opt in enumerate(options):
+        j = best["choice"][i]
+        picks[opt.name] = (
+            float(opt.costs[j]),
+            float(opt.values[j]),
+            (float(opt.caps[j, 0]), float(opt.caps[j, 1])),
+        )
+    spent = sum(c for c, _, _ in picks.values())
+    return MCKPSolution(total_value=best["total"], spent=spent, picks=picks)

@@ -1,0 +1,264 @@
+"""Neural-collaborative-filtering performance predictor (paper §3.1, [39]).
+
+Performance prediction as matrix completion: rows = applications, columns =
+(cpu_cap, gpu_cap) grid cells.  A NeuMF-style model (GMF branch: elementwise
+product of embeddings; MLP branch: concatenated embeddings + numeric cap
+features) predicts the *log runtime ratio* of an (app, config) cell relative
+to the max-cap reference config.  Predicting ratios is exactly what the
+allocator needs: improvements I(c,g) are scale-free.
+
+Two phases, matching the paper's workflow (Fig. 3):
+
+ * ``fit``           — offline training on historical apps (dense or sparse
+                       observations), Adam + MSE.
+ * ``infer_app``     — online phase for an *unseen* app: freeze config
+                       embeddings + MLP, fit only the new app's two
+                       embedding vectors on K profiled samples.
+ * ``predict_table`` — densify the predicted surface over the full grid
+                       (handed to the allocator as a TabulatedSurface).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.surfaces import PowerSurface, TabulatedSurface
+from repro.core.types import SystemSpec
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class NCFConfig:
+    embed_dim: int = 16
+    mlp_hidden: tuple[int, ...] = (64, 32)
+    lr: float = 3e-3
+    train_steps: int = 3000
+    online_lr: float = 5e-2
+    online_steps: int = 400
+    batch_size: int = 512
+    seed: int = 0
+
+
+def _config_features(system: SystemSpec) -> np.ndarray:
+    """Per-grid-cell numeric features in [0,1]: (c_norm, g_norm)."""
+    grid = system.grid
+    pairs = grid.pairs()
+    c = (pairs[:, 0] - grid.cpu_min) / max(grid.cpu_max - grid.cpu_min, 1e-9)
+    g = (pairs[:, 1] - grid.gpu_min) / max(grid.gpu_max - grid.gpu_min, 1e-9)
+    return np.stack([c, g], axis=-1).astype(np.float32)
+
+
+def _init_params(rng: jax.Array, n_apps: int, n_cfgs: int, cfg: NCFConfig):
+    d = cfg.embed_dim
+    keys = jax.random.split(rng, 8)
+    scale = 0.1
+    feat_dim = 2
+    mlp_in = 2 * d + feat_dim
+    layers = []
+    dims = (mlp_in,) + cfg.mlp_hidden
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        k = jax.random.fold_in(keys[4], i)
+        layers.append(
+            {
+                "w": jax.random.normal(k, (din, dout)) * jnp.sqrt(2.0 / din),
+                "b": jnp.zeros((dout,)),
+            }
+        )
+    head_in = d + cfg.mlp_hidden[-1]
+    return {
+        "app_gmf": scale * jax.random.normal(keys[0], (n_apps, d)),
+        "app_mlp": scale * jax.random.normal(keys[1], (n_apps, d)),
+        "cfg_gmf": scale * jax.random.normal(keys[2], (n_cfgs, d)),
+        "cfg_mlp": scale * jax.random.normal(keys[3], (n_cfgs, d)),
+        "mlp": layers,
+        "head_w": jax.random.normal(keys[5], (head_in, 1)) * jnp.sqrt(1.0 / head_in),
+        "head_b": jnp.zeros((1,)),
+    }
+
+
+def _forward(params, app_ids, cfg_ids, cfg_feats):
+    ag = params["app_gmf"][app_ids]
+    am = params["app_mlp"][app_ids]
+    cg = params["cfg_gmf"][cfg_ids]
+    cm = params["cfg_mlp"][cfg_ids]
+    gmf = ag * cg
+    h = jnp.concatenate([am, cm, cfg_feats], axis=-1)
+    for layer in params["mlp"]:
+        h = jax.nn.silu(h @ layer["w"] + layer["b"])
+    z = jnp.concatenate([gmf, h], axis=-1)
+    return (z @ params["head_w"] + params["head_b"])[..., 0]
+
+
+@dataclasses.dataclass
+class NCFPredictor:
+    """Trained predictor bound to one system's cap grid."""
+
+    system: SystemSpec
+    cfg: NCFConfig
+    params: dict
+    app_index: dict[str, int]
+    cfg_feats: np.ndarray  # [C, 2]
+
+    # -- construction -------------------------------------------------------
+
+    @staticmethod
+    def fit(
+        system: SystemSpec,
+        observations: Mapping[str, Mapping[tuple[float, float], float]],
+        cfg: NCFConfig = NCFConfig(),
+    ) -> "NCFPredictor":
+        """Train on historical apps.
+
+        ``observations[app][(c, g)] = measured runtime`` — any subset of the
+        grid per app; targets are log-ratios vs that app's max-cap cell
+        (which must be observed or is approximated by the min runtime).
+        """
+        grid = system.grid
+        pairs = grid.pairs()
+        cell_of = {(round(c, 3), round(g, 3)): i for i, (c, g) in enumerate(pairs)}
+        app_index = {name: i for i, name in enumerate(sorted(observations))}
+        rows, cols, ys = [], [], []
+        for name, obs in observations.items():
+            ref = min(obs.values())  # fastest observed ~ max-cap runtime
+            for (c, g), t in obs.items():
+                key = (round(c, 3), round(g, 3))
+                if key not in cell_of:
+                    raise KeyError(f"({c},{g}) not on the {system.name} grid")
+                rows.append(app_index[name])
+                cols.append(cell_of[key])
+                ys.append(np.log(t / ref))
+        rows = jnp.asarray(np.array(rows, np.int32))
+        cols = jnp.asarray(np.array(cols, np.int32))
+        ys = jnp.asarray(np.array(ys, np.float32))
+        feats = jnp.asarray(_config_features(system))
+
+        rng = jax.random.PRNGKey(cfg.seed)
+        params = _init_params(rng, len(app_index), len(pairs), cfg)
+        optimizer = opt.adamw(cfg.lr)
+        state = optimizer.init(params)
+
+        @jax.jit
+        def step(params, state, key):
+            idx = jax.random.randint(key, (cfg.batch_size,), 0, rows.shape[0])
+
+            def loss_fn(p):
+                pred = _forward(p, rows[idx], cols[idx], feats[cols[idx]])
+                return jnp.mean((pred - ys[idx]) ** 2)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, state = optimizer.update(grads, state, params)
+            return params, state, loss
+
+        key = jax.random.PRNGKey(cfg.seed + 1)
+        for i in range(cfg.train_steps):
+            key, sub = jax.random.split(key)
+            params, state, loss = step(params, state, sub)
+        return NCFPredictor(
+            system=system,
+            cfg=cfg,
+            params=jax.device_get(params),
+            app_index=app_index,
+            cfg_feats=np.asarray(feats),
+        )
+
+    # -- online phase for unseen apps ---------------------------------------
+
+    def infer_app(
+        self,
+        name: str,
+        samples: Mapping[tuple[float, float], float],
+    ) -> "NCFPredictor":
+        """Fit embeddings for an unseen app from K online-profiled samples.
+
+        Freezes all shared parameters (config embeddings, MLP, head) and
+        optimizes only the new app's GMF/MLP embedding vectors.  Returns a
+        new predictor whose app table includes ``name``.
+        """
+        grid = self.system.grid
+        pairs = grid.pairs()
+        cell_of = {(round(c, 3), round(g, 3)): i for i, (c, g) in enumerate(pairs)}
+        ref = min(samples.values())
+        cols = jnp.asarray(
+            np.array([cell_of[(round(c, 3), round(g, 3))] for c, g in samples], np.int32)
+        )
+        ys = jnp.asarray(
+            np.array([np.log(t / ref) for t in samples.values()], np.float32)
+        )
+        feats = jnp.asarray(self.cfg_feats)
+
+        frozen = jax.tree.map(
+            jnp.asarray, {k: v for k, v in self.params.items() if "app" not in k}
+        )
+        d = self.cfg.embed_dim
+        import zlib
+
+        rng = jax.random.PRNGKey(zlib.crc32(name.encode()) % (2**31))
+        emb = {
+            "gmf": 0.1 * jax.random.normal(rng, (1, d)),
+            "mlp": 0.1 * jax.random.normal(jax.random.fold_in(rng, 1), (1, d)),
+        }
+        optimizer = opt.adamw(self.cfg.online_lr)
+        state = optimizer.init(emb)
+
+        @jax.jit
+        def step(emb, state):
+            def loss_fn(e):
+                p = dict(frozen)
+                p["app_gmf"], p["app_mlp"] = e["gmf"], e["mlp"]
+                zeros = jnp.zeros_like(cols)
+                pred = _forward(p, zeros, cols, feats[cols])
+                return jnp.mean((pred - ys) ** 2)
+
+            loss, grads = jax.value_and_grad(loss_fn)(emb)
+            emb, state = optimizer.update(grads, state, emb)
+            return emb, state, loss
+
+        for _ in range(self.cfg.online_steps):
+            emb, state, _ = step(emb, state)
+
+        new_params = dict(self.params)
+        new_params["app_gmf"] = np.concatenate(
+            [self.params["app_gmf"], np.asarray(emb["gmf"])], axis=0
+        )
+        new_params["app_mlp"] = np.concatenate(
+            [self.params["app_mlp"], np.asarray(emb["mlp"])], axis=0
+        )
+        new_index = dict(self.app_index)
+        new_index[name] = len(self.app_index)
+        return NCFPredictor(
+            system=self.system,
+            cfg=self.cfg,
+            params=new_params,
+            app_index=new_index,
+            cfg_feats=self.cfg_feats,
+        )
+
+    # -- prediction ----------------------------------------------------------
+
+    def predict_log_ratios(self, name: str) -> np.ndarray:
+        """Predicted log runtime ratio for every grid cell, shape [C]."""
+        if name not in self.app_index:
+            raise KeyError(f"{name} unknown; call infer_app first")
+        aid = self.app_index[name]
+        params = jax.tree.map(jnp.asarray, self.params)
+        n = self.cfg_feats.shape[0]
+        app_ids = jnp.full((n,), aid, jnp.int32)
+        cfg_ids = jnp.arange(n, dtype=jnp.int32)
+        out = _forward(params, app_ids, cfg_ids, jnp.asarray(self.cfg_feats))
+        return np.asarray(out)
+
+    def predict_surface(self, name: str) -> PowerSurface:
+        """Predicted runtime surface (arbitrary scale) over the full grid."""
+        grid = self.system.grid
+        ratios = np.exp(self.predict_log_ratios(name))
+        n_c, n_g = len(grid.cpu_levels), len(grid.gpu_levels)
+        return TabulatedSurface(
+            cpu_levels=grid.cpu_levels,
+            gpu_levels=grid.gpu_levels,
+            table=ratios.reshape(n_c, n_g),
+        )

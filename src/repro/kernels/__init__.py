@@ -1,0 +1,1 @@
+"""Pallas TPU kernels: <name>.py + ops.py + ref.py per kernel."""

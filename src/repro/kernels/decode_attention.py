@@ -1,0 +1,147 @@
+"""Flash-decode Pallas kernel: one-token GQA attention over a KV cache.
+
+TPU mapping:
+ * grid = (B, Hkv, n_kv_blocks): one program per (sequence, KV head)
+   accumulating online-softmax state across KV blocks.
+ * All ``group = Hq/Hkv`` query heads of a KV head ride TOGETHER in the
+   sublane dimension — q block shape (group, D) — so GQA needs no repeated
+   KV reads and the MXU sees a [group, D] x [D, block_k] matmul instead of
+   a starved [1, D] row per program.
+ * Per-sequence validity (``lengths``) masks from an absolute iota; blocks
+   entirely past the length short-circuit.
+
+Validated in interpret mode vs ``ref.decode_attention_reference``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref,  # [B] s32 (full, VMEM)
+    q_ref,  # [1, 1, group, D]
+    k_ref,  # [1, block_k, 1, D]
+    v_ref,  # [1, block_k, 1, D]
+    o_ref,  # [1, 1, group, D]
+    m_scr,  # [group] f32
+    l_scr,  # [group] f32
+    acc_scr,  # [group, D] f32
+    *,
+    block_k: int,
+    scale: float,
+    softcap: float | None,
+    window: int | None,
+    n_kv_blocks: int,
+):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[bi]  # valid KV entries for this sequence
+    k_start = ki * block_k
+    reachable = k_start < length
+    if window is not None:
+        reachable = jnp.logical_and(reachable, k_start + block_k > length - window)
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # [group, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # [block_k, D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [group, block_k]
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, 1
+        )
+        mask = k_pos < length
+        if window is not None:
+            mask &= length - k_pos <= window
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+        p = jnp.where(mask, jnp.exp(logits - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = corr * l_scr[...] + jnp.sum(p, axis=1)
+        acc_scr[...] = corr[:, None] * acc_scr[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("softcap", "window", "block_k", "interpret")
+)
+def decode_attention(
+    q: jax.Array,  # [B, Hq, D]
+    k_cache: jax.Array,  # [B, S, Hkv, D]
+    v_cache: jax.Array,
+    lengths: jax.Array,  # [B] s32
+    *,
+    softcap: float | None = None,
+    window: int | None = None,
+    block_k: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    b, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    block_k = min(block_k, s)
+    n_k = pl.cdiv(s, block_k)
+    if s % block_k:
+        pad = n_k * block_k - s
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    # [B, Hq, D] -> [B, Hkv, group, D] so a KV head's q-group is contiguous
+    qg = q.reshape(b, hkv, group, d)
+    kernel = functools.partial(
+        _decode_kernel,
+        block_k=block_k,
+        scale=scale,
+        softcap=softcap,
+        window=window,
+        n_kv_blocks=n_k,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, n_k),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # lengths, whole array
+            pl.BlockSpec((1, 1, group, d), lambda b_, h, ki: (b_, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, h, ki: (b_, ki, h, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, h, ki: (b_, ki, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d), lambda b_, h, ki: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(b, hq, d)

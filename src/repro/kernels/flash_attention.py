@@ -1,0 +1,180 @@
+"""Fused GQA flash-attention Pallas kernel (train / prefill path).
+
+TPU mapping:
+ * grid = (B, Hq, n_q_blocks, n_kv_blocks); the kv axis is innermost, so a
+   (batch, head, q-block) program accumulates online-softmax state across
+   its kv blocks in VMEM scratch (running max m, denominator l, accum o).
+ * GQA without materializing repeated KV: the BlockSpec index_map sends
+   query head ``h`` to KV head ``h // group`` — zero-copy head broadcast.
+ * Block shapes are (block_q x head_dim) and (block_k x head_dim) VMEM
+   tiles; head_dim rides the 128-lane minor dimension, block_q the sublane
+   dimension (multiples of 8).  Logits tiles are f32 in VREGs/VMEM.
+ * Causal + sliding-window masking is applied from absolute iota positions;
+   fully-masked kv blocks still traverse the grid (Pallas grids are dense)
+   but short-circuit via @pl.when on a block-level bound check.
+
+Validated in interpret mode against ``ref.mha_reference`` over
+shape/dtype/window sweeps (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # [1, block_q, 1, D]
+    k_ref,  # [1, block_k, 1, D]
+    v_ref,  # [1, block_k, 1, D]
+    o_ref,  # [1, block_q, 1, D]
+    m_scr,  # [block_q] f32 scratch
+    l_scr,  # [block_q] f32
+    acc_scr,  # [block_q, D] f32
+    *,
+    block_q: int,
+    block_k: int,
+    seq_kv: int,
+    causal: bool,
+    window: int | None,
+    softcap: float | None,
+    scale: float,
+    n_kv_blocks: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # block-level reachability: skip kv blocks entirely above the causal
+    # diagonal or entirely left of the sliding window
+    reachable = jnp.asarray(True)
+    if causal:
+        reachable = k_start <= q_start + block_q - 1
+    if window is not None:
+        reachable = jnp.logical_and(
+            reachable, k_start + block_k - 1 >= q_start - window + 1
+        )
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale  # [bq, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # [bk, D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [bq, bk]
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < seq_kv
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= q_pos - k_pos < window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+        p = jnp.exp(logits - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = corr * l_scr[...] + jnp.sum(p, axis=1)
+        acc_scr[...] = corr[:, None] * acc_scr[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "block_q", "block_k", "interpret"
+    ),
+)
+def flash_attention(
+    q: jax.Array,  # [B, Sq, Hq, D]
+    k: jax.Array,  # [B, Skv, Hkv, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    n_q = pl.cdiv(sq, block_q)
+    n_k = pl.cdiv(skv, block_k)
+    # pad sequence dims up to block multiples (mask handles the tail)
+    if sq % block_q:
+        q = jnp.pad(q, ((0, 0), (0, n_q * block_q - sq), (0, 0), (0, 0)))
+    if skv % block_k:
+        pad = n_k * block_k - skv
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel,
+        block_q=block_q,
+        block_k=block_k,
+        seq_kv=skv,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        scale=scale,
+        n_kv_blocks=n_k,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d), lambda b_, h, qi, ki: (b_, qi, h, 0)),
+            pl.BlockSpec(
+                (1, block_k, 1, d),
+                lambda b_, h, qi, ki, g=group: (b_, ki, h // g, 0),
+            ),
+            pl.BlockSpec(
+                (1, block_k, 1, d),
+                lambda b_, h, qi, ki, g=group: (b_, ki, h // g, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_q, 1, d), lambda b_, h, qi, ki: (b_, qi, h, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, n_q * block_q, hq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

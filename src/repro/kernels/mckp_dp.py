@@ -1,0 +1,107 @@
+"""Pallas TPU kernel for the EcoShift cluster-DP stage (paper §3.2.2).
+
+One DP stage is a tropical ((max,+)-semiring) convolution over the budget
+grid:
+
+    out[b] = max_{0<=k<=b} dp[b-k] + f[k],        b, k in [0, NB)
+
+with NB = budget/granularity + 1 (the paper uses 1 W granularity, so NB can
+reach ~1.4e4 for the Fig. 8 sweeps and far more for pod-scale budgets; the
+full cluster solve is ``N_receivers`` such stages — promoted here from the
+paper's host-Python loop to an accelerator kernel, see DESIGN.md §8.1).
+
+TPU mapping
+-----------
+(max,+) cannot use the MXU (no tropical matmul), so this is a VPU kernel:
+
+ * ``dp`` is small (NB fp32 ≈ 56 KB at NB=14001): we keep the *whole*
+   left-padded operand resident in VMEM (no HBM re-streaming per block).
+ * The output is tiled into ``block_b``-wide vector blocks (multiple of the
+   128-lane VPU width); the grid iterates over output blocks.
+ * For each shift ``k`` the candidate vector ``dp[b0-k : b0-k+block_b]`` is
+   a *contiguous* VMEM slice (the Toeplitz structure turns the gather into a
+   sliding window), so the inner loop is: contiguous load -> broadcast add
+   f[k] -> elementwise max.  ``block_b`` elements of useful work per loop
+   iteration, no scatter/gather.
+ * Argmax is tracked alongside (smallest maximizing k, matching the numpy
+   reference tie-break).
+
+Left-padding ``dp`` with NB entries of -inf makes every slice in-bounds:
+index ``NB + b0 - k`` is >= 1 for k <= NB-1.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxplus_kernel(dp_pad_ref, f_ref, out_ref, arg_ref, *, block_b: int, nb: int):
+    i = pl.program_id(0)
+    b0 = i * block_b
+
+    def body(k, carry):
+        acc, arg = carry
+        # contiguous sliding-window slice: dp[b - k] for b in [b0, b0+block_b)
+        col = dp_pad_ref[pl.dslice(nb + b0 - k, block_b)]
+        fk = f_ref[pl.dslice(k, 1)]  # [1], broadcasts
+        cand = col + fk
+        better = cand > acc
+        acc = jnp.where(better, cand, acc)
+        arg = jnp.where(better, k, arg)
+        return acc, arg
+
+    acc0 = jnp.full((block_b,), -jnp.inf, dtype=out_ref.dtype)
+    arg0 = jnp.zeros((block_b,), dtype=jnp.int32)
+    acc, arg = jax.lax.fori_loop(0, nb, body, (acc0, arg0))
+    out_ref[...] = acc
+    arg_ref[...] = arg
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def maxplus_conv_pallas(
+    dp: jax.Array,
+    f: jax.Array,
+    *,
+    block_b: int = 256,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """out[b] = max_{k<=b} dp[b-k] + f[k]; also returns argmax k (int32).
+
+    dp, f: [NB] float32.  ``interpret=True`` runs the kernel body on CPU
+    (the validation mode in this container); on a real TPU pass False.
+    """
+    if dp.ndim != 1 or dp.shape != f.shape:
+        raise ValueError(f"dp/f must be equal-length 1D, got {dp.shape} {f.shape}")
+    nb = dp.shape[0]
+    dp = dp.astype(jnp.float32)
+    f = f.astype(jnp.float32)
+    nblocks = pl.cdiv(nb, block_b)
+    nb_pad = nblocks * block_b
+    neg = jnp.asarray(-jnp.inf, jnp.float32)
+    # left pad NB (validity masking), right pad to the block multiple
+    dp_pad = jnp.concatenate(
+        [jnp.full((nb,), neg), dp, jnp.full((nb_pad - nb,), neg)]
+    )
+
+    out, arg = pl.pallas_call(
+        functools.partial(_maxplus_kernel, block_b=block_b, nb=nb),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec(dp_pad.shape, lambda i: (0,)),  # whole padded dp in VMEM
+            pl.BlockSpec(f.shape, lambda i: (0,)),  # whole f in VMEM
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((nb_pad,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(dp_pad, f)
+    return out[:nb], arg[:nb]

@@ -1,0 +1,49 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Every op auto-selects ``interpret=True`` off-TPU (this container is
+CPU-only; interpret mode executes the kernel bodies with JAX semantics) and
+compiles natively on TPU.  Reference semantics live in ``repro.kernels.ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import mckp_dp as _mckp_dp
+
+
+@functools.cache
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def maxplus_conv(dp: jax.Array, f: jax.Array, *, block_b: int = 256):
+    """(max,+)-convolution DP stage.  Returns (out, argmax_k)."""
+    return _mckp_dp.maxplus_conv_pallas(
+        dp, f, block_b=block_b, interpret=not _on_tpu()
+    )
+
+
+def flash_attention(q, k, v, **kw):
+    """Fused GQA attention (train/prefill).  See flash_attention.py."""
+    from repro.kernels import flash_attention as _fa
+
+    return _fa.flash_attention(q, k, v, interpret=not _on_tpu(), **kw)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, **kw):
+    """Flash-decode GQA attention over a KV cache."""
+    from repro.kernels import decode_attention as _da
+
+    return _da.decode_attention(
+        q, k_cache, v_cache, lengths, interpret=not _on_tpu(), **kw
+    )
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6):
+    """Fused RMSNorm."""
+    from repro.kernels import rmsnorm as _rn
+
+    return _rn.rmsnorm(x, scale, eps=eps, interpret=not _on_tpu())

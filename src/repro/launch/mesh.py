@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (device count is locked on first jax init, and the
+dry-run needs to set XLA_FLAGS before that happens).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod; the multi-pod mesh adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def fsdp_axes(multi_pod: bool):
+    """Mesh axes that batch/FSDP dimensions shard over."""
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def make_smoke_mesh(n_data: int = 2, n_model: int = 2):
+    """Tiny mesh for CPU sharding tests (requires >= n_data*n_model devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,367 @@
+"""Sharding rules: parameter PartitionSpecs, activation rules, input specs.
+
+Layout summary (DESIGN.md §5):
+ * FSDP over the batch axes (``data``, plus ``pod`` multi-pod): every large
+   parameter shards its d_model-like dimension there; XLA's SPMD partitioner
+   all-gathers each scanned layer's slice inside the loop (gather-in-scan).
+ * TP over ``model``: attention q-heads, MLP/MoE d_ff, vocab (embedding +
+   head).  KV-head projections replicate over ``model`` when n_kv_heads
+   doesn't divide the axis (GQA KV is small).
+ * Decode caches: KV sequence shards over ``model`` when kv-heads can't
+   (kv < 16), else heads shard; long-context (batch=1) shards the sequence
+   over the batch axes as well.
+ * SSM/xLSTM block parameters are FSDP-only (small models; attention/vocab
+   still TP) — their states shard heads over ``model`` where divisible.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import fsdp_axes as _mesh_fsdp_axes
+from repro.models.config import ArchConfig
+
+def fsdp_axes(multi_pod: bool, layout: str = "fsdp_tp"):
+    """Batch/FSDP mesh axes.
+     * 'pure_dp' folds the model axis into data parallelism (small archs
+       that over-shard at TP=16);
+     * 'ep_pod' reserves the pod axis for expert parallelism (FSDP/batch
+       stay on 'data' only)."""
+    if layout == "ep_pod":
+        return ("data",)
+    base = _mesh_fsdp_axes(multi_pod)
+    return base + ("model",) if layout == "pure_dp" else base
+
+
+def tp_axis(layout: str):
+    return None if layout == "pure_dp" else "model"
+
+
+def ep_axis(layout: str):
+    """Mesh axis holding the expert dimension (ep_pod layout only)."""
+    return "pod" if layout == "ep_pod" else None
+
+
+#: the four assigned shape cells
+SHAPES: dict[str, dict[str, Any]] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def _divisible(n: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    axes = (axes,) if isinstance(axes, str) else axes
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return n % size == 0
+
+
+def _maybe(n: int, mesh: Mesh, axes):
+    """Use ``axes`` for a dim of size n only if it divides evenly."""
+    return axes if _divisible(n, mesh, axes) else None
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs (by tree path)
+# ---------------------------------------------------------------------------
+
+
+def param_pspec(
+    path: str, shape: tuple[int, ...], mesh: Mesh, multi_pod: bool,
+    layout: str = "fsdp_tp",
+) -> P:
+    """PartitionSpec for a parameter leaf, identified by its '/'-joined path.
+
+    Stacked (scanned) parameters carry a leading n_units dim -> None.
+    """
+    fs = fsdp_axes(multi_pod, layout)
+    tp = tp_axis(layout)
+    stacked = "/units/" in path or path.startswith("units/")
+    lead: tuple = (None,) if stacked else ()
+
+    def spec(*entries) -> P:
+        # drop axes that don't divide their dim
+        fixed = []
+        dims = shape[len(lead) :]
+        for dim, ax in zip(dims, entries):
+            fixed.append(_maybe(dim, mesh, ax))
+        return P(*lead, *fixed)
+
+    name = path.split("/")[-1]
+    if "/attn/" in path or path.endswith("attn"):
+        if name == "wq":
+            return spec(fs, tp, None)
+        if name in ("wk", "wv"):
+            return spec(fs, tp, None)  # _maybe drops the axis if kv<16
+        if name == "wo":
+            return spec(tp, None, fs)
+    if "/ffn/" in path or "/mlp/" in path:
+        ep = ep_axis(layout)
+        if name in ("w1", "w3"):
+            return spec(fs, tp) if len(shape) == 2 + len(lead) else spec(
+                ep, fs, tp
+            )
+        if name == "w2":
+            return spec(tp, fs) if len(shape) == 2 + len(lead) else spec(
+                ep, tp, fs
+            )
+        if name == "router":
+            return spec(fs, None)
+    if name == "table":  # embedding [V, d]
+        return spec(tp, fs)
+    if name == "head":  # LM head [d, V]
+        return spec(fs, tp)
+    if name in ("in_proj",) and "mamba" not in path:
+        return spec(None, fs)  # audio frontend projector
+    if name == "img_proj":
+        return spec(None, fs)
+    if "/mamba/" in path:
+        if name == "in_proj":
+            return spec(fs, None)
+        if name == "out_proj":
+            return spec(None, fs)
+        return spec(*([None] * (len(shape) - len(lead))))
+    if "/cell/" in path:  # xlstm
+        if name in ("wqkvz", "wif", "wx"):
+            return spec(fs, None)
+        if name == "out_proj":
+            return spec(fs, None)
+        return spec(*([None] * (len(shape) - len(lead))))
+    # norms, gates, biases, small vectors: replicated
+    return P(*lead, *([None] * (len(shape) - len(lead))))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+def params_sharding(abstract_params, mesh: Mesh, multi_pod: bool, layout: str = "fsdp_tp"):
+    """NamedSharding tree matching an abstract parameter tree."""
+
+    def one(path, leaf):
+        return NamedSharding(
+            mesh, param_pspec(_path_str(path), leaf.shape, mesh, multi_pod, layout)
+        )
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def state_sharding(abstract_state, mesh: Mesh, multi_pod: bool, layout: str = "fsdp_tp"):
+    """Shardings for the full train state {params, opt(step, mu, nu)}.
+
+    Optimizer moments mirror their parameter's spec; factored second-moment
+    'row'/'col' leaves inherit the parent spec minus the reduced dim.
+    """
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        if ps.endswith("/step") or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if ps.endswith("/row"):
+            parent = param_pspec(ps[:-4], leaf.shape + (1,), mesh, multi_pod, layout)
+            return NamedSharding(mesh, P(*tuple(parent)[:-1]))
+        if ps.endswith("/col"):
+            shape = leaf.shape[:-1] + (1,) + leaf.shape[-1:]
+            parent = param_pspec(ps[:-4], shape, mesh, multi_pod, layout)
+            t = tuple(parent)
+            return NamedSharding(mesh, P(*t[:-2], t[-1]))
+        return NamedSharding(mesh, param_pspec(ps, leaf.shape, mesh, multi_pod, layout))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_state)
+
+
+# ---------------------------------------------------------------------------
+# Decode-cache specs
+# ---------------------------------------------------------------------------
+
+
+def cache_pspec(
+    path: str,
+    shape: tuple[int, ...],
+    cfg: ArchConfig,
+    mesh: Mesh,
+    multi_pod: bool,
+    batch: int,
+    layout: str = "fsdp_tp",
+) -> P:
+    fs = fsdp_axes(multi_pod, layout)
+    tp = tp_axis(layout)
+    stacked = "units/" in path
+    lead: tuple = (None,) if stacked else ()
+    dims = shape[len(lead) :]
+    name = path.split("/")[-1]
+
+    if name in ("k", "v"):  # [B, S, Hkv, hd]
+        b, s, hkv, hd = dims
+        batch_ax = _maybe(b, mesh, fs)
+        if _divisible(hkv, mesh, tp) and tp is not None:
+            head_ax, seq_ax = tp, None
+        else:
+            head_ax, seq_ax = None, tp
+        if batch_ax is None and seq_ax is None:
+            # batch=1 long-context: spread the sequence over the batch axes
+            seq_ax = _maybe(s, mesh, fs)
+        return P(*lead, batch_ax, _maybe(s, mesh, seq_ax), head_ax, None)
+    if name == "ssm_state":  # [B, H, P, N]
+        b, h, pdim, n = dims
+        return P(*lead, _maybe(b, mesh, fs), _maybe(h, mesh, tp), None, None)
+    if name == "conv_state":  # [B, K-1, C]
+        b = dims[0]
+        return P(*lead, _maybe(b, mesh, fs), None, None)
+    if name == "c" and len(dims) == 4:  # mlstm [B, H, dh, dh]
+        b, h, dh, _ = dims
+        return P(
+            *lead, _maybe(b, mesh, fs), _maybe(h, mesh, tp),
+            None if _divisible(h, mesh, tp) else _maybe(dh, mesh, tp),
+            None,
+        )
+    if name in ("n",) and len(dims) == 3:  # mlstm n [B, H, dh]
+        b, h, dh = dims
+        return P(*lead, _maybe(b, mesh, fs), _maybe(h, mesh, tp), None)
+    if len(dims) == 2:  # slstm h/c/n/m [B, d]
+        b, d = dims
+        return P(*lead, _maybe(b, mesh, fs), _maybe(d, mesh, tp))
+    return P(*lead, *([None] * len(dims)))
+
+
+def cache_sharding(
+    abstract_cache, cfg: ArchConfig, mesh: Mesh, multi_pod: bool, batch: int,
+    layout: str = "fsdp_tp",
+):
+    def one(path, leaf):
+        if leaf is None:
+            return None
+        return NamedSharding(
+            mesh,
+            cache_pspec(
+                _path_str(path), leaf.shape, cfg, mesh, multi_pod, batch, layout
+            ),
+        )
+
+    return jax.tree_util.tree_map_with_path(one, abstract_cache)
+
+
+# ---------------------------------------------------------------------------
+# Activation rules (shardctx) and batch specs
+# ---------------------------------------------------------------------------
+
+
+def activation_rules(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    multi_pod: bool,
+    batch: int,
+    *,
+    mode: str = "train",
+    seq: int = 0,
+    sequence_parallel: bool = True,
+    layout: str = "fsdp_tp",
+) -> dict[str, NamedSharding]:
+    """shardctx rules (NamedShardings, so no ambient-mesh context needed).
+
+    In train/prefill the residual stream is sequence-parallel over ``model``
+    (Megatron-SP): the per-layer saved activations shrink by the TP degree,
+    which is what lets the 27B-314B configs fit 16 GB/chip under full remat.
+    XLA materializes the all-gather/reduce-scatter pairs at the TP-op
+    boundaries automatically.
+    """
+    fs = fsdp_axes(multi_pod, layout)
+    tp = tp_axis(layout)
+    bax = _maybe(batch, mesh, fs)
+    sp = (
+        _maybe(seq, mesh, tp)
+        if (sequence_parallel and mode in ("train", "prefill") and seq and tp)
+        else None
+    )
+    specs = {
+        "act_btd": P(bax, sp, None),
+        # SP boundary: blocks gather the sequence at entry (all-gather fwd /
+        # reduce-scatter bwd), compute TP-sharded, and the residual
+        # constraint scatters back — the Megatron-SP collective pattern.
+        "act_attn_in": P(bax, None, None),
+        "act_heads": P(bax, None, _maybe(cfg.n_heads, mesh, tp), None),
+        "act_ff": P(bax, None, _maybe(cfg.d_ff or cfg.d_model, mesh, tp)),
+        "act_vocab": P(bax, None, _maybe(cfg.padded_vocab, mesh, tp)),
+        "moe_groups": P(bax, None, None),
+        "moe_slots": P(
+            bax, _maybe(cfg.moe.n_experts, mesh, ep_axis(layout)) if cfg.moe else None,
+            None, None,
+        ),
+        "moe_ff": P(
+            bax, _maybe(cfg.moe.n_experts, mesh, ep_axis(layout)) if cfg.moe else None,
+            None, _maybe(cfg.d_ff or cfg.d_model, mesh, tp)
+        ),
+        # decode-path MoE intermediates [B, 1, E, ff] / [B, 1, E, d]
+        "moe_dec_h": P(
+            bax, None, None, _maybe(cfg.d_ff or cfg.d_model, mesh, tp)
+        ),
+        "moe_dec_y": P(bax, None, None, None),
+    }
+    # prefill cache-emission [B, S, Hkv, hd]: same layout decision as
+    # cache_pspec so the scan's stacked ys land directly in decode layout
+    if _divisible(cfg.n_kv_heads, mesh, tp) and tp is not None:
+        specs["cache_kv"] = P(bax, None, tp, None)
+    else:
+        specs["cache_kv"] = P(bax, _maybe(seq, mesh, tp), None, None)
+    # explicit FSDP weight-gathers: constraining the per-layer weight slice
+    # to its TP-only compute layout forces the partitioner to all-gather the
+    # (small) weight over the FSDP axes instead of partial-summing the
+    # (huge) activations over the sharded contracting dim.  The transpose
+    # of the constraint is the FSDP gradient reduce-scatter.
+    hq_tp = _maybe(cfg.n_heads, mesh, tp)
+    kv_tp = _maybe(cfg.n_kv_heads, mesh, tp)
+    ff_tp = _maybe(cfg.d_ff or cfg.d_model, mesh, tp)
+    v_tp = _maybe(cfg.padded_vocab, mesh, tp)
+    specs.update(
+        {
+            "w_q": P(None, hq_tp, None),
+            "w_kv": P(None, kv_tp, None),
+            "w_o": P(hq_tp, None, None),
+            "w_ffn_in": P(None, ff_tp),
+            "w_ffn_out": P(ff_tp, None),
+            "w_moe_in": P(
+                _maybe(cfg.moe.n_experts, mesh, ep_axis(layout)) if cfg.moe else None,
+                None, ff_tp,
+            ),
+            "w_moe_out": P(
+                _maybe(cfg.moe.n_experts, mesh, ep_axis(layout)) if cfg.moe else None,
+                ff_tp, None,
+            ),
+            "w_table": P(v_tp, None),
+            "w_head": P(None, v_tp),
+            "w_dense": P(None, None),  # mamba/xlstm projections: gathered
+        }
+    )
+    return {k: NamedSharding(mesh, v) for k, v in specs.items()}
+
+
+def batch_sharding(abstract_batch, mesh: Mesh, multi_pod: bool, layout: str = "fsdp_tp"):
+    """Shard every batch leaf's leading (batch) dim over the batch axes."""
+    fs = fsdp_axes(multi_pod, layout)
+
+    def one(leaf):
+        b = leaf.shape[0]
+        spec = [_maybe(b, mesh, fs)] + [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, abstract_batch)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

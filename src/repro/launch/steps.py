@@ -1,0 +1,169 @@
+"""jit-able train / prefill / serve step factories + abstract input specs.
+
+These are the functions the dry-run lowers and the real launcher executes:
+ * ``make_train_step``  — loss + grad (with microbatch accumulation) +
+   AdamW update, donate-friendly ``TrainState`` pytree.
+ * ``make_prefill_step`` / ``make_serve_step`` — batched inference.
+ * ``input_specs`` — ShapeDtypeStruct stand-ins for every model input of an
+   (arch x shape) cell: weak-type-correct, shardable, no device allocation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import SHAPES
+from repro.models.config import ArchConfig
+from repro.models.model import Model
+from repro.train import optimizer as opt_mod
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def make_optimizer(cfg: ArchConfig, *, peak_lr: float = 3e-4, total_steps: int = 10000):
+    sched = opt_mod.warmup_cosine(peak_lr, max(10, total_steps // 100), total_steps)
+    return opt_mod.adamw(
+        sched,
+        weight_decay=0.1,
+        max_grad_norm=1.0,
+        factored=cfg.opt_factored,
+        moment_dtype=jnp.dtype(cfg.opt_moment_dtype),
+        update_chunks=cfg.opt_update_chunks,
+    )
+
+
+def make_train_step(model: Model, optimizer=None):
+    cfg = model.cfg
+    optimizer = optimizer or make_optimizer(cfg)
+    accum = max(1, cfg.grad_accum)
+
+    cdt = jnp.dtype(cfg.dtype)
+
+    def loss_fn(params, batch):
+        # pre-cast fp32 master params to the compute dtype ONCE, per shard,
+        # before the layer scan: FSDP all-gathers then move bf16, not fp32
+        # (halves weight-gather collective bytes and the gathered transient)
+        params_c = jax.tree.map(
+            lambda p: p.astype(cdt) if p.dtype == jnp.float32 else p, params
+        )
+        return model.loss(params_c, batch)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            # microbatch scan: batch leaves [B, ...] -> [accum, B/accum, ...]
+            def split(x):
+                return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+            acc_dt = jnp.dtype(cfg.accum_dtype)
+
+            def acc_step(carry, mb_i):
+                loss_sum, g_sum = carry
+                li, gi = jax.value_and_grad(loss_fn)(params, mb_i)
+                g_sum = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dt), g_sum, gi
+                )
+                return (loss_sum + li, g_sum), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params
+            )
+            (loss, grads), _ = jax.lax.scan(acc_step, (jnp.zeros(()), g0), mb)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+        new_params, new_opt = optimizer.update(grads, state["opt"], params)
+        metrics = {"loss": loss, "grad_norm": opt_mod.global_norm(grads)}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step, optimizer
+
+
+def init_train_state(model: Model, key: jax.Array, optimizer=None) -> Params:
+    optimizer = optimizer or make_optimizer(model.cfg)
+    params = model.init(key)
+    return {"params": params, "opt": optimizer.init(params)}
+
+
+def abstract_train_state(model: Model, optimizer=None) -> Params:
+    optimizer = optimizer or make_optimizer(model.cfg)
+    return jax.eval_shape(
+        lambda: init_train_state(model, jax.random.PRNGKey(0), optimizer)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serve
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, batch, cache, lengths):
+        logits, new_cache = model.decode_step(params, batch, cache, lengths)
+        return jnp.argmax(logits, axis=-1), new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs per (arch x shape)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """Model-input ShapeDtypeStructs for one shape cell (no cache)."""
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    kind = info["kind"]
+    if kind == "decode":
+        batch: dict = {"tokens": _sds((b, 1), jnp.int32)}
+    elif cfg.family == "audio":
+        batch = {"frames": _sds((b, s, cfg.frontend_dim), cfg.dtype)}
+        if kind == "train":
+            batch["targets"] = _sds((b, s), jnp.int32)
+    else:
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = _sds(
+            (b, cfg.n_image_tokens, cfg.d_vision), cfg.dtype
+        )
+    return batch
+
+
+def input_specs(model: Model, shape_name: str) -> dict:
+    """Everything the step function consumes, as ShapeDtypeStructs."""
+    cfg = model.cfg
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    kind = info["kind"]
+    out: dict = {"batch": batch_specs(cfg, shape_name)}
+    if kind == "train":
+        out["state"] = abstract_train_state(model)
+    else:
+        out["params"] = model.abstract_params()
+    if kind == "decode":
+        out["cache"] = model.abstract_cache(b, s)
+        out["lengths"] = _sds((b,), jnp.int32)
+    return out

@@ -1,0 +1,69 @@
+"""Training launcher CLI.
+
+Smoke-scale on CPU by default (reduced config); pass ``--full`` on a real
+pod to train the published config under the production mesh layout.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --steps 60 --batch 8 --seq 128 --ckpt-dir /tmp/run1
+    # crash it, then rerun the same command: it resumes bit-identically
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import tempfile
+
+from repro import configs
+from repro.models.model import Model
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import make_batch_fn
+from repro.train.train_loop import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b", choices=configs.all_arch_ids())
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument(
+        "--full", action="store_true",
+        help="published config (pod-scale; smoke config is the CPU default)",
+    )
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch) if args.full else configs.smoke_config(args.arch)
+    model = Model(cfg)
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix=f"train_{args.arch}_")
+    trainer = Trainer(
+        model=model,
+        batch_fn=make_batch_fn(cfg, batch=args.batch, seq=args.seq),
+        ckpt=CheckpointManager(pathlib.Path(ckpt_dir)),
+        ckpt_every=args.ckpt_every,
+        peak_lr=args.lr,
+        total_steps=args.steps,
+    )
+    if trainer.resume():
+        print(f"resumed at step {trainer.step} from {ckpt_dir}")
+    else:
+        trainer.init()
+        print(f"new run ({args.arch}, {cfg.n_layers}L d{cfg.d_model}); ckpt -> {ckpt_dir}")
+
+    while trainer.step < args.steps:
+        n = min(args.log_every, args.steps - trainer.step)
+        hist = trainer.run(n)
+        h = hist[-1]
+        print(
+            f"step {h['step']:5d}  loss {h['loss']:.4f}  "
+            f"gnorm {h['grad_norm']:.3f}  {h['seconds']:.2f}s/step"
+        )
+    print(f"done; final loss {trainer.history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,439 @@
+"""Transformer building blocks: norms, RoPE, GQA attention, gated MLP.
+
+Conventions:
+ * parameters are nested dicts of jnp arrays; ``init_*`` builds them,
+   ``apply_*`` consumes them;
+ * activations flow in the config compute dtype (bf16), statistics and
+   softmax in fp32;
+ * attention is *blocked*: a static loop over query chunks with per-chunk
+   exact KV extents (static slices — no flops wasted on fully-masked
+   blocks), and an inner online-softmax scan over KV chunks so the
+   [*, q_chunk, kv_chunk] logits tile bounds peak memory.  This mirrors the
+   Pallas flash kernel's schedule (repro/kernels/flash_attention.py) and is
+   the partitioner-friendly path used by the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.shardctx import shard
+
+Params = dict[str, Any]
+
+
+def cdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, cfg: ArchConfig) -> Params:
+    return {"scale": jnp.zeros((d,), pdtype(cfg))}
+
+
+def apply_rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (full / partial-"2d" fraction)
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(
+    positions: jax.Array, head_dim: int, fraction: float, theta: float
+) -> tuple[jax.Array, jax.Array]:
+    """(sin, cos) of shape [..., rot_dim/2] for the rotating slice."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., half]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(
+    x: jax.Array,  # [..., head_dim]
+    sin: jax.Array,
+    cos: jax.Array,
+) -> jax.Array:
+    """Rotate the leading ``2*half`` slice of head_dim; pass the rest through
+    (chatglm3's partial/"2d" RoPE uses fraction 0.5)."""
+    half = sin.shape[-1]
+    rot, rest = x[..., : 2 * half], x[..., 2 * half :]
+    x1, x2 = rot[..., ::2], rot[..., 1::2]
+    sin = sin.astype(jnp.float32)
+    cos = cos.astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    r1 = x1f * cos - x2f * sin
+    r2 = x2f * cos + x1f * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(rot.shape).astype(x.dtype)
+    return jnp.concatenate([out, rest], axis=-1) if rest.shape[-1] else out
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key: jax.Array, cfg: ArchConfig, *, cross: bool = False) -> Params:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    d_kv_src = cfg.d_model if not cross else cfg.d_model  # projector maps vision->d
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    dt = pdtype(cfg)
+    return {
+        "wq": (jax.random.normal(k1, (d, hq, hd)) * s).astype(dt),
+        "wk": (jax.random.normal(k2, (d_kv_src, hkv, hd)) * s).astype(dt),
+        "wv": (jax.random.normal(k3, (d_kv_src, hkv, hd)) * s).astype(dt),
+        "wo": (jax.random.normal(k4, (hq, hd, d)) * s / math.sqrt(cfg.n_layers)).astype(dt),
+    }
+
+
+def _online_softmax_scan(
+    q: jax.Array,  # [B, cq, H, hd] (KV already expanded to H q-heads)
+    k_all: jax.Array,  # [B, Skv, H, hd]
+    v_all: jax.Array,  # [B, Skv, H, hd]
+    *,
+    chunk_kv: int,
+    mask_fn,  # (q_abs [cq], k_abs [ck]) -> bool [cq, ck] or None
+    q_abs0: jax.Array | int,
+    k_abs0: int,
+    softcap: float | None,
+    scale: float,
+) -> jax.Array:
+    """Inner flash loop: scan KV chunks with running (max, denom, accum).
+
+    Works on the flat head layout (GQA KV pre-broadcast to the query heads)
+    so the ``model``-axis head sharding survives every reshape — the SPMD
+    partitioner handles [B,S,H,hd] cleanly where the grouped 5D layout
+    forced involuntary reshards.
+    """
+    b, cq, h, hd = q.shape
+    skv = k_all.shape[1]
+    n_kv = -(-skv // chunk_kv)
+    pad = n_kv * chunk_kv - skv
+    if pad:
+        k_all = jnp.pad(k_all, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_all = jnp.pad(v_all, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    k_chunks = k_all.reshape(b, n_kv, chunk_kv, h, hd).transpose(1, 0, 2, 3, 4)
+    v_chunks = v_all.reshape(b, n_kv, chunk_kv, h, hd).transpose(1, 0, 2, 3, 4)
+
+    qf = q.astype(jnp.float32) * scale
+
+    def step(carry, inp):
+        j, kc, vc = inp
+        m, l, acc = carry
+        logits = jnp.einsum(
+            "bqhd,bkhd->bhqk", qf, kc.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        if mask_fn is not None:
+            k_abs = k_abs0 + j * chunk_kv + jnp.arange(chunk_kv)
+            q_abs = q_abs0 + jnp.arange(cq)
+            msk = mask_fn(q_abs, k_abs)  # [cq, ck]
+            logits = jnp.where(msk[None, None], logits, -jnp.inf)
+        elif pad:
+            k_abs = j * chunk_kv + jnp.arange(chunk_kv)
+            logits = jnp.where(
+                (k_abs < skv)[None, None, None], logits, -jnp.inf
+            )
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(logits - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(logits), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = corr * l + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vc.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = corr[..., None] * acc + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, cq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, cq), jnp.float32)
+    a0 = jnp.zeros((b, h, cq, hd), jnp.float32)
+    # checkpoint each KV step: backward recomputes the [cq, ck] logits tile
+    # instead of stacking it across the scan (flash-attention backward)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(step), (m0, l0, a0), (jnp.arange(n_kv), k_chunks, v_chunks)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # [b,h,cq,hd]
+    return out.transpose(0, 2, 1, 3)  # [b,cq,h,hd]
+
+
+def blocked_attention(
+    q: jax.Array,  # [B, Sq, Hq, hd]
+    k: jax.Array,  # [B, Skv, Hkv, hd]
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_offset: int = 0,
+    n_q_chunks: int = 8,
+    chunk_kv: int = 1024,
+) -> jax.Array:
+    """Memory-efficient GQA attention with exact per-chunk KV extents.
+
+    Query chunks are a *static* Python loop; chunk ``i`` at absolute offset
+    ``qo`` reads only KV[:qo+cq] (causal) or the window slab (local), via
+    static slices — no flops are spent on fully-masked KV blocks.
+    """
+    b, sq, hq, hd = q.shape
+    skv = k.shape[1]
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+    if g > 1:  # broadcast GQA KV up to the query heads (flat layout)
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    k = shard(k, "act_heads")
+    v = shard(v, "act_heads")
+
+    if sq == 0:
+        return q
+    n_q = max(1, min(n_q_chunks, sq))
+    while sq % n_q:
+        n_q -= 1
+    cq = sq // n_q
+    chunk_kv = min(chunk_kv, skv)
+
+    outs = []
+    for i in range(n_q):
+        qo = q_offset + i * cq  # absolute position of this q chunk
+        qc = q[:, i * cq : (i + 1) * cq]
+        if causal:
+            hi = min(qo + cq, skv)  # static: q_offset is python int here
+            lo = 0
+            if window is not None:
+                lo = max(0, hi - cq - window)
+                lo -= lo % chunk_kv  # keep chunk alignment
+            kc, vc = k[:, lo:hi], v[:, lo:hi]
+
+            def mask_fn(q_abs, k_abs, _w=window):
+                m = q_abs[:, None] >= k_abs[None, :]
+                if _w is not None:
+                    m &= q_abs[:, None] - k_abs[None, :] < _w
+                return m
+
+            out = _online_softmax_scan(
+                qc, kc, vc,
+                chunk_kv=chunk_kv, mask_fn=mask_fn, q_abs0=qo, k_abs0=lo,
+                softcap=softcap, scale=scale,
+            )
+        else:
+            out = _online_softmax_scan(
+                qc, k, v,
+                chunk_kv=chunk_kv, mask_fn=None, q_abs0=qo, k_abs0=0,
+                softcap=softcap, scale=scale,
+            )
+        outs.append(out)
+    out = jnp.concatenate(outs, axis=1)  # [b, sq, h, hd]
+    return out.astype(q.dtype)
+
+
+def apply_attention(
+    p: Params,
+    x: jax.Array,  # [B, S, d]
+    cfg: ArchConfig,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    positions: jax.Array | None = None,  # [S] absolute positions
+    q_offset: int = 0,
+    kv_src: jax.Array | None = None,  # cross-attention context [B, Skv, d]
+    rope: bool = True,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    dt = cdtype(cfg)
+    wq = shard(p["wq"].astype(dt), "w_q")  # explicit FSDP gather
+    wk = shard(p["wk"].astype(dt), "w_kv")
+    wv = shard(p["wv"].astype(dt), "w_kv")
+    q = jnp.einsum("bsd,dhk->bshk", x, wq, preferred_element_type=dt)
+    src = x if kv_src is None else kv_src
+    k = jnp.einsum("bsd,dhk->bshk", src, wk, preferred_element_type=dt)
+    v = jnp.einsum("bsd,dhk->bshk", src, wv, preferred_element_type=dt)
+    if rope and kv_src is None:
+        pos = positions if positions is not None else q_offset + jnp.arange(s)
+        sin, cos = rope_tables(pos, hd, cfg.rotary_fraction, cfg.rope_theta)
+        q = apply_rope(q, sin[:, None], cos[:, None])
+        k = apply_rope(k, sin[:, None], cos[:, None])
+    q = shard(q, "act_heads")
+    out = blocked_attention(
+        q, k, v,
+        causal=causal and kv_src is None,
+        window=window,
+        softcap=cfg.logit_softcap,
+        q_offset=q_offset,
+    )
+    wo = shard(p["wo"].astype(dt), "w_o")
+    y = jnp.einsum(
+        "bshk,hkd->bsd", out.astype(dt), wo, preferred_element_type=dt
+    )
+    return shard(y, "act_btd")
+
+
+def decode_attention_step(
+    p: Params,
+    x: jax.Array,  # [B, 1, d]
+    cache: Params,  # {"k": [B, S_cache, Hkv, hd], "v": ...}
+    lengths: jax.Array,  # [B] tokens generated so far (absolute)
+    cfg: ArchConfig,
+    *,
+    window: int | None = None,
+    chunk_kv: int = 4096,
+) -> tuple[jax.Array, Params]:
+    """One-token cached attention; returns (out [B,1,d], updated cache).
+
+    Sliding-window layers use a RING cache of size ``window`` (slot =
+    abs_pos % window): the cache for gemma3's 52 local layers is 32x
+    smaller than the full 32k context.  RoPE is applied at absolute
+    positions before the write, so ring rotation never touches phases.
+    """
+    b, _, d = x.shape
+    hd = cfg.resolved_head_dim
+    dt = cdtype(cfg)
+    s_cache = cache["k"].shape[1]
+    ring = window is not None and s_cache <= window
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))[:, 0]  # [B,Hq,hd]
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))[:, 0]
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))[:, 0]
+    sin, cos = rope_tables(lengths, hd, cfg.rotary_fraction, cfg.rope_theta)
+    q = apply_rope(q, sin[:, None], cos[:, None])
+    k_new = apply_rope(k_new, sin[:, None], cos[:, None])
+
+    # write the new KV at slot ``abs_pos % s_cache`` per sequence
+    slots = lengths % s_cache if ring else lengths
+
+    def write(c, new, i):
+        return jax.lax.dynamic_update_slice_in_dim(c, new[None], i, axis=0)
+
+    k_cache = jax.vmap(write)(cache["k"], k_new.astype(cache["k"].dtype), slots)
+    v_cache = jax.vmap(write)(cache["v"], v_new.astype(cache["v"].dtype), slots)
+    new_len = lengths + 1
+    s_max = s_cache
+    if ring:
+        window = None  # ring residency already enforces the window
+
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32) / math.sqrt(hd)
+
+    # single-shot attention over the whole cache: with one query token the
+    # logits tensor [B, Hkv, G, S] is small (tens of MB even at 500k KV),
+    # and it partitions perfectly — seq- or head-sharded caches reduce via
+    # one small all-reduce instead of the chunk-scan's per-chunk reshards.
+    # NOTE: the cache stays in its storage dtype — an .astype(f32) here gets
+    # loop-hoisted by XLA into a full fp32 copy of the stacked cache;
+    # preferred_element_type gives fp32 accumulation without the copy.
+    logits = jnp.einsum(
+        "bhgd,bkhd->bhgk", qg.astype(k_cache.dtype), k_cache,
+        preferred_element_type=jnp.float32,
+    )
+    if cfg.logit_softcap is not None:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    k_abs = jnp.arange(s_max)
+    valid = k_abs[None, :] < new_len[:, None]  # [B, S]
+    if window is not None:
+        valid &= new_len[:, None] - k_abs[None, :] <= window
+    logits = jnp.where(valid[:, None, None], logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    pr = jnp.exp(logits - jnp.where(jnp.isfinite(m), m, 0.0))
+    pr = jnp.where(jnp.isfinite(logits), pr, 0.0)
+    denom = jnp.maximum(jnp.sum(pr, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum(
+        "bhgk,bkhd->bhgd", (pr / denom).astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    ).reshape(b, 1, hq, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(dt), p["wo"].astype(dt))
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key: jax.Array, cfg: ArchConfig, d_ff: int | None = None) -> Params:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = pdtype(cfg)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(ff) / math.sqrt(cfg.n_layers)
+    return {
+        "w1": (jax.random.normal(k1, (d, ff)) * s_in).astype(dt),
+        "w3": (jax.random.normal(k2, (d, ff)) * s_in).astype(dt),
+        "w2": (jax.random.normal(k3, (ff, d)) * s_out).astype(dt),
+    }
+
+
+def apply_mlp(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    dt = cdtype(cfg)
+    act = getattr(jax.nn, cfg.act)
+    mm = lambda a, b: jnp.einsum("bsd,df->bsf", a, b, preferred_element_type=dt)
+    w1 = shard(p["w1"].astype(dt), "w_ffn_in")  # explicit FSDP gathers
+    w3 = shard(p["w3"].astype(dt), "w_ffn_in")
+    w2 = shard(p["w2"].astype(dt), "w_ffn_out")
+    h = act(mm(x, w1)) * mm(x, w3)
+    h = shard(h, "act_ff")
+    return shard(mm(h, w2), "act_btd")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key: jax.Array, cfg: ArchConfig) -> Params:
+    dt = pdtype(cfg)
+    v = cfg.padded_vocab  # padded so the vocab axis shards evenly
+    p = {"table": (jax.random.normal(key, (v, cfg.d_model)) * 0.02).astype(dt)}
+    if not cfg.tie_embeddings:
+        p["head"] = (
+            jax.random.normal(jax.random.fold_in(key, 1), (cfg.d_model, v)) * 0.02
+        ).astype(dt)
+    return p
+
+
+def embed_tokens(p: Params, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    x = jnp.take(p["table"].astype(cdtype(cfg)), tokens, axis=0)
+    return shard(x * math.sqrt(cfg.d_model), "act_btd")
+
+
+def logits(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    dt = cdtype(cfg)
+    if cfg.tie_embeddings:
+        out = jnp.einsum(
+            "bsd,vd->bsv", x, shard(p["table"].astype(dt), "w_table"),
+            preferred_element_type=dt,
+        )
+    else:
+        out = jnp.einsum(
+            "bsd,dv->bsv", x, shard(p["head"].astype(dt), "w_head"),
+            preferred_element_type=dt,
+        )
+    return shard(out, "act_vocab")

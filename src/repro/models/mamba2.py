@@ -1,0 +1,235 @@
+"""Mamba2 / SSD block (Zamba2's backbone), chunked-scan formulation.
+
+State-space duality form (Dao & Gu 2024): per head h with head dim P and
+state dim N,
+
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * B_t x_t^T        (h: [P, N])
+    y_t = h_t C_t + D_h x_t
+
+trained with the chunked algorithm: intra-chunk quadratic term (a decay-
+masked C B^T "attention" within each chunk of length Q) plus an inter-chunk
+recurrent state carried by a ``lax.scan`` over chunks.  TPU note: the
+quadratic intra term is an MXU-friendly [Q, Q] matmul per head — this is the
+adaptation of the paper-family's GPU scan kernels to the systolic unit
+(DESIGN.md hw-adaptation log).
+
+Decode is the O(1) recurrent update on a [B, H, P, N] state plus a rolling
+depthwise-conv cache.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.shardctx import shard
+
+Params = dict
+
+
+def _dims(cfg: ArchConfig):
+    ssm = cfg.ssm
+    d_in = ssm.d_inner(cfg.d_model)
+    nheads = ssm.n_heads(cfg.d_model)
+    conv_ch = d_in + 2 * ssm.d_state  # conv runs over (x, B, C) channels
+    return ssm, d_in, nheads, conv_ch
+
+
+def init_mamba2(key: jax.Array, cfg: ArchConfig) -> Params:
+    ssm, d_in, nheads, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    in_dim = 2 * d_in + 2 * ssm.d_state + nheads  # z, x, B, C, dt
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, in_dim)) * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (ssm.d_conv, conv_ch)) * 0.5).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "dt_bias": jnp.zeros((nheads,), dt),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nheads).astype(jnp.float32)
+        ).astype(dt),
+        "d_skip": jnp.ones((nheads,), dt),
+        "norm_scale": jnp.zeros((d_in,), dt),
+        "out_proj": (
+            jax.random.normal(ks[2], (d_in, d)) * s / math.sqrt(cfg.n_layers)
+        ).astype(dt),
+    }
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: ArchConfig):
+    ssm, d_in, nheads, _ = _dims(cfg)
+    n = ssm.d_state
+    z = zxbcdt[..., :d_in]
+    x = zxbcdt[..., d_in : 2 * d_in]
+    b = zxbcdt[..., 2 * d_in : 2 * d_in + n]
+    c = zxbcdt[..., 2 * d_in + n : 2 * d_in + 2 * n]
+    dt_raw = zxbcdt[..., 2 * d_in + 2 * n :]
+    return z, x, b, c, dt_raw
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over [B, S, C] with window K."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1]] * w[i][None, None] for i in range(k)
+    )
+    return out + b[None, None]
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """Mamba2's gated RMSNorm: norm(y * silu(z)) * (1 + scale)."""
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    out = gf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(y.dtype)
+
+
+def apply_mamba2(
+    p: Params, x_in: jax.Array, cfg: ArchConfig, *, return_state: bool = False
+):
+    """Full-sequence (train / prefill) chunked SSD.  x_in: [B, S, d].
+
+    ``return_state=True`` additionally returns the decode cache holding the
+    final SSM state and the conv tail (so decode continues seamlessly)."""
+    ssm, d_in, nheads, _ = _dims(cfg)
+    dt_c = jnp.dtype(cfg.dtype)
+    bsz, s, _ = x_in.shape
+    q = min(ssm.chunk, s)
+    while s % q:  # largest divisor <= chunk (odd smoke shapes)
+        q -= 1
+    n_chunks = s // q
+    pdim, nstate = ssm.head_dim, ssm.d_state
+
+    zxbcdt = jnp.einsum(
+        "bsd,dk->bsk", x_in, shard(p["in_proj"].astype(dt_c), "w_dense"),
+        preferred_element_type=dt_c,
+    )
+    z, xr, br, cr, dt_raw = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xr, br, cr], axis=-1)
+    conv_out = jax.nn.silu(
+        _causal_conv(conv_in, p["conv_w"].astype(dt_c), p["conv_b"].astype(dt_c))
+    )
+    xr = conv_out[..., :d_in]
+    br = conv_out[..., d_in : d_in + nstate]
+    cr = conv_out[..., d_in + nstate :]
+
+    dt_h = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # [B,S,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # [H], negative
+    log_decay = dt_h * a[None, None]  # [B,S,H] <= 0
+
+    xh = xr.reshape(bsz, s, nheads, pdim)
+    # chunked layout
+    xc = xh.reshape(bsz, n_chunks, q, nheads, pdim).astype(jnp.float32)
+    bc = br.reshape(bsz, n_chunks, q, nstate).astype(jnp.float32)
+    cc = cr.reshape(bsz, n_chunks, q, nstate).astype(jnp.float32)
+    dtc = dt_h.reshape(bsz, n_chunks, q, nheads)
+    ldc = log_decay.reshape(bsz, n_chunks, q, nheads)
+    cum = jnp.cumsum(ldc, axis=2)  # [B,Nc,Q,H] inclusive
+
+    def chunk_step(state, inp):
+        # state: [B,H,P,N]
+        xk, bk, ck, dtk, cumk, ldk = inp  # leading axis stripped by scan
+        # intra-chunk quadratic term
+        # decay[t, s_] = exp(cum[t] - cum[s_]) for s_ <= t
+        diff = cumk[:, :, None, :] - cumk[:, None, :, :]  # [B,Q,Q,H]
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        # mask BEFORE exp: upper-triangle diffs are positive and can
+        # overflow; exp(-inf)=0 keeps both value and gradient clean
+        decay = jnp.exp(jnp.where(tri[None, :, :, None], diff, -jnp.inf))
+        scores = jnp.einsum("btn,bsn->bts", ck, bk)[..., None] * decay  # [B,Q,Q,H]
+        y_intra = jnp.einsum("btsh,bsh,bshp->bthp", scores, dtk, xk)
+        # inter-chunk: contribution of the carried state
+        y_state = jnp.einsum(
+            "btn,bhpn,bth->bthp", ck, state, jnp.exp(cumk)
+        )
+        # state update for next chunk
+        w = jnp.exp(cumk[:, -1:, :] - cumk) * dtk  # [B,Q,H]
+        state_new = state * jnp.exp(cumk[:, -1])[:, :, None, None] + jnp.einsum(
+            "bth,bthp,btn->bhpn", w, xk, bk
+        )
+        return state_new, y_intra + y_state
+
+    state0 = jnp.zeros((bsz, nheads, pdim, nstate), jnp.float32)
+    inputs = tuple(
+        jnp.moveaxis(t, 1, 0) for t in (xc, bc, cc, dtc, cum, ldc)
+    )
+    # checkpoint per chunk: bwd recomputes the [Q,Q] intra tile, not a stack
+    final_state, ys = jax.lax.scan(jax.checkpoint(chunk_step), state0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, nheads, pdim)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(
+        jnp.float32
+    )
+    y = y.reshape(bsz, s, d_in).astype(dt_c)
+    y = _gated_norm(y, z, p["norm_scale"], cfg.norm_eps)
+    out = shard(
+        jnp.einsum("bsd,dk->bsk", y, p["out_proj"].astype(dt_c), preferred_element_type=dt_c),
+        "act_btd",
+    )
+    if not return_state:
+        return out
+    k = ssm.d_conv
+    tail = conv_in[:, s - (k - 1) :, :] if s >= k - 1 else jnp.pad(
+        conv_in, ((0, 0), (k - 1 - s, 0), (0, 0))
+    )
+    return out, {"ssm_state": final_state, "conv_state": tail}
+
+
+# ---------------------------------------------------------------------------
+# Decode path: O(1) recurrent update
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    ssm, d_in, nheads, conv_ch = _dims(cfg)
+    return {
+        "ssm_state": jnp.zeros((batch, nheads, ssm.head_dim, ssm.d_state), jnp.float32),
+        "conv_state": jnp.zeros((batch, ssm.d_conv - 1, conv_ch), dtype),
+    }
+
+
+def apply_mamba2_decode(
+    p: Params, x_in: jax.Array, cache: Params, cfg: ArchConfig
+) -> tuple[jax.Array, Params]:
+    """Single-token step.  x_in: [B, 1, d] -> ([B, 1, d], new cache)."""
+    ssm, d_in, nheads, conv_ch = _dims(cfg)
+    dt_c = jnp.dtype(cfg.dtype)
+    bsz = x_in.shape[0]
+    nstate, pdim = ssm.d_state, ssm.head_dim
+
+    zxbcdt = x_in[:, 0] @ p["in_proj"].astype(dt_c)  # [B, in_dim]
+    z, xr, br, cr, dt_raw = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xr, br, cr], axis=-1)  # [B, conv_ch]
+    window = jnp.concatenate([cache["conv_state"], conv_in[:, None]], axis=1)
+    w = p["conv_w"].astype(dt_c)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(dt_c)
+    )
+    new_conv_state = window[:, 1:]
+    xr = conv_out[:, :d_in]
+    br = conv_out[:, d_in : d_in + nstate].astype(jnp.float32)
+    cr = conv_out[:, d_in + nstate :].astype(jnp.float32)
+
+    dt_h = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # [B,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt_h * a[None])  # [B,H]
+    xh = xr.reshape(bsz, nheads, pdim).astype(jnp.float32)
+    state = cache["ssm_state"] * decay[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt_h, xh, br
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, cr)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(bsz, d_in).astype(dt_c)
+    y = _gated_norm(y, z, p["norm_scale"], cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(dt_c))[:, None]
+    return out, {"ssm_state": state, "conv_state": new_conv_state}

@@ -1,0 +1,198 @@
+"""Model = modality frontend + layer stack + chunked LM head.
+
+``Model`` is family-polymorphic over the 10 assigned architectures:
+ * LM families (dense/moe/hybrid/ssm): token embedding -> stack -> head;
+ * ``audio`` (hubert): frame-embedding stub -> bidirectional encoder ->
+   per-frame classification head (no decode path);
+ * ``vlm`` (llama-3.2-vision): token embedding + projected image-embedding
+   context consumed by the cross-attention layers.
+
+The LM head + cross-entropy are fused and *chunked over tokens* so the
+[B, S, vocab] logits tensor never materializes (gemma3's 262k vocab at 1M
+tokens would otherwise be ~0.5 TB); backprop recomputes per-chunk logits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, transformer
+from repro.models.config import ArchConfig
+from repro.models.shardctx import shard
+
+Params = dict[str, Any]
+
+
+def _pick_chunks(s: int, want: int) -> int:
+    n = max(1, min(want, s))
+    while s % n:
+        n -= 1
+    return n
+
+
+def chunked_softmax_xent(
+    x: jax.Array,  # [B, S, d] final hidden states
+    embed_params: Params,
+    targets: jax.Array,  # [B, S] int32
+    cfg: ArchConfig,
+    *,
+    mask: jax.Array | None = None,  # [B, S] 1.0 = contributes
+    n_chunks: int = 8,
+) -> jax.Array:
+    """Mean next-token cross entropy, computed in sequence chunks."""
+    b, s, d = x.shape
+    n = _pick_chunks(s, n_chunks)
+    cs = s // n
+    xs = jnp.moveaxis(x.reshape(b, n, cs, d), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(b, n, cs), 1, 0)
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    ms = jnp.moveaxis(mask.reshape(b, n, cs), 1, 0)
+
+    pad = cfg.padded_vocab - cfg.vocab
+
+    def body(carry, inp):
+        xc, tc, mc = inp
+        lg = blocks.logits(embed_params, xc, cfg).astype(jnp.float32)
+        if pad:
+            lg = jnp.where(
+                jnp.arange(cfg.padded_vocab) < cfg.vocab, lg, -jnp.inf
+            )
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(body), (jnp.zeros(()), jnp.zeros(())), (xs, ts, ms)
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # -- init ----------------------------------------------------------------
+
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        dt = jnp.dtype(cfg.param_dtype)
+        p: Params = {
+            "stack": transformer.init_stack(k2, cfg),
+            "final_ln": blocks.init_rmsnorm(cfg.d_model, cfg),
+        }
+        if cfg.family == "audio":
+            p["embed"] = {
+                "head": (
+                    jax.random.normal(k1, (cfg.d_model, cfg.padded_vocab)) * 0.02
+                ).astype(dt)
+            }
+            p["in_proj"] = (
+                jax.random.normal(k3, (cfg.frontend_dim, cfg.d_model)) * 0.02
+            ).astype(dt)
+        else:
+            p["embed"] = blocks.init_embedding(k1, cfg)
+            if cfg.family == "vlm":
+                p["img_proj"] = (
+                    jax.random.normal(k4, (cfg.d_vision, cfg.d_model)) * 0.02
+                ).astype(dt)
+        return p
+
+    def abstract_params(self) -> Params:
+        """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # -- frontends -------------------------------------------------------------
+
+    def _embed_inputs(self, params: Params, batch: dict) -> jax.Array:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        if cfg.family == "audio":
+            x = batch["frames"].astype(dt) @ params["in_proj"].astype(dt)
+            return shard(x, "act_btd")
+        return blocks.embed_tokens(params["embed"], batch["tokens"], cfg)
+
+    def _img_ctx(self, params: Params, batch: dict) -> jax.Array | None:
+        if self.cfg.family != "vlm":
+            return None
+        dt = jnp.dtype(self.cfg.dtype)
+        return batch["image_embeds"].astype(dt) @ params["img_proj"].astype(dt)
+
+    # -- forward passes --------------------------------------------------------
+
+    def hidden(
+        self,
+        params: Params,
+        batch: dict,
+        *,
+        mode: str,
+        cache: Params | None = None,
+        lengths: jax.Array | None = None,
+    ) -> tuple[jax.Array, Params | None]:
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        x, cache_out = transformer.apply_stack(
+            params["stack"],
+            x,
+            cfg,
+            mode=mode,
+            cache=cache,
+            lengths=lengths,
+            img_ctx=self._img_ctx(params, batch),
+        )
+        x = blocks.apply_rmsnorm(params["final_ln"], x, cfg.norm_eps)
+        return x, cache_out
+
+    def loss(self, params: Params, batch: dict) -> jax.Array:
+        """Training loss.  LM: next-token prediction (targets = shifted
+        tokens unless given).  audio: per-frame classification."""
+        cfg = self.cfg
+        x, _ = self.hidden(params, batch, mode="train")
+        if cfg.family == "audio":
+            targets = batch["targets"]
+            mask = batch.get("mask")
+            return chunked_softmax_xent(x, params["embed"], targets, cfg, mask=mask)
+        tokens = batch["tokens"]
+        if "targets" in batch:
+            targets, mask = batch["targets"], batch.get("mask")
+        else:
+            targets = jnp.concatenate(
+                [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1
+            )
+            mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+        return chunked_softmax_xent(x, params["embed"], targets, cfg, mask=mask)
+
+    def prefill(self, params: Params, batch: dict) -> tuple[jax.Array, Params]:
+        """Process the full prompt; returns (last-position logits, cache)."""
+        x, cache = self.hidden(params, batch, mode="prefill")
+        last = x[:, -1:]
+        lg = blocks.logits(params["embed"], last, self.cfg)
+        return lg[:, 0], cache
+
+    def decode_step(
+        self,
+        params: Params,
+        batch: dict,  # {"tokens": [B,1], (+"image_embeds" for vlm)}
+        cache: Params,
+        lengths: jax.Array,  # [B]
+    ) -> tuple[jax.Array, Params]:
+        """One token for every sequence; returns (logits [B, V], new cache)."""
+        x, new_cache = self.hidden(
+            params, batch, mode="decode", cache=cache, lengths=lengths
+        )
+        lg = blocks.logits(params["embed"], x, self.cfg)
+        return lg[:, 0], new_cache
+
+    def init_cache(self, batch: int, s_max: int) -> Params:
+        return transformer.init_stack_cache(
+            self.cfg, batch, s_max, jnp.dtype(self.cfg.dtype)
+        )
+
+    def abstract_cache(self, batch: int, s_max: int) -> Params:
+        return jax.eval_shape(lambda: self.init_cache(batch, s_max))

@@ -1,0 +1,153 @@
+"""Top-k mixture-of-experts layer (Mixtral / Grok-1 style).
+
+GShard-style grouped capacity dispatch, the SPMD-proven formulation:
+
+  tokens -> groups of ``group_size`` -> router top-k -> position-in-expert
+  via cumsum -> one-hot dispatch einsum -> per-expert FFN -> combine einsum.
+
+Sharding (DESIGN.md §5): with 8 experts on a 16-wide ``model`` axis, experts
+cannot shard the axis evenly, so the baseline layout replicates experts and
+tensor-parallelizes ``d_ff`` over ``model`` (identical collective pattern to
+the dense TP MLP: one all-reduce on the output projection).  Groups shard
+over ``data``.  True expert-parallel placement over the 2-wide ``pod`` axis
+(4 experts per pod) is available as the ``ep_axis`` variant exercised in the
+§Perf iterations.
+
+Capacity: C = group_size * top_k / n_experts * capacity_factor rounded up to
+a 128 multiple (MXU alignment); overflow tokens drop (standard GShard
+behaviour), underflow slots are zero-padded.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.shardctx import shard
+
+Params = dict
+
+
+def init_moe(key: jax.Array, cfg: ArchConfig) -> Params:
+    assert cfg.moe is not None
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(ff) / math.sqrt(cfg.n_layers)
+    return {
+        "router": (jax.random.normal(k1, (d, e)) * s_in).astype(dt),
+        "w1": (jax.random.normal(k2, (e, d, ff)) * s_in).astype(dt),
+        "w3": (jax.random.normal(k3, (e, d, ff)) * s_in).astype(dt),
+        "w2": (jax.random.normal(k4, (e, ff, d)) * s_out).astype(dt),
+    }
+
+
+def _dispatch_tensors(
+    gates: jax.Array,  # [G, S, E] softmax router probs
+    top_k: int,
+    capacity: int,
+):
+    """Build (dispatch [G,S,E,C] one-hot, combine [G,S,E,C] gate-weighted).
+
+    Position-in-expert via cumulative sum over the flattened (s, k) choice
+    order; tokens beyond capacity drop.
+    """
+    g, s, e = gates.shape
+    top_vals, top_idx = jax.lax.top_k(gates, top_k)  # [G,S,K]
+    # renormalize the chosen gates (Mixtral: softmax over top-k logits ==
+    # normalized top-k softmax probs)
+    top_vals = top_vals / jnp.sum(top_vals, axis=-1, keepdims=True)
+
+    # one-hot expert choice per (token, k): [G, S, K, E]
+    choice = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)
+    # priority order: k-th choices of all tokens, token-major within k
+    # flatten (K, S) so primary choices fill capacity first
+    choice_ks = choice.transpose(0, 2, 1, 3).reshape(g, top_k * s, e)
+    pos_ks = jnp.cumsum(choice_ks, axis=1) - choice_ks  # position in expert
+    pos = pos_ks.reshape(g, top_k, s, e).transpose(0, 2, 1, 3)  # [G,S,K,E]
+    keep = (pos < capacity) & (choice > 0)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), capacity, dtype=jnp.float32)
+    pos_oh = pos_oh * keep[..., None]
+    # [G, S, K, E, C] -> sum over K: a token occupies one slot per choice
+    dispatch = jnp.sum(pos_oh, axis=2)  # [G, S, E, C]
+    combine = jnp.sum(pos_oh * top_vals[..., None, None], axis=2)
+    return dispatch, combine
+
+
+def apply_moe(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """x: [B, S, d] -> same shape."""
+    assert cfg.moe is not None
+    moe = cfg.moe
+    b, s, d = x.shape
+    dt = jnp.dtype(cfg.dtype)
+    tokens = b * s
+    gsz = min(moe.group_size, tokens)
+    while tokens % gsz:  # fall back to the largest divisor (odd smoke shapes)
+        gsz -= 1
+    n_groups = tokens // gsz
+    cap = moe.capacity(gsz)
+
+    xg = x.reshape(n_groups, gsz, d)
+    xg = shard(xg, "moe_groups")
+    logits = jnp.einsum(
+        "gsd,de->gse", xg, p["router"].astype(dt), preferred_element_type=jnp.float32
+    )
+    gates = jax.nn.softmax(logits, axis=-1)
+    dispatch, combine = _dispatch_tensors(gates, moe.top_k, cap)
+    dispatch = dispatch.astype(dt)
+    combine = combine.astype(dt)
+
+    # dispatch: [G,S,E,C] x [G,S,d] -> expert slabs [G,E,C,d]
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg, preferred_element_type=dt)
+    xe = shard(xe, "moe_slots")
+    w1 = shard(p["w1"].astype(dt), "w_moe_in")  # explicit FSDP gathers
+    w3 = shard(p["w3"].astype(dt), "w_moe_in")
+    h = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", xe, w1, preferred_element_type=dt)
+    ) * jnp.einsum("gecd,edf->gecf", xe, w3, preferred_element_type=dt)
+    h = shard(h, "moe_ff")
+    ye = jnp.einsum(
+        "gecf,efd->gecd", h, shard(p["w2"].astype(dt), "w_moe_out"),
+        preferred_element_type=dt,
+    )
+    ye = shard(ye, "moe_slots")
+    # combine back: [G,S,E,C] x [G,E,C,d] -> [G,S,d]
+    y = jnp.einsum("gsec,gecd->gsd", combine, ye, preferred_element_type=dt)
+    return shard(y.reshape(b, s, d), "act_btd")
+
+
+def moe_decode(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Decode-path MoE for [B, 1, d]: dense-gather formulation.
+
+    With one token per sequence the capacity machinery degenerates; compute
+    all experts' FFNs on the tiny token batch and mix with top-k gates
+    (FLOPs = E/topk overhead on a [B, d] matmul — negligible vs attention
+    over the KV cache, and keeps the decode graph static).
+    """
+    assert cfg.moe is not None
+    dt = jnp.dtype(cfg.dtype)
+    b, s, d = x.shape
+    logits = jnp.einsum(
+        "bsd,de->bse", x, p["router"].astype(dt), preferred_element_type=jnp.float32
+    )
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(gates, cfg.moe.top_k)
+    top_vals = top_vals / jnp.sum(top_vals, axis=-1, keepdims=True)
+    mix = jnp.zeros_like(gates).at[
+        jnp.arange(b)[:, None, None],
+        jnp.arange(s)[None, :, None],
+        top_idx,
+    ].set(top_vals)  # [B,S,E] sparse gate weights
+    h = jax.nn.silu(
+        jnp.einsum("bsd,edf->bsef", x, p["w1"].astype(dt), preferred_element_type=dt)
+    ) * jnp.einsum("bsd,edf->bsef", x, p["w3"].astype(dt), preferred_element_type=dt)
+    # keep the (tiny) activations batch-sharded so the partitioner reshards
+    # them instead of all-gathering the multi-GB expert weights
+    h = shard(h, "moe_dec_h")
+    ye = jnp.einsum("bsef,efd->bsed", h, p["w2"].astype(dt), preferred_element_type=dt)
+    ye = shard(ye, "moe_dec_y")
+    return jnp.einsum("bse,bsed->bsd", mix.astype(dt), ye)

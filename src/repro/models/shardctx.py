@@ -1,0 +1,40 @@
+"""Logical-axis sharding hooks for model code.
+
+Model code annotates activations with *logical* names; the launcher installs
+a rule set mapping logical names to mesh ``PartitionSpec``s.  Outside a rule
+context (unit tests, single-device smoke runs) every hook is a no-op, so the
+model zoo runs unmodified on one CPU device.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules() -> Mapping[str, P] | None:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Mapping[str, P] | None):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def shard(x: jax.Array, name: str) -> jax.Array:
+    """Apply the PartitionSpec registered for ``name`` (no-op if absent)."""
+    rules = current_rules()
+    if rules is None or name not in rules:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules[name])

@@ -1,0 +1,405 @@
+"""Composable layer stack: pattern units, scan-over-layers, KV/state caches.
+
+The stack is organized as ``scan_unit``-sized *pattern units* (e.g. gemma3:
+five local-attention layers + one global layer), scanned ``n_units`` times
+with stacked parameters (one unit lowered once — keeps 62-layer HLO small
+and gives XLA's SPMD partitioner the FSDP gather-in-loop structure), plus an
+unscanned tail for non-dividing layer counts.
+
+Layer kinds (config.layer_kinds): attn, attn_local, attn_cross, mamba,
+mamba_shared_attn, mlstm, slstm.  MoE configs route the FFN of attention
+layers through the grouped-dispatch MoE.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, mamba2, moe, xlstm
+from repro.models.config import ArchConfig
+from repro.models.shardctx import shard
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Single layers
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key: jax.Array, kind: str, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"ln1": blocks.init_rmsnorm(cfg.d_model, cfg)}
+    if kind in ("attn", "attn_local"):
+        p["attn"] = blocks.init_attention(ks[0], cfg)
+        if cfg.d_ff > 0:
+            p["ln2"] = blocks.init_rmsnorm(cfg.d_model, cfg)
+            p["ffn"] = (
+                moe.init_moe(ks[1], cfg) if cfg.moe else blocks.init_mlp(ks[1], cfg)
+            )
+    elif kind == "attn_cross":
+        p["attn"] = blocks.init_attention(ks[0], cfg, cross=True)
+        p["gate"] = jnp.zeros((), jnp.dtype(cfg.param_dtype))
+        if cfg.d_ff > 0:
+            p["ln2"] = blocks.init_rmsnorm(cfg.d_model, cfg)
+            p["ffn"] = blocks.init_mlp(ks[1], cfg)
+    elif kind in ("mamba", "mamba_shared_attn"):
+        p["mamba"] = mamba2.init_mamba2(ks[0], cfg)
+    elif kind == "mlstm":
+        p["cell"] = xlstm.init_mlstm(ks[0], cfg)
+    elif kind == "slstm":
+        p["cell"] = xlstm.init_slstm(ks[0], cfg)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    return p
+
+
+def init_layer_cache(
+    kind: str, cfg: ArchConfig, batch: int, s_max: int, dtype
+) -> Params | None:
+    """Decode-time cache structure for one layer (None in train mode).
+
+    Sliding-window layers get a RING cache of size min(window, s_max)."""
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def kv(size):
+        return {
+            "k": jnp.zeros((batch, size, hkv, hd), dtype),
+            "v": jnp.zeros((batch, size, hkv, hd), dtype),
+        }
+
+    if kind == "attn_local" and cfg.sliding_window:
+        return kv(min(s_max, cfg.sliding_window))
+    if kind in ("attn", "attn_local"):
+        return kv(s_max)
+    if kind == "attn_cross":
+        return None  # image KV is recomputed from static context
+    if kind == "mamba":
+        return mamba2.init_mamba2_cache(cfg, batch, dtype)
+    if kind == "mamba_shared_attn":
+        return {"attn": kv(s_max), "mamba": mamba2.init_mamba2_cache(cfg, batch, dtype)}
+    if kind == "mlstm":
+        return xlstm.init_mlstm_cache(cfg, batch)
+    if kind == "slstm":
+        return xlstm.init_slstm_cache(cfg, batch)
+    raise ValueError(kind)  # pragma: no cover
+
+
+def _layer_window(kind: str, cfg: ArchConfig) -> int | None:
+    if kind == "attn_local":
+        return cfg.sliding_window
+    return None
+
+
+def apply_layer(
+    p: Params,
+    x: jax.Array,
+    kind: str,
+    cfg: ArchConfig,
+    *,
+    mode: str,  # train | prefill | decode
+    cache: Params | None = None,
+    lengths: jax.Array | None = None,
+    img_ctx: jax.Array | None = None,
+    shared_attn: Params | None = None,
+) -> tuple[jax.Array, Params | None]:
+    """Returns (x_out, cache_out).  cache_out is the written/updated cache in
+    prefill/decode modes, None in train mode."""
+    window = _layer_window(kind, cfg)
+    causal = not cfg.encoder_only
+    new_cache = None
+
+    if kind in ("attn", "attn_local"):
+        h = shard(blocks.apply_rmsnorm(p["ln1"], x, cfg.norm_eps), "act_attn_in")
+        if mode == "decode":
+            a, new_cache = blocks.decode_attention_step(
+                p["attn"], h, cache, lengths, cfg, window=window
+            )
+        else:
+            a = blocks.apply_attention(
+                p["attn"], h, cfg, causal=causal, window=window
+            )
+            if mode == "prefill":
+                dt = jnp.dtype(cfg.dtype)
+                k = jnp.einsum(
+                    "bsd,dhk->bshk", h,
+                    shard(p["attn"]["wk"].astype(dt), "w_kv"),
+                    preferred_element_type=dt,
+                )
+                v = jnp.einsum(
+                    "bsd,dhk->bshk", h,
+                    shard(p["attn"]["wv"].astype(dt), "w_kv"),
+                    preferred_element_type=dt,
+                )
+                pos = jnp.arange(h.shape[1])
+                sin, cos = blocks.rope_tables(
+                    pos, cfg.resolved_head_dim, cfg.rotary_fraction, cfg.rope_theta
+                )
+                k = blocks.apply_rope(k, sin[:, None], cos[:, None])
+                if kind == "attn_local" and window:
+                    # ring cache: keep the last `window` positions at slot
+                    # abs_pos % window (RoPE already applied absolutely)
+                    s = k.shape[1]
+                    w = min(s, window)
+                    k = jnp.roll(k[:, s - w :], (s - w) % w, axis=1)
+                    v = jnp.roll(v[:, s - w :], (s - w) % w, axis=1)
+                new_cache = {"k": shard(k, "cache_kv"), "v": shard(v, "cache_kv")}
+        x = x + a
+        if cfg.d_ff > 0:
+            h2 = shard(
+                blocks.apply_rmsnorm(p["ln2"], x, cfg.norm_eps), "act_attn_in"
+            )
+            if cfg.moe:
+                f = (
+                    moe.moe_decode(p["ffn"], h2, cfg)
+                    if mode == "decode"
+                    else moe.apply_moe(p["ffn"], h2, cfg)
+                )
+            else:
+                f = blocks.apply_mlp(p["ffn"], h2, cfg)
+            x = x + f
+
+    elif kind == "attn_cross":
+        h = shard(blocks.apply_rmsnorm(p["ln1"], x, cfg.norm_eps), "act_attn_in")
+        a = blocks.apply_attention(p["attn"], h, cfg, kv_src=img_ctx, causal=False)
+        x = x + jnp.tanh(p["gate"]).astype(x.dtype) * a
+        if cfg.d_ff > 0:
+            h2 = shard(
+                blocks.apply_rmsnorm(p["ln2"], x, cfg.norm_eps), "act_attn_in"
+            )
+            x = x + blocks.apply_mlp(p["ffn"], h2, cfg)
+
+    elif kind == "mamba":
+        h = shard(blocks.apply_rmsnorm(p["ln1"], x, cfg.norm_eps), "act_attn_in")
+        if mode == "decode":
+            m, new_cache = mamba2.apply_mamba2_decode(p["mamba"], h, cache, cfg)
+        elif mode == "prefill":
+            m, new_cache = mamba2.apply_mamba2(p["mamba"], h, cfg, return_state=True)
+        else:
+            m = mamba2.apply_mamba2(p["mamba"], h, cfg)
+        x = x + m
+
+    elif kind == "mamba_shared_attn":
+        # zamba2: shared-weight attention block, then the mamba block
+        h = shard(
+            blocks.apply_rmsnorm(shared_attn["ln"], x, cfg.norm_eps), "act_attn_in"
+        )
+        if mode == "decode":
+            a, attn_cache = blocks.decode_attention_step(
+                shared_attn["attn"], h, cache["attn"], lengths, cfg
+            )
+        else:
+            a = blocks.apply_attention(shared_attn["attn"], h, cfg, causal=True)
+            attn_cache = None
+            if mode == "prefill":
+                dt = jnp.dtype(cfg.dtype)
+                k = jnp.einsum(
+                    "bsd,dhk->bshk", h,
+                    shard(shared_attn["attn"]["wk"].astype(dt), "w_kv"),
+                    preferred_element_type=dt,
+                )
+                v = jnp.einsum(
+                    "bsd,dhk->bshk", h,
+                    shard(shared_attn["attn"]["wv"].astype(dt), "w_kv"),
+                    preferred_element_type=dt,
+                )
+                pos = jnp.arange(h.shape[1])
+                sin, cos = blocks.rope_tables(
+                    pos, cfg.resolved_head_dim, cfg.rotary_fraction, cfg.rope_theta
+                )
+                k = blocks.apply_rope(k, sin[:, None], cos[:, None])
+                attn_cache = {"k": shard(k, "cache_kv"), "v": shard(v, "cache_kv")}
+        x = x + a
+        if cfg.d_ff > 0:
+            h_mlp = shard(
+                blocks.apply_rmsnorm(shared_attn["ln2"], x, cfg.norm_eps),
+                "act_attn_in",
+            )
+            x = x + blocks.apply_mlp(shared_attn["mlp"], h_mlp, cfg)
+        h = shard(blocks.apply_rmsnorm(p["ln1"], x, cfg.norm_eps), "act_attn_in")
+        if mode == "decode":
+            m, mamba_cache = mamba2.apply_mamba2_decode(
+                p["mamba"], h, cache["mamba"], cfg
+            )
+        elif mode == "prefill":
+            m, mamba_cache = mamba2.apply_mamba2(p["mamba"], h, cfg, return_state=True)
+        else:
+            m = mamba2.apply_mamba2(p["mamba"], h, cfg)
+            mamba_cache = None
+        x = x + m
+        if mode != "train":
+            new_cache = {"attn": attn_cache, "mamba": mamba_cache}
+
+    elif kind in ("mlstm", "slstm"):
+        h = shard(blocks.apply_rmsnorm(p["ln1"], x, cfg.norm_eps), "act_attn_in")
+        if kind == "mlstm":
+            if mode == "decode":
+                y, new_cache = xlstm.apply_mlstm_decode(p["cell"], h, cache, cfg)
+            elif mode == "prefill":
+                y, new_cache = xlstm.apply_mlstm(p["cell"], h, cfg, return_state=True)
+            else:
+                y = xlstm.apply_mlstm(p["cell"], h, cfg)
+        else:
+            if mode == "decode":
+                y, new_cache = xlstm.apply_slstm_decode(p["cell"], h, cache, cfg)
+            elif mode == "prefill":
+                y, new_cache = xlstm.apply_slstm(p["cell"], h, cfg, return_state=True)
+            else:
+                y = xlstm.apply_slstm(p["cell"], h, cfg)
+        x = x + y
+
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stack: scanned pattern units + tail
+# ---------------------------------------------------------------------------
+
+
+def needs_shared_attn(cfg: ArchConfig) -> bool:
+    return any(k == "mamba_shared_attn" for k in cfg.layer_kinds())
+
+
+def init_stack(key: jax.Array, cfg: ArchConfig) -> Params:
+    unit, n_units, tail = cfg.scan_pattern()
+    k_units, k_tail, k_shared = jax.random.split(key, 3)
+
+    def init_unit(k):
+        return {
+            f"l{i}": init_layer(jax.random.fold_in(k, i), kind, cfg)
+            for i, kind in enumerate(unit)
+        }
+
+    p: Params = {}
+    if n_units:
+        p["units"] = jax.vmap(init_unit)(jax.random.split(k_units, n_units))
+    p["tail"] = {
+        f"t{i}": init_layer(jax.random.fold_in(k_tail, i), kind, cfg)
+        for i, kind in enumerate(tail)
+    }
+    if needs_shared_attn(cfg):
+        # zamba2: one shared attention+MLP block reused at every application
+        p["shared_attn"] = {
+            "ln": blocks.init_rmsnorm(cfg.d_model, cfg),
+            "attn": blocks.init_attention(k_shared, cfg),
+            "ln2": blocks.init_rmsnorm(cfg.d_model, cfg),
+            "mlp": blocks.init_mlp(jax.random.fold_in(k_shared, 1), cfg),
+        }
+    return p
+
+
+def init_stack_cache(cfg: ArchConfig, batch: int, s_max: int, dtype) -> Params:
+    unit, n_units, tail = cfg.scan_pattern()
+
+    def unit_cache():
+        return {
+            f"l{i}": init_layer_cache(kind, cfg, batch, s_max, dtype)
+            for i, kind in enumerate(unit)
+        }
+
+    cache: Params = {}
+    if n_units:
+        cache["units"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[unit_cache() for _ in range(n_units)]
+        )
+    cache["tail"] = {
+        f"t{i}": init_layer_cache(kind, cfg, batch, s_max, dtype)
+        for i, kind in enumerate(tail)
+    }
+    return cache
+
+
+def _remat_wrap(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = (
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        if cfg.remat == "dots"
+        else None
+    )
+    return jax.checkpoint(fn, policy=policy)
+
+
+def apply_stack(
+    p: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    mode: str,
+    cache: Params | None = None,
+    lengths: jax.Array | None = None,
+    img_ctx: jax.Array | None = None,
+) -> tuple[jax.Array, Params | None]:
+    unit, n_units, tail = cfg.scan_pattern()
+    shared = p.get("shared_attn")
+    want_cache = mode in ("prefill", "decode")
+
+    def apply_unit(unit_params, x, unit_cache):
+        new_caches = {}
+        for i, kind in enumerate(unit):
+            lc = unit_cache.get(f"l{i}") if unit_cache is not None else None
+            x, nc = apply_layer(
+                unit_params[f"l{i}"],
+                x,
+                kind,
+                cfg,
+                mode=mode,
+                cache=lc,
+                lengths=lengths,
+                img_ctx=img_ctx,
+                shared_attn=shared,
+            )
+            new_caches[f"l{i}"] = nc
+        return x, new_caches
+
+    new_unit_caches = None
+    if n_units:
+        if cache is not None:  # decode: thread per-unit caches through xs
+            def body(carry, xs):
+                unit_params, unit_cache = xs
+                y, ncache = apply_unit(unit_params, carry, unit_cache)
+                return y, ncache
+
+            x, new_unit_caches = jax.lax.scan(body, x, (p["units"], cache["units"]))
+        elif want_cache:  # prefill: emit produced caches as scan ys
+            def body(carry, unit_params):
+                y, ncache = apply_unit(unit_params, carry, None)
+                return y, ncache
+
+            x, new_unit_caches = jax.lax.scan(body, x, p["units"])
+        else:  # train: no caches; remat each unit
+
+            def body(carry, unit_params):
+                y, _ = apply_unit(unit_params, carry, None)
+                return y, None
+
+            x, _ = jax.lax.scan(_remat_wrap(body, cfg), x, p["units"])
+
+    new_tail = {}
+    for i, kind in enumerate(tail):
+        lc = cache["tail"].get(f"t{i}") if cache is not None else None
+        x, nc = apply_layer(
+            p["tail"][f"t{i}"],
+            x,
+            kind,
+            cfg,
+            mode=mode,
+            cache=lc,
+            lengths=lengths,
+            img_ctx=img_ctx,
+            shared_attn=shared,
+        )
+        new_tail[f"t{i}"] = nc
+
+    out_cache = None
+    if want_cache:
+        out_cache = {"tail": new_tail}
+        if n_units:
+            out_cache["units"] = new_unit_caches
+    return x, out_cache

@@ -1,0 +1,303 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, true recurrence) — Beck et al. 2024 [arXiv:2405.04517].
+
+Implementation notes (DESIGN.md assumptions log):
+ * mLSTM uses the chunkwise-parallel form (same machinery as SSD): intra-
+   chunk decay-masked q k^T matmuls on the MXU + an inter-chunk scan over
+   (C, n) state.  We use the bounded-gate variant (log-sigmoid forget gates,
+   clipped exponential input gates, fp32 accumulation, denominator
+   max(|q n|, 1)) rather than the paper's running-max stabilizer — tested
+   stable to 500k-step rollouts in fp32.
+ * sLSTM is a genuine hidden-to-hidden recurrence (block-diagonal R per
+   head) and cannot be parallelized over time; it runs as a lax.scan over
+   timesteps with the x-projections hoisted out of the loop.
+ * Per the xLSTM architecture these blocks replace attention+FFN entirely
+   (d_ff = 0 in the assigned config); the 48-layer stack alternates
+   mLSTM with an sLSTM every ``slstm_every`` layers (7:1).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.shardctx import shard
+
+Params = dict
+
+
+def _dims(cfg: ArchConfig):
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    return h, dh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key: jax.Array, cfg: ArchConfig) -> Params:
+    h, dh = _dims(cfg)
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    # projections: q, k, v (d each), gates i, f (h each), output gate z (d)
+    return {
+        "wqkvz": (jax.random.normal(ks[0], (d, 4 * d)) * s).astype(dt),
+        "wif": (jax.random.normal(ks[1], (d, 2 * h)) * s).astype(dt),
+        "b_if": jnp.concatenate(
+            [jnp.full((h,), -2.0), jnp.full((h,), 3.0)]
+        ).astype(dt),  # input gates start small, forget gates near 1
+        "norm_scale": jnp.zeros((d,), dt),
+        "out_proj": (
+            jax.random.normal(ks[2], (d, d)) * s / math.sqrt(cfg.n_layers)
+        ).astype(dt),
+    }
+
+
+def _mlstm_gates(p: Params, x: jax.Array, cfg: ArchConfig):
+    h, dh = _dims(cfg)
+    dt_c = jnp.dtype(cfg.dtype)
+    qkvz = jnp.einsum(
+        "...d,dk->...k", x, shard(p["wqkvz"].astype(dt_c), "w_dense"),
+        preferred_element_type=dt_c,
+    )
+    d = cfg.d_model
+    q, k, v, z = jnp.split(qkvz, 4, axis=-1)
+    gates = (x @ p["wif"].astype(dt_c)).astype(jnp.float32) + p["b_if"].astype(
+        jnp.float32
+    )
+    ig, fg = gates[..., :h], gates[..., h:]
+    log_f = jax.nn.log_sigmoid(fg)  # <= 0
+    log_i = jnp.clip(ig, -10.0, 10.0)  # bounded exponential input gate
+    shape = x.shape[:-1] + (h, dh)
+    return (
+        q.reshape(shape),
+        k.reshape(shape) / math.sqrt(dh),
+        v.reshape(shape),
+        z,
+        log_f,
+        log_i,
+    )
+
+
+def apply_mlstm(
+    p: Params, x: jax.Array, cfg: ArchConfig, *, return_state: bool = False
+):
+    """Full-sequence chunkwise mLSTM.  x: [B, S, d]."""
+    h, dh = _dims(cfg)
+    dt_c = jnp.dtype(cfg.dtype)
+    bsz, s, d = x.shape
+    qh, kh, vh, z, log_f, log_i = _mlstm_gates(p, x, cfg)
+    chunk = min(cfg.xlstm.mlstm_chunk, s)
+    while s % chunk:  # largest divisor <= chunk (odd smoke shapes)
+        chunk -= 1
+    n_chunks = s // chunk
+
+    def to_chunks(t, extra=()):
+        return jnp.moveaxis(
+            t.reshape((bsz, n_chunks, chunk) + t.shape[2:]), 1, 0
+        )
+
+    qc = to_chunks(qh.astype(jnp.float32))
+    kc = to_chunks(kh.astype(jnp.float32))
+    vc = to_chunks(vh.astype(jnp.float32))
+    fc = to_chunks(log_f)
+    ic = to_chunks(log_i)
+
+    def chunk_step(carry, inp):
+        c_state, n_state = carry  # [B,H,dh,dh], [B,H,dh]
+        qk, kk, vk, fk, ik = inp
+        cum = jnp.cumsum(fk, axis=1)  # [B,Q,H] inclusive
+        # intra-chunk: D[t,s] = exp(cum_t - cum_s + i_s), s <= t
+        diff = cum[:, :, None, :] - cum[:, None, :, :] + ik[:, None, :, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        # mask BEFORE exp (overflow + grad-NaN safety), exp(-inf) == 0
+        decay = jnp.exp(
+            jnp.where(tri[None, :, :, None], diff, -jnp.inf)
+        )  # [B,Q,Q,H]
+        scores = jnp.einsum("bthd,bshd->btsh", qk, kk) * decay
+        y_intra = jnp.einsum("btsh,bshd->bthd", scores, vk)
+        n_intra = jnp.einsum("btsh,bshd->bthd", decay, kk)
+        # inter-chunk state contribution
+        carry_scale = jnp.exp(cum)  # [B,Q,H]
+        y_state = jnp.einsum("bthd,bhde,bth->bthe", qk, c_state, carry_scale)
+        n_carry = jnp.einsum("bthd,bhd,bth->bth", qk, n_state, carry_scale)
+        denom_vec = jnp.einsum("bthd,bthd->bth", qk, n_intra) + n_carry
+        y = (y_intra + y_state) / jnp.maximum(jnp.abs(denom_vec), 1.0)[..., None]
+        # state update
+        w = jnp.exp(cum[:, -1:, :] - cum + ik)  # [B,Q,H]
+        c_new = c_state * jnp.exp(cum[:, -1])[:, :, None, None] + jnp.einsum(
+            "bth,bthd,bthe->bhde", w, kk, vk
+        )
+        n_new = n_state * jnp.exp(cum[:, -1])[:, :, None] + jnp.einsum(
+            "bth,bthd->bhd", w, kk
+        )
+        return (c_new, n_new), y
+
+    c0 = jnp.zeros((bsz, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((bsz, h, dh), jnp.float32)
+    (c_fin, n_fin), ys = jax.lax.scan(
+        jax.checkpoint(chunk_step), (c0, n0), (qc, kc, vc, fc, ic)
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, d).astype(dt_c)
+    y = y * jax.nn.silu(z)
+    xf = y.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = (
+        xf * jax.lax.rsqrt(var + cfg.norm_eps)
+        * (1.0 + p["norm_scale"].astype(jnp.float32))
+    ).astype(dt_c)
+    out = shard(y @ p["out_proj"].astype(dt_c), "act_btd")
+    if return_state:
+        return out, {"c": c_fin, "n": n_fin}
+    return out
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int) -> Params:
+    h, dh = _dims(cfg)
+    return {
+        "c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+    }
+
+
+def apply_mlstm_decode(
+    p: Params, x: jax.Array, cache: Params, cfg: ArchConfig
+) -> tuple[jax.Array, Params]:
+    """One-token recurrent step.  x: [B, 1, d]."""
+    h, dh = _dims(cfg)
+    dt_c = jnp.dtype(cfg.dtype)
+    bsz = x.shape[0]
+    qh, kh, vh, z, log_f, log_i = _mlstm_gates(p, x, cfg)
+    q1 = qh[:, 0].astype(jnp.float32)  # [B,H,dh]
+    k1 = kh[:, 0].astype(jnp.float32)
+    v1 = vh[:, 0].astype(jnp.float32)
+    f1 = jnp.exp(log_f[:, 0])[..., None, None]  # [B,H,1,1]
+    i1 = jnp.exp(log_i[:, 0])[..., None, None]
+    c_new = cache["c"] * f1 + i1 * k1[..., :, None] * v1[..., None, :]
+    n_new = cache["n"] * f1[..., 0] + i1[..., 0] * k1
+    num = jnp.einsum("bhd,bhde->bhe", q1, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q1, n_new)), 1.0)
+    y = (num / den[..., None]).reshape(bsz, 1, cfg.d_model).astype(dt_c)
+    y = y * jax.nn.silu(z)
+    xf = y.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = (
+        xf * jax.lax.rsqrt(var + cfg.norm_eps)
+        * (1.0 + p["norm_scale"].astype(jnp.float32))
+    ).astype(dt_c)
+    return y @ p["out_proj"].astype(dt_c), {"c": c_new, "n": n_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key: jax.Array, cfg: ArchConfig) -> Params:
+    h, dh = _dims(cfg)
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d)
+    return {
+        # x-projections for gates i, f, z, o
+        "wx": (jax.random.normal(ks[0], (d, 4 * d)) * s).astype(dt),
+        # block-diagonal recurrent matrices per head, per gate
+        "r": (jax.random.normal(ks[1], (4, h, dh, dh)) / math.sqrt(dh)).astype(dt),
+        "bias": jnp.concatenate(
+            [jnp.zeros((d,)), jnp.full((d,), 3.0), jnp.zeros((2 * d,))]
+        ).astype(dt),
+        "norm_scale": jnp.zeros((d,), dt),
+        "out_proj": (
+            jax.random.normal(ks[2], (d, d)) * s / math.sqrt(cfg.n_layers)
+        ).astype(dt),
+    }
+
+
+def _slstm_cell(p: Params, xg: jax.Array, state, cfg: ArchConfig):
+    """One sLSTM step.  xg: [B, 4d] precomputed x-projection + bias."""
+    h_, dh = _dims(cfg)
+    hp, cp, np_, mp = state  # h, c, n (all [B,d]), m [B,d] stabilizer
+    bsz = xg.shape[0]
+    hh = hp.reshape(bsz, h_, dh)
+    rec = jnp.einsum("bhd,ghde->bghe", hh.astype(jnp.float32), p["r"].astype(jnp.float32))
+    rec = rec.reshape(bsz, 4 * hp.shape[-1])
+    pre = xg.astype(jnp.float32) + rec
+    d = hp.shape[-1]
+    i_raw, f_raw, z_raw, o_raw = jnp.split(pre, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    log_i = jnp.clip(i_raw, -10.0, 10.0)
+    m_new = jnp.maximum(log_f + mp, log_i)
+    i_g = jnp.exp(log_i - m_new)
+    f_g = jnp.exp(log_f + mp - m_new)
+    z_g = jnp.tanh(z_raw)
+    o_g = jax.nn.sigmoid(o_raw)
+    c_new = f_g * cp + i_g * z_g
+    n_new = f_g * np_ + i_g
+    h_new = o_g * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new)
+
+
+def apply_slstm(
+    p: Params, x: jax.Array, cfg: ArchConfig, *, return_state: bool = False
+):
+    """Sequential scan over time.  x: [B, S, d]."""
+    dt_c = jnp.dtype(cfg.dtype)
+    bsz, s, d = x.shape
+    xg = jnp.einsum(
+        "bsd,dk->bsk", x, shard(p["wx"].astype(dt_c), "w_dense"),
+        preferred_element_type=dt_c,
+    ) + p["bias"].astype(dt_c)  # [B,S,4d]
+
+    def step(state, xg_t):
+        new = _slstm_cell(p, xg_t, state, cfg)
+        return new, new[0]
+
+    z0 = jnp.zeros((bsz, d), jnp.float32)
+    state0 = (z0, z0, z0, jnp.full((bsz, d), -1e9, jnp.float32))
+    fin, hs = jax.lax.scan(step, state0, jnp.moveaxis(xg, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(dt_c)
+    xf = y.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = (
+        xf * jax.lax.rsqrt(var + cfg.norm_eps)
+        * (1.0 + p["norm_scale"].astype(jnp.float32))
+    ).astype(dt_c)
+    out = shard(y @ p["out_proj"].astype(dt_c), "act_btd")
+    if return_state:
+        return out, {"h": fin[0], "c": fin[1], "n": fin[2], "m": fin[3]}
+    return out
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int) -> Params:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, d), -1e9, jnp.float32)}
+
+
+def apply_slstm_decode(
+    p: Params, x: jax.Array, cache: Params, cfg: ArchConfig
+) -> tuple[jax.Array, Params]:
+    dt_c = jnp.dtype(cfg.dtype)
+    bsz = x.shape[0]
+    xg = x[:, 0] @ p["wx"].astype(dt_c) + p["bias"].astype(dt_c)
+    state = (cache["h"], cache["c"], cache["n"], cache["m"])
+    h_new, c_new, n_new, m_new = _slstm_cell(p, xg, state, cfg)
+    y = h_new[:, None].astype(dt_c)
+    xf = y.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = (
+        xf * jax.lax.rsqrt(var + cfg.norm_eps)
+        * (1.0 + p["norm_scale"].astype(jnp.float32))
+    ).astype(dt_c)
+    return (
+        y @ p["out_proj"].astype(dt_c),
+        {"h": h_new, "c": c_new, "n": n_new, "m": m_new},
+    )

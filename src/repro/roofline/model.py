@@ -1,0 +1,179 @@
+"""Three-term roofline model (TPU v5e constants) + power-scaled variants.
+
+The same module serves two masters (DESIGN.md §7):
+ * §Roofline reporting at full power — compute/memory/collective seconds per
+   (arch x shape x mesh) from the dry-run's analyzed HLO;
+ * the EcoShift emulator — step time as a function of (host cap, chip cap),
+   which is how the 10 assigned architectures become "applications" with
+   power-performance surfaces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# -- TPU v5e hardware constants (per chip) ----------------------------------
+PEAK_BF16_FLOPS = 197e12  # MXU bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link (~4 links usable; we budget 1 link/term)
+CHIP_TDP_W = 250.0  # nominal chip power envelope used by the power model
+HOST_TDP_W = 450.0  # host (CPU) power envelope per 8-chip host
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    """All terms in seconds (per training/serving step, per device)."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    host_s: float = 0.0
+
+    @property
+    def step_s(self) -> float:
+        """Perfect-overlap model: the slowest engine wins."""
+        return max(self.compute_s, self.memory_s, self.collective_s, self.host_s)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+            "host": self.host_s,
+        }
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "host_s": self.host_s,
+            "step_s": self.step_s,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def terms_from_perdevice(
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes_per_device: float,
+    *,
+    freq_frac: float = 1.0,
+    host_bytes_per_device: float = 0.0,
+    host_frac: float = 1.0,
+) -> RooflineTerms:
+    """Roofline terms from per-device quantities (compiled SPMD module).
+
+    ``freq_frac`` scales the chip clock (power capping): MXU throughput
+    scales ~linearly with clock; HBM bandwidth is partially clock-coupled
+    (beta=0.5 exponent — memory controllers derate slower than core clock).
+    ``host_frac`` scales host-side throughput with the host power cap.
+    """
+    compute = flops_per_device / (PEAK_BF16_FLOPS * freq_frac)
+    memory = bytes_per_device / (HBM_BW * freq_frac**0.5)
+    collective = collective_bytes_per_device / ICI_BW
+    host = host_bytes_per_device / (2e9 * host_frac) if host_bytes_per_device else 0.0
+    return RooflineTerms(
+        compute_s=compute, memory_s=memory, collective_s=collective, host_s=host
+    )
+
+
+def model_flops(cfg, shape_info: dict) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE), D = tokens.
+
+    For decode steps D = batch (one token each).  Returns GLOBAL flops for
+    one step; divide by chips for the per-device 'useful' figure.
+    """
+    n = param_count(cfg, active_only=True)
+    if shape_info["kind"] == "train":
+        tokens = shape_info["batch"] * shape_info["seq"]
+        return 6.0 * n * tokens
+    if shape_info["kind"] == "prefill":
+        tokens = shape_info["batch"] * shape_info["seq"]
+        return 2.0 * n * tokens
+    return 2.0 * n * shape_info["batch"]  # decode: one token per sequence
+
+
+def param_count(cfg, *, active_only: bool = False) -> float:
+    """Analytic parameter count (embedding + per-layer weights)."""
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.padded_vocab
+    hd = cfg.resolved_head_dim
+    attn = d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    mlp = 3 * d * ff
+    total = 0.0
+    kinds = cfg.layer_kinds()
+    shared_counted = False
+    for k in kinds:
+        if k in ("attn", "attn_local", "attn_cross"):
+            total += attn
+            if ff:
+                if cfg.moe:
+                    e = cfg.moe.n_experts
+                    use = cfg.moe.top_k if active_only else e
+                    total += use * mlp + d * e
+                else:
+                    total += mlp
+        elif k in ("mamba", "mamba_shared_attn"):
+            ssm = cfg.ssm
+            d_in = ssm.d_inner(d)
+            nh = ssm.n_heads(d)
+            in_dim = 2 * d_in + 2 * ssm.d_state + nh
+            total += d * in_dim + d_in * d
+            if k == "mamba_shared_attn" and not shared_counted:
+                total += attn + (mlp if ff else 0)
+                shared_counted = True
+        elif k == "mlstm":
+            total += 4 * d * d + d * d  # qkvz + out
+        elif k == "slstm":
+            total += 4 * d * d + d * d  # wx + out (+ small R)
+    total += v * d  # embedding
+    if not cfg.tie_embeddings and not cfg.encoder_only:
+        total += v * d  # head
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Power-scaled performance surfaces for the EcoShift emulator
+# ---------------------------------------------------------------------------
+
+
+def freq_fraction(chip_power_w: float, *, tdp: float = CHIP_TDP_W) -> float:
+    """Monotone-concave DVFS curve: f/f_max as a function of the chip cap.
+
+    Below ~40% TDP the chip can't sustain base clocks (floor 0.25); above
+    TDP it saturates at 1.  Shape matches the diminishing-returns behaviour
+    the paper measures on A100/H100 (§2 Fig. 2).
+    """
+    x = np.clip(chip_power_w / tdp, 0.0, 1.5)
+    frac = 1.0 - np.exp(-(x - 0.18) / 0.35)
+    return float(np.clip(frac, 0.25, 1.0))
+
+
+def host_fraction(host_power_w: float, *, tdp: float = HOST_TDP_W) -> float:
+    x = np.clip(host_power_w / tdp, 0.0, 1.5)
+    frac = 1.0 - np.exp(-(x - 0.15) / 0.40)
+    return float(np.clip(frac, 0.25, 1.0))
+
+
+def step_time_under_caps(
+    flops_pd: float,
+    bytes_pd: float,
+    coll_pd: float,
+    host_bytes_pd: float,
+    chip_cap_w: float,
+    host_cap_w: float,
+) -> float:
+    """Emulator hook: step seconds under (host, chip) power caps."""
+    t = terms_from_perdevice(
+        flops_pd,
+        bytes_pd,
+        coll_pd,
+        freq_frac=freq_fraction(chip_cap_w),
+        host_bytes_per_device=host_bytes_pd,
+        host_frac=host_fraction(host_cap_w),
+    )
+    return t.step_s

@@ -1,0 +1,108 @@
+"""Batched serving engine: prefill -> padded KV cache -> greedy decode.
+
+Static-shape discipline throughout (dry-run and TPU friendly): the cache is
+pre-padded to ``s_max``, per-sequence validity is tracked by a ``lengths``
+vector, and every decode step is one fixed-shape jit call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+Params = dict[str, Any]
+
+
+def pad_cache_to(cache: Params, target: Params | int) -> Params:
+    """Pad every KV leaf's sequence axis (third from last) to its target.
+
+    ``target`` is either the abstract cache structure for the serving
+    ``s_max`` (ring-buffer leaves keep their window size) or a plain int
+    applied to all KV leaves.  Non-KV state leaves (SSM states, conv tails,
+    xLSTM matrix memories) pass through untouched.
+    """
+
+    def pad_leaf(leaf, want: int):
+        s = leaf.shape[-3]
+        if s < want:
+            widths = [(0, 0)] * leaf.ndim
+            widths[-3] = (0, want - s)
+            return jnp.pad(leaf, widths)
+        return leaf
+
+    if isinstance(target, int):
+        def pad(path, leaf):
+            key = path[-1].key if hasattr(path[-1], "key") else None
+            if key in ("k", "v") and leaf is not None:
+                return pad_leaf(leaf, target)
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(pad, cache)
+
+    def pad2(path, leaf, tgt):
+        key = path[-1].key if hasattr(path[-1], "key") else None
+        if key in ("k", "v") and leaf is not None:
+            return pad_leaf(leaf, tgt.shape[-3])
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(pad2, cache, target)
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: Model
+    params: Params
+    s_max: int
+
+    def __post_init__(self):
+        self._decode_jit = jax.jit(self.model.decode_step)
+        self._prefill_jit = jax.jit(self.model.prefill)
+
+    def prefill(self, batch: dict) -> tuple[jax.Array, Params, jax.Array]:
+        """Returns (next_tokens [B], padded cache, lengths [B])."""
+        key = "frames" if self.model.cfg.family == "audio" else "tokens"
+        b, s = batch[key].shape[:2]
+        logits, cache = self._prefill_jit(self.params, batch)
+        target = self.model.abstract_cache(b, self.s_max)
+        cache = pad_cache_to(cache, target)
+        lengths = jnp.full((b,), s, jnp.int32)
+        return jnp.argmax(logits, axis=-1), cache, lengths
+
+    def decode(
+        self,
+        first_tokens: jax.Array,  # [B]
+        cache: Params,
+        lengths: jax.Array,
+        n_steps: int,
+        *,
+        extra: dict | None = None,  # e.g. image_embeds for vlm
+    ) -> jax.Array:
+        """Greedy-decode ``n_steps`` tokens; returns [B, n_steps]."""
+        toks = first_tokens
+        out = []
+        for _ in range(n_steps):
+            batch = {"tokens": toks[:, None]}
+            if extra:
+                batch.update(extra)
+            logits, cache = self._decode_jit(self.params, batch, cache, lengths)
+            lengths = lengths + 1
+            toks = jnp.argmax(logits, axis=-1)
+            out.append(toks)
+        return jnp.stack(out, axis=1)
+
+    def generate(self, batch: dict, n_steps: int) -> jax.Array:
+        """prefill + greedy decode in one call."""
+        extra = (
+            {"image_embeds": batch["image_embeds"]}
+            if self.model.cfg.family == "vlm"
+            else None
+        )
+        first, cache, lengths = self.prefill(batch)
+        rest = self.decode(first, cache, lengths, n_steps - 1, extra=extra)
+        return jnp.concatenate([first[:, None], rest], axis=1)

@@ -1,0 +1,150 @@
+"""Mesh-agnostic checkpointing: atomic, versioned, elastically re-shardable.
+
+Format: one msgpack file per step holding {path: (dtype, shape, raw bytes)}
+plus a metadata dict.  Arrays are saved in LOGICAL (unsharded) form, so a
+checkpoint written on one mesh restores onto any other — elastic scaling is
+``load(..., shardings=new_mesh_shardings)`` and the arrays land directly in
+their new layout via ``jax.device_put``.
+
+Fault tolerance: writes go to ``<name>.tmp`` then os.replace (atomic on
+POSIX); ``latest_step`` ignores temporaries and half-written files, so a
+crash mid-save can never corrupt the restore path.  ``keep_n`` old steps are
+garbage-collected after each successful save.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import pathlib
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+_SEP = "\x1f"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path
+        )
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save_checkpoint(
+    path: str | pathlib.Path, tree: PyTree, metadata: dict | None = None
+) -> None:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    payload = {
+        "__meta__": metadata or {},
+        "arrays": {
+            k: {
+                "dtype": str(v.dtype),
+                "shape": list(v.shape),
+                "data": v.tobytes(),
+            }
+            for k, v in flat.items()
+        },
+    }
+    tmp = path.with_suffix(path.suffix + ".tmp")
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)  # atomic commit
+
+
+def load_checkpoint(
+    path: str | pathlib.Path,
+    template: PyTree,
+    *,
+    shardings: PyTree | None = None,
+) -> tuple[PyTree, dict]:
+    """Restore into the structure of ``template``.
+
+    ``shardings`` (same structure) places each array directly onto its
+    (possibly different-mesh) sharding — the elastic-rescale path.
+    """
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    arrays = payload["arrays"]
+
+    leaves_p = jax.tree_util.tree_leaves_with_path(template)
+    shard_leaves = (
+        jax.tree_util.tree_leaves(shardings) if shardings is not None else None
+    )
+    out_leaves = []
+    for i, (path_t, leaf) in enumerate(leaves_p):
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path_t
+        )
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        rec = arrays[key]
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"])).reshape(
+            rec["shape"]
+        )
+        want_shape = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(f"{key}: checkpoint {arr.shape} != template {want_shape}")
+        if shard_leaves is not None:
+            arr = jax.device_put(arr, shard_leaves[i])
+        out_leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, out_leaves), payload["__meta__"]
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str | pathlib.Path
+    keep_n: int = 3
+
+    def __post_init__(self):
+        self.directory = pathlib.Path(self.directory)
+        self.directory.mkdir(parents=True, exist_ok=True)
+
+    def _path(self, step: int) -> pathlib.Path:
+        return self.directory / f"step_{step:010d}.ckpt"
+
+    def save(self, step: int, tree: PyTree, metadata: dict | None = None) -> None:
+        meta = dict(metadata or {})
+        meta["step"] = step
+        save_checkpoint(self._path(step), tree, meta)
+        self._gc()
+
+    def steps(self) -> list[int]:
+        out = []
+        for p in self.directory.glob("step_*.ckpt"):
+            try:
+                out.append(int(p.stem.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(
+        self, template: PyTree, *, step: int | None = None, shardings=None
+    ) -> tuple[PyTree, dict]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        return load_checkpoint(self._path(step), template, shardings=shardings)
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[: -self.keep_n]:
+            self._path(s).unlink(missing_ok=True)

@@ -1,0 +1,181 @@
+"""Pure-JAX optimizers and schedules (no optax dependency).
+
+Implements the optax-style (init, update) GradientTransformation pair for
+AdamW with decoupled weight decay, global-norm clipping and warmup+cosine
+schedules.  Used by both the big-model training loop and the NCF predictor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], Any]
+    update: Callable[..., tuple[PyTree, Any]]
+
+
+def _tree_zeros_like(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    # preserve the gradient dtype: an f32-scalar multiply would silently
+    # upcast bf16 gradient trees to fp32 (2x transient memory)
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def adamw(
+    learning_rate: float | Callable[[jax.Array], jax.Array],
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    max_grad_norm: float | None = None,
+    mask: Callable[[PyTree], PyTree] | None = None,
+    factored: bool = False,
+    moment_dtype=jnp.float32,
+    update_chunks: int = 1,
+) -> Optimizer:
+    """AdamW with optional grad clipping, weight-decay mask, and memory-
+    factored second moments.
+
+    ``factored=True`` stores Adafactor-style (row, col) second-moment
+    factors for >=2D leaves instead of a full nu tensor — the distributed-
+    optimization memory trick that lets grok-1-314b's optimizer state fit a
+    single 256-chip pod (DESIGN.md §5).  ``moment_dtype=bf16`` halves the
+    first-moment footprint.  ``update_chunks > 1`` applies the update to
+    big stacked (scan-unit) leaves in sequential chunks along the unit dim,
+    bounding the fp32 transients of the update math to 1/chunks of the
+    leaf (the reason grok's update fits next to its gradients).
+    """
+
+    def _nu_init(p):
+        if factored and p.ndim >= 2:
+            row = jnp.zeros(p.shape[:-1], jnp.float32)
+            col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return {"row": row, "col": col}
+        return jnp.zeros_like(p, dtype=jnp.float32)
+
+    def init(params: PyTree) -> AdamState:
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(lambda p: jnp.zeros_like(p, dtype=moment_dtype), params),
+            nu=jax.tree.map(_nu_init, params),
+        )
+
+    def _nu_update_and_v(nu, g):
+        g2 = jnp.square(g.astype(jnp.float32)) + 1e-30
+        if isinstance(nu, dict):  # factored
+            row = b2 * nu["row"] + (1 - b2) * jnp.mean(g2, axis=-1)
+            col = b2 * nu["col"] + (1 - b2) * jnp.mean(g2, axis=-2)
+            v = (
+                row[..., :, None]
+                * col[..., None, :]
+                / jnp.maximum(jnp.mean(row, axis=-1, keepdims=True), 1e-30)[..., None]
+            )
+            return {"row": row, "col": col}, v
+        nu_new = b2 * nu + (1 - b2) * g2
+        return nu_new, nu_new
+
+    _is_factored = lambda x: isinstance(x, dict) and set(x) == {"row", "col"}
+
+    def update(grads: PyTree, state: AdamState, params: PyTree):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        lr = learning_rate(step) if callable(learning_rate) else learning_rate
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+        decay_mask = (
+            mask(params) if mask is not None else jax.tree.map(lambda _: True, params)
+        )
+
+        def leaf_update(p, m, nu, g, dm):
+            """(p_new, m_new, nu_new) for one leaf, fp32 math."""
+            m_new = (
+                b1 * m.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)
+            ).astype(moment_dtype)
+            nu_new, v = _nu_update_and_v(nu, g)
+            upd = (m_new.astype(jnp.float32) / b1c) / (jnp.sqrt(v / b2c) + eps)
+            if weight_decay:
+                upd = upd + jnp.where(dm, weight_decay, 0.0) * p.astype(jnp.float32)
+            p_new = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            return p_new, m_new, nu_new
+
+        def maybe_chunked(p, m, nu, g, dm):
+            chunkable = (
+                update_chunks > 1
+                and p.ndim >= 3
+                and p.shape[0] % update_chunks == 0
+                and p.size >= 1 << 22
+            )
+            if not chunkable:
+                return leaf_update(p, m, nu, g, dm)
+
+            def resh(x):
+                return x.reshape((update_chunks, x.shape[0] // update_chunks) + x.shape[1:])
+
+            xs = (resh(p), jax.tree.map(resh, m), jax.tree.map(resh, nu), resh(g))
+            outs = jax.lax.map(lambda a: leaf_update(*a, dm), xs)
+
+            def unresh(x):
+                return x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:])
+
+            return jax.tree.map(unresh, outs)
+
+        triples = jax.tree.map(
+            maybe_chunked, params, state.mu, state.nu, grads, decay_mask,
+            is_leaf=lambda x: _is_factored(x),
+        )
+        unpack = lambda i: jax.tree.map(
+            lambda t: t[i], triples, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        new_params, mu, nu = unpack(0), unpack(1), unpack(2)
+        return new_params, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def warmup_cosine(
+    peak_lr: float,
+    warmup_steps: int,
+    total_steps: int,
+    *,
+    min_ratio: float = 0.1,
+) -> Callable[[jax.Array], jax.Array]:
+    """Linear warmup then cosine decay to ``min_ratio * peak_lr``."""
+
+    def schedule(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule

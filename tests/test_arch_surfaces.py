@@ -1,0 +1,109 @@
+"""Roofline-derived architecture surfaces (dry-run -> EcoShift bridge)."""
+
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import arch_surfaces, policies
+from repro.core.arch_surfaces import RooflineSurface
+from repro.core.types import SYSTEM_TPU_V5E, AppSpec
+
+GRID = SYSTEM_TPU_V5E.grid
+
+
+def train_like():
+    """MXU-bound job: big flops, modest host work."""
+    return RooflineSurface(
+        flops_pd=5e13, bytes_pd=1e11, coll_pd=5e9, host_bytes_pd=1e6,
+        host_base_s=0.010,
+    )
+
+
+def decode_like():
+    """Host-bound job: tiny device step, big per-token host overhead."""
+    return RooflineSurface(
+        flops_pd=5e9, bytes_pd=5e9, coll_pd=1e8, host_bytes_pd=1e5,
+        host_base_s=0.020,
+    )
+
+
+def collective_like():
+    """ICI-bound job: no cap helps -> insensitive donor."""
+    return RooflineSurface(
+        flops_pd=1e12, bytes_pd=1e10, coll_pd=2e12, host_bytes_pd=1e5,
+        host_base_s=0.005,
+    )
+
+
+class TestRooflineSurface:
+    @pytest.mark.parametrize("surf", [train_like(), decode_like(), collective_like()])
+    def test_monotone_in_caps(self, surf):
+        caps = [(150, 100), (250, 150), (350, 200), (450, 250)]
+        ts = [float(surf.runtime(c, g)) for c, g in caps]
+        assert all(b <= a + 1e-12 for a, b in zip(ts, ts[1:]))
+
+    def test_train_job_is_chip_sensitive(self):
+        s = train_like()
+        base = (200.0, 120.0)
+        d_chip = float(s.improvement(base, 200, 250))
+        d_host = float(s.improvement(base, 450, 120))
+        assert d_chip > 0.2
+        assert d_chip > 5 * d_host
+
+    def test_decode_job_is_host_sensitive(self):
+        s = decode_like()
+        base = (170.0, 120.0)
+        d_host = float(s.improvement(base, 450, 120))
+        d_chip = float(s.improvement(base, 170, 250))
+        assert d_host > 0.15
+        assert d_host > 2 * d_chip
+
+    def test_collective_job_is_insensitive(self):
+        s = collective_like()
+        base = (200.0, 120.0)
+        assert float(s.improvement(base, 450, 250)) < 0.02
+
+    def test_power_draw_below_caps(self):
+        for surf in (train_like(), decode_like(), collective_like()):
+            dc, dg = surf.power_draw(300.0, 200.0)
+            assert dc <= 300.0 + 1e-9
+            assert dg <= 200.0 + 1e-9
+
+    def test_ecoshift_routes_power_by_job_type(self):
+        """Chip watts to the training job, host watts to the decode job."""
+        apps = [AppSpec("train", "G", "train"), AppSpec("decode", "C", "decode")]
+        surfs = {"train": train_like(), "decode": decode_like()}
+        base = {"train": (200.0, 120.0), "decode": (200.0, 120.0)}
+        alloc = policies.ecoshift(apps, base, 200.0, SYSTEM_TPU_V5E, surfs)
+        c_t, g_t = alloc.caps["train"]
+        c_d, g_d = alloc.caps["decode"]
+        assert g_t - 120.0 > c_t - 200.0  # train gets mostly chip watts
+        assert c_d - 200.0 > g_d - 120.0  # decode gets mostly host watts
+
+
+@pytest.mark.skipif(
+    not (pathlib.Path(arch_surfaces.DRYRUN_DIR)).exists()
+    or not list(pathlib.Path(arch_surfaces.DRYRUN_DIR).glob("*.json")),
+    reason="dry-run artifacts not present",
+)
+class TestBuiltSuite:
+    def test_loads_cells_with_classes(self):
+        apps, surfs = arch_surfaces.build_arch_suite()
+        assert len(apps) >= 20  # 32 cells on the single-pod mesh
+        assert len(surfs) == len(apps)
+        names = {a.name for a in apps}
+        assert any("train_4k" in n for n in names)
+        assert any("decode_32k" in n for n in names)
+        for a in apps[:10]:
+            t = float(surfs[a.name].runtime(300.0, 200.0))
+            assert np.isfinite(t) and t > 0
+
+    def test_cluster_round_on_arch_jobs(self):
+        from repro.core.emulator import ClusterEmulator
+
+        apps, surfs = arch_surfaces.build_arch_suite()
+        emu = ClusterEmulator.build(SYSTEM_TPU_V5E, apps, surfs, n_nodes=24, seed=0)
+        eco = emu.run_round("ecoshift", budget=1500.0)
+        dps = emu.run_round("dps", budget=1500.0)
+        assert eco.avg_improvement >= dps.avg_improvement - 0.005

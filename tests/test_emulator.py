@@ -1,0 +1,104 @@
+"""Cluster-emulator tests: partition, rounds, failures, stragglers."""
+
+import numpy as np
+import pytest
+
+from repro.core import emulator, surfaces, types
+from repro.core.types import AppSpec
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    system = types.SYSTEM_1
+    apps, surfs = surfaces.build_paper_suite(system)
+    return emulator.ClusterEmulator.build(
+        system, apps, surfs, n_nodes=40, seed=0
+    ), system
+
+
+class TestPartition:
+    def test_donors_are_insensitive_class(self, cluster):
+        emu, _ = cluster
+        donors, receivers, pool = emu.partition()
+        assert pool > 0
+        assert len(donors) + len(receivers) == 40
+        for d in donors:
+            assert d.app.sclass == types.CLASS_NONE
+
+    def test_pool_matches_headroom(self, cluster):
+        emu, system = cluster
+        donors, _, pool = emu.partition()
+        expect = 0.0
+        for d in donors:
+            nc, ng = emu.surfaces[d.base_app].power_draw(1e9, 1e9)
+            expect += (d.caps[0] - float(nc)) + (d.caps[1] - float(ng))
+        np.testing.assert_allclose(pool, expect)
+
+
+class TestRounds:
+    def test_explicit_budget_round(self, cluster):
+        emu, _ = cluster
+        res = emu.run_round("ecoshift", budget=1000.0)
+        assert res.budget == 1000.0
+        assert res.avg_improvement > 0
+        assert res.allocation.spent <= 1000.0 + 1e-6
+        assert 0 <= res.jain_index <= 1
+
+    def test_uniform_is_zero(self, cluster):
+        emu, _ = cluster
+        res = emu.run_round("uniform", budget=1000.0)
+        # pure measurement noise around zero
+        assert abs(res.avg_improvement) < 0.01
+
+    def test_ecoshift_beats_heuristics_with_true_surfaces(self, cluster):
+        emu, _ = cluster
+        b = 2000.0
+        eco = emu.run_round("ecoshift", budget=b)
+        dps = emu.run_round("dps", budget=b)
+        mad = emu.run_round("mixed_adaptive", budget=b)
+        assert eco.avg_improvement >= dps.avg_improvement - 0.005
+        assert eco.avg_improvement >= mad.avg_improvement - 0.005
+
+    def test_reproducible(self, cluster):
+        emu, _ = cluster
+        r1 = emu.run_round("dps", budget=500.0)
+        r2 = emu.run_round("dps", budget=500.0)
+        assert r1.improvements == r2.improvements
+
+
+class TestFaultTolerance:
+    def test_failed_node_returns_power_to_pool(self):
+        system = types.SYSTEM_1
+        apps, surfs = surfaces.build_paper_suite(system)
+        emu = emulator.ClusterEmulator.build(system, apps, surfs, n_nodes=20, seed=1)
+        _, _, pool0 = emu.partition()
+        victim = emu.alive_nodes()[0]
+        emu.fail_nodes([victim.node_id])
+        _, recv, pool1 = emu.partition()
+        assert all(n.node_id != victim.node_id for n in recv)
+        # pool grows by at least the victim's cap allotment minus its old slack
+        assert pool1 >= pool0
+        assert pool1 >= victim.caps[0] + victim.caps[1]
+
+    def test_reoptimization_after_failure_improves(self):
+        system = types.SYSTEM_1
+        apps, surfs = surfaces.build_paper_suite(system)
+        emu = emulator.ClusterEmulator.build(system, apps, surfs, n_nodes=20, seed=2)
+        base = emu.run_round("ecoshift")  # donor-derived pool
+        receivers = [n for n in emu.alive_nodes()]
+        emu.fail_nodes([receivers[0].node_id])
+        re_opt = emu.run_round("ecoshift")
+        # more watts per surviving receiver -> avg improvement not worse
+        assert re_opt.budget > base.budget
+        assert re_opt.avg_improvement >= base.avg_improvement - 0.01
+
+    def test_straggler_surface_slowdown(self):
+        system = types.SYSTEM_1
+        apps, surfs = surfaces.build_paper_suite(system)
+        emu = emulator.ClusterEmulator.build(system, apps, surfs, n_nodes=10, seed=3)
+        node = emu.alive_nodes()[0]
+        t0 = float(emu._surface(node).runtime(200.0, 200.0))
+        emu.add_straggler(node.node_id, slowdown=2.0)
+        node2 = [n for n in emu.alive_nodes() if n.node_id == node.node_id][0]
+        t1 = float(emu._surface(node2).runtime(200.0, 200.0))
+        np.testing.assert_allclose(t1, 2.0 * t0)

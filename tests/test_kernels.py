@@ -1,0 +1,189 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import decode_attention as dk
+from repro.kernels import flash_attention as fk
+from repro.kernels import mckp_dp
+from repro.kernels import ref
+from repro.kernels import rmsnorm as rk
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# (max,+) convolution
+# ---------------------------------------------------------------------------
+
+
+class TestMaxPlus:
+    @pytest.mark.parametrize("nb", [17, 64, 200, 513])
+    @pytest.mark.parametrize("block_b", [32, 128])
+    def test_matches_ref(self, nb, block_b):
+        rng = np.random.default_rng(nb + block_b)
+        dp = jnp.asarray(np.maximum.accumulate(rng.uniform(0, 1, nb)), jnp.float32)
+        f = jnp.asarray(np.maximum.accumulate(rng.uniform(0, 1, nb)), jnp.float32)
+        out_p, arg_p = mckp_dp.maxplus_conv_pallas(dp, f, block_b=block_b)
+        out_r, arg_r = ref.maxplus_conv(dp, f)
+        np.testing.assert_allclose(out_p, out_r, rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(arg_p), np.asarray(arg_r))
+
+    def test_monotone_inputs_monotone_output(self):
+        rng = np.random.default_rng(0)
+        dp = jnp.asarray(np.maximum.accumulate(rng.uniform(0, 1, 128)), jnp.float32)
+        f = jnp.asarray(np.maximum.accumulate(rng.uniform(0, 1, 128)), jnp.float32)
+        out, _ = mckp_dp.maxplus_conv_pallas(dp, f)
+        assert np.all(np.diff(np.asarray(out)) >= -1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "b,sq,skv,hq,hkv,d",
+        [
+            (2, 128, 128, 4, 4, 64),  # MHA
+            (1, 128, 128, 8, 2, 64),  # GQA 4x
+            (2, 96, 160, 4, 1, 32),  # MQA, ragged block tails
+        ],
+    )
+    def test_causal_matches_ref(self, dtype, b, sq, skv, hq, hkv, d):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (b, sq, hq, d), dtype)
+        k = jax.random.normal(ks[1], (b, skv, hkv, d), dtype)
+        v = jax.random.normal(ks[2], (b, skv, hkv, d), dtype)
+        out = fk.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+        want = ref.mha_reference(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+        )
+
+    @pytest.mark.parametrize("window", [32, 64])
+    def test_sliding_window(self, window):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (1, 128, 4, 32), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 128, 4, 32), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 128, 4, 32), jnp.float32)
+        out = fk.flash_attention(
+            q, k, v, causal=True, window=window, block_q=32, block_k=32
+        )
+        want = ref.mha_reference(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+    def test_bidirectional_and_softcap(self):
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (2, 64, 2, 32), jnp.float32)
+        k = jax.random.normal(ks[1], (2, 64, 2, 32), jnp.float32)
+        v = jax.random.normal(ks[2], (2, 64, 2, 32), jnp.float32)
+        out = fk.flash_attention(
+            q, k, v, causal=False, softcap=30.0, block_q=32, block_k=32
+        )
+        want = ref.mha_reference(q, k, v, causal=False, logit_softcap=30.0)
+        np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+    def test_matches_blocked_jax_path(self):
+        """The pure-jax blocked attention (model default) == kernel == ref."""
+        from repro.models import blocks as mblocks
+
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(ks[0], (2, 128, 8, 32), jnp.float32)
+        k = jax.random.normal(ks[1], (2, 128, 2, 32), jnp.float32)
+        v = jax.random.normal(ks[2], (2, 128, 2, 32), jnp.float32)
+        out_jax = mblocks.blocked_attention(q, k, v, causal=True)
+        out_ker = fk.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+        want = ref.mha_reference(q, k, v, causal=True)
+        np.testing.assert_allclose(out_jax, want, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(out_ker, want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention
+# ---------------------------------------------------------------------------
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "b,s,hq,hkv,d", [(4, 256, 8, 2, 64), (2, 200, 4, 4, 32), (3, 512, 16, 8, 64)]
+    )
+    def test_matches_ref(self, dtype, b, s, hq, hkv, d):
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        q = jax.random.normal(ks[0], (b, hq, d), dtype)
+        kc = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+        vc = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+        lengths = jax.random.randint(ks[3], (b,), 1, s + 1)
+        out = dk.decode_attention(q, kc, vc, lengths, block_k=64)
+        want = ref.decode_attention_reference(q, kc, vc, lengths)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+        )
+
+    def test_length_one(self):
+        """Degenerate cache with a single valid entry."""
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (2, 4, 32), jnp.float32)
+        kc = jax.random.normal(ks[1], (2, 128, 2, 32), jnp.float32)
+        vc = jax.random.normal(ks[2], (2, 128, 2, 32), jnp.float32)
+        lengths = jnp.array([1, 1], jnp.int32)
+        out = dk.decode_attention(q, kc, vc, lengths, block_k=64)
+        want = ref.decode_attention_reference(q, kc, vc, lengths)
+        np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+class TestRMSNorm:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("shape", [(4, 64, 256), (3, 100, 128), (1, 1, 512)])
+    def test_matches_ref(self, dtype, shape):
+        ks = jax.random.split(jax.random.PRNGKey(0), 2)
+        x = jax.random.normal(ks[0], shape, dtype)
+        scale = 0.1 * jax.random.normal(ks[1], shape[-1:], jnp.float32)
+        out = rk.rmsnorm(x, scale, block_rows=32)
+        want = ref.rmsnorm(x, scale)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep on the maxplus kernel (system invariant)
+# ---------------------------------------------------------------------------
+
+import hypothesis
+import hypothesis.strategies as st
+
+
+@hypothesis.given(
+    nb=st.integers(2, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_maxplus_property(nb, seed):
+    """out[b] >= dp[b] + f[0] and out[b] >= dp[0] + f[b] (feasible picks)."""
+    rng = np.random.default_rng(seed)
+    dp = jnp.asarray(np.maximum.accumulate(rng.uniform(0, 1, nb)), jnp.float32)
+    f = jnp.asarray(np.maximum.accumulate(rng.uniform(0, 1, nb)), jnp.float32)
+    out, arg = ref.maxplus_conv(dp, f)
+    out = np.asarray(out)
+    dp_n, f_n = np.asarray(dp), np.asarray(f)
+    assert np.all(out >= dp_n + f_n[0] - 1e-6)
+    assert np.all(out >= dp_n[0] + f_n[np.arange(nb)] - 1e-6)
+    # argmax is a real maximizer
+    ks = np.asarray(arg)
+    bs = np.arange(nb)
+    np.testing.assert_allclose(out, dp_n[bs - ks] + f_n[ks], rtol=1e-6)

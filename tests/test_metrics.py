@@ -1,0 +1,65 @@
+"""Metric properties (Jain's index, CIs, gap CDF)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+
+from repro.core import metrics
+
+
+@hypothesis.given(
+    xs=st.lists(st.floats(0.0, 100.0), min_size=1, max_size=50),
+)
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_jain_range(xs):
+    x = np.array(xs)
+    j = metrics.jain_index(x)
+    n = len(xs)
+    assert 1.0 / n - 1e-9 <= j <= 1.0 + 1e-9
+
+
+@hypothesis.given(
+    xs=st.lists(st.floats(0.01, 100.0), min_size=2, max_size=30),
+    scale=st.floats(0.1, 10.0),
+)
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_jain_scale_invariant(xs, scale):
+    x = np.array(xs)
+    np.testing.assert_allclose(
+        metrics.jain_index(x), metrics.jain_index(scale * x), rtol=1e-9
+    )
+
+
+def test_jain_extremes():
+    assert metrics.jain_index(np.ones(10)) == 1.0
+    one_hot = np.zeros(10)
+    one_hot[3] = 5.0
+    np.testing.assert_allclose(metrics.jain_index(one_hot), 0.1)
+    assert metrics.jain_index(np.array([])) == 1.0
+    assert metrics.jain_index(np.zeros(5)) == 1.0
+
+
+def test_mean_ci98_contains_mean():
+    rng = np.random.default_rng(0)
+    s = rng.normal(5.0, 1.0, size=100)
+    m, lo, hi = metrics.mean_ci98(s)
+    assert lo < m < hi
+    np.testing.assert_allclose(m, np.mean(s))
+    # 98% CI is wider than a 95% normal CI would be
+    assert (hi - lo) / 2 > 1.9 * np.std(s, ddof=1) / 10
+
+
+def test_prediction_accuracy():
+    acc = metrics.prediction_accuracy(np.array([1.0, 2.0]), np.array([1.0, 1.8]))
+    np.testing.assert_allclose(acc, [1.0, 0.9])
+
+
+def test_gap_cdf_summary():
+    gaps = np.array([0.5, 0.9, 1.5, 1.8, 2.5, 2.9, 0.2, 1.1, 1.3, 3.5])
+    g, cdf, s = metrics.gap_cdf(gaps)
+    assert np.all(np.diff(g) >= 0)
+    assert cdf[-1] == 1.0
+    np.testing.assert_allclose(s["frac_within_1pp"], 0.3)
+    np.testing.assert_allclose(s["frac_within_2pp"], 0.7)
+    np.testing.assert_allclose(s["frac_within_3pp"], 0.9)
+    assert s["median"] == np.median(gaps)

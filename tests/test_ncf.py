@@ -1,0 +1,95 @@
+"""NCF predictor tests (paper §3.1): accuracy band + online inference."""
+
+import numpy as np
+import pytest
+
+from repro.core import metrics, ncf, profiler, surfaces, types
+from repro.core.allocator import EcoShiftAllocator
+
+#: small config so the test suite stays fast; benchmarks use the full one
+FAST = ncf.NCFConfig(train_steps=900, online_steps=300, embed_dim=12)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    system = types.SYSTEM_1
+    apps, surfs = surfaces.build_paper_suite(system)
+    train_apps, test_apps = apps[:30], apps[30:]
+    hist = {a.name: surfs[a.name] for a in train_apps}
+    alloc = EcoShiftAllocator.train_offline(system, hist, FAST)
+    return system, alloc, surfs, train_apps, test_apps
+
+
+def _accuracy(system, pred_surface, true_surface):
+    base = (system.init_cpu, system.init_gpu)
+    grid = system.grid
+    cc, gg = np.meshgrid(grid.cpu_levels, grid.gpu_levels, indexing="ij")
+    p_true = true_surface.runtime(*base) / true_surface.runtime(cc, gg)
+    p_pred = pred_surface.runtime(*base) / pred_surface.runtime(cc, gg)
+    return float(
+        np.mean(metrics.prediction_accuracy(p_true.ravel(), p_pred.ravel()))
+    )
+
+
+class TestOfflineFit:
+    def test_historical_app_accuracy(self, trained):
+        """Seen apps should be reconstructed well above the paper's band."""
+        system, alloc, surfs, train_apps, _ = trained
+        accs = []
+        for a in train_apps[:8]:
+            alloc.onboard_known(a.name)
+            accs.append(_accuracy(system, alloc.predicted[a.name], surfs[a.name]))
+        assert np.mean(accs) > 0.93
+
+
+class TestOnlineInference:
+    def test_unseen_app_accuracy_in_paper_band(self, trained):
+        """§6.1: mean accuracy ~93-95% (ours >= 0.90 with the fast config)."""
+        system, alloc, surfs, _, test_apps = trained
+        accs = []
+        for i, a in enumerate(test_apps):
+            alloc.onboard(a.name, surfs[a.name], seed=i)
+            accs.append(_accuracy(system, alloc.predicted[a.name], surfs[a.name]))
+        assert np.mean(accs) > 0.90
+
+    def test_onboard_does_not_touch_shared_params(self, trained):
+        system, alloc, surfs, _, test_apps = trained
+        before = {
+            k: np.array(v)
+            for k, v in alloc.predictor.params.items()
+            if k in ("cfg_gmf", "head_w")
+        }
+        alloc.onboard("probe", surfs[test_apps[0].name], seed=99)
+        after = alloc.predictor.params
+        np.testing.assert_array_equal(before["cfg_gmf"], after["cfg_gmf"])
+        np.testing.assert_array_equal(before["head_w"], after["head_w"])
+
+    def test_predicted_surface_usable_by_allocator(self, trained):
+        system, alloc, surfs, _, test_apps = trained
+        recv = [test_apps[0], test_apps[1]]
+        for i, a in enumerate(recv):
+            if a.name not in alloc.predicted:
+                alloc.onboard(a.name, surfs[a.name], seed=i)
+        baselines = {a.name: (system.init_cpu, system.init_gpu) for a in recv}
+        allocation = alloc.allocate(recv, baselines, 300.0)
+        assert allocation.spent <= 300.0 + 1e-6
+        assert len(allocation.caps) == 2
+
+
+class TestProfiler:
+    def test_sampling_plan_on_grid(self):
+        system = types.SYSTEM_2
+        plan = profiler.sampling_plan(system, 8)
+        assert len(plan) == 8
+        assert len(set(plan)) == 8
+        for c, g in plan:
+            assert c in system.grid.cpu_levels
+            assert g in system.grid.gpu_levels
+
+    def test_profile_measures_with_noise(self):
+        system = types.SYSTEM_2
+        s = surfaces.cfd_surface()
+        obs = profiler.profile_app(s, system, n_samples=6, seed=0)
+        assert len(obs) == 6
+        for (c, g), t in obs.items():
+            np.testing.assert_allclose(t, float(s.runtime(c, g)), rtol=0.05)

@@ -1,0 +1,136 @@
+"""HLO analyzer + roofline model tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import hlo as H
+from repro.roofline import model as roof
+
+
+def _compile_text(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile().as_text()
+
+
+class TestTripCounts:
+    def test_scan_flops_recovered(self):
+        """cost_analysis undercounts scan bodies; the walker recovers them."""
+        n, d = 8, 128
+
+        def f(ws, x):
+            def body(c, w):
+                return jnp.tanh(c @ w), None
+
+            y, _ = jax.lax.scan(body, x, ws)
+            return y.sum()
+
+        ws = jax.ShapeDtypeStruct((n, d, d), jnp.float32)
+        x = jax.ShapeDtypeStruct((d, d), jnp.float32)
+        txt = _compile_text(f, ws, x)
+        costs = H.analyze(txt)
+        want = 2 * n * d**3
+        assert abs(costs.dot_flops - want) / want < 0.05
+        assert n in costs.while_trips
+
+    def test_nested_scan_multiplies(self):
+        n_out, n_in, d = 4, 3, 64
+
+        def f(ws, x):
+            def outer(c, w):
+                def inner(ci, _):
+                    return jnp.tanh(ci @ w), None
+
+                c2, _ = jax.lax.scan(inner, c, None, length=n_in)
+                return c2, None
+
+            y, _ = jax.lax.scan(outer, x, ws)
+            return y.sum()
+
+        ws = jax.ShapeDtypeStruct((n_out, d, d), jnp.float32)
+        x = jax.ShapeDtypeStruct((d, d), jnp.float32)
+        costs = H.analyze(_compile_text(f, ws, x))
+        want = 2 * n_out * n_in * d**3
+        assert abs(costs.dot_flops - want) / want < 0.05
+
+
+class TestTrafficModel:
+    def test_scan_params_billed_once(self):
+        """Stacked scan params are dynamic-sliced: total reads ~= one pass
+        over the stack, not stack-size x trips."""
+        n, d = 16, 256
+
+        def f(ws, x):
+            def body(c, w):
+                return jnp.tanh(c @ w), None
+
+            y, _ = jax.lax.scan(body, x, ws)
+            return y.sum()
+
+        ws = jax.ShapeDtypeStruct((n, d, d), jnp.float32)
+        x = jax.ShapeDtypeStruct((d, d), jnp.float32)
+        costs = H.analyze(_compile_text(f, ws, x))
+        stack_bytes = n * d * d * 4
+        # generous bound: a few passes over the stack, NOT n passes
+        assert costs.traffic_bytes < 6 * stack_bytes
+
+    def test_shape_parsing(self):
+        assert H._bytes_of("bf16[8,128,64]{2,1,0}") == 8 * 128 * 64 * 2
+        assert H._bytes_of("f32[16]") == 64
+        assert H._bytes_of("(f32[4,4], s32[2])") == 64 + 8
+        assert H._bytes_of("pred[]") == 1
+
+
+class TestCollectives:
+    def test_collective_weights(self):
+        c = H.HLOCosts()
+        c.add_collective("all-reduce", 100.0, 2.0)
+        c.add_collective("all-gather", 100.0, 1.0)
+        assert c.collective_bytes == 2 * 100 * 2 + 100
+        assert c.collective_counts["all-reduce"] == 2
+
+
+class TestRooflineModel:
+    def test_terms_and_bottleneck(self):
+        t = roof.terms_from_perdevice(197e12, 0.0, 0.0)
+        np.testing.assert_allclose(t.compute_s, 1.0)
+        assert t.bottleneck == "compute"
+        t2 = roof.terms_from_perdevice(1.0, 819e9, 0.0)
+        np.testing.assert_allclose(t2.memory_s, 1.0)
+        assert t2.bottleneck == "memory"
+
+    def test_power_scaling_monotone(self):
+        fr = [roof.freq_fraction(p) for p in (60, 120, 180, 250, 300)]
+        assert all(b >= a for a, b in zip(fr, fr[1:]))
+        assert fr[0] >= 0.25 and fr[-1] <= 1.0
+        # diminishing returns: later steps gain less
+        gains = np.diff(fr)
+        assert gains[-1] < gains[0]
+
+    def test_model_flops_dense_vs_moe(self):
+        from repro import configs
+
+        dense = configs.get_config("mistral-nemo-12b")
+        moe = configs.get_config("mixtral-8x22b")
+        info = {"kind": "train", "batch": 256, "seq": 4096}
+        n_dense = roof.param_count(dense)
+        n_moe_all = roof.param_count(moe)
+        n_moe_act = roof.param_count(moe, active_only=True)
+        assert 11e9 < n_dense < 14e9
+        assert 130e9 < n_moe_all < 150e9
+        assert 35e9 < n_moe_act < 45e9  # top-2 of 8 experts
+        assert roof.model_flops(moe, info) == pytest.approx(
+            6.0 * n_moe_act * 256 * 4096
+        )
+
+    def test_param_counts_match_zoo(self):
+        """Analytic count ~= actual initialized parameter count."""
+        from repro import configs
+        from repro.models.model import Model
+
+        for arch in ("granite-3-2b", "xlstm-1.3b", "zamba2-2.7b"):
+            cfg = configs.get_config(arch)
+            abstract = Model(cfg).abstract_params()
+            actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(abstract))
+            analytic = roof.param_count(cfg)
+            assert abs(actual - analytic) / actual < 0.10, arch

@@ -1,0 +1,143 @@
+"""Power-performance surface tests: paper-anchor exactness + invariants."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core import surfaces, types
+
+SYS1, SYS2 = types.SYSTEM_1, types.SYSTEM_2
+
+
+class TestAnchors:
+    """Fig. 2 calibration: the published cfd/raytracing gains, exactly."""
+
+    def test_cfd_cpu_steps(self):
+        s = surfaces.cfd_surface()
+        base = (300.0, 200.0)
+        np.testing.assert_allclose(s.improvement(base, 400, 200), 0.170, atol=2e-4)
+        t4, t5 = s.runtime(400, 200), s.runtime(500, 200)
+        np.testing.assert_allclose((t4 - t5) / t4, 0.076, atol=2e-4)
+
+    def test_raytracing_gpu_steps(self):
+        s = surfaces.raytracing_surface()
+        base = (300.0, 200.0)
+        np.testing.assert_allclose(s.improvement(base, 300, 300), 0.155, atol=2e-4)
+        t3, t4 = s.runtime(300, 300), s.runtime(300, 400)
+        np.testing.assert_allclose((t3 - t4) / t3, 0.021, atol=2e-4)
+
+    def test_cross_component_insensitivity(self):
+        """Extra GPU power barely helps cfd; extra CPU barely helps rt (§2)."""
+        cfd = surfaces.cfd_surface()
+        rt = surfaces.raytracing_surface()
+        base = (300.0, 200.0)
+        assert cfd.improvement(base, 300, 400) < 0.03
+        assert rt.improvement(base, 500, 200) < 0.05
+
+
+class TestSpeedCurveFit:
+    def test_fit_reproduces_ratios(self):
+        c = surfaces.fit_saturating_curve(300, 400, 500, 0.17, 0.076)
+        r1 = c(400) / c(300)
+        r2 = c(500) / c(400)
+        np.testing.assert_allclose(r1, 1 / (1 - 0.17), rtol=1e-6)
+        np.testing.assert_allclose(r2, 1 / (1 - 0.076), rtol=1e-6)
+
+    def test_monotone(self):
+        c = surfaces.SpeedCurve(p0=100.0, tau=80.0)
+        ps = np.linspace(50, 600, 200)
+        vals = c(ps)
+        assert np.all(np.diff(vals) >= 0)
+        assert np.all(vals <= 1.0) and np.all(vals > 0)
+
+
+@hypothesis.given(
+    sclass=st.sampled_from(types.SENSITIVITY_CLASSES),
+    seed=st.integers(0, 2**31 - 1),
+    c1=st.floats(200, 500),
+    c2=st.floats(200, 500),
+    g1=st.floats(100, 500),
+    g2=st.floats(100, 500),
+)
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_runtime_monotone_in_caps(sclass, seed, c1, c2, g1, g2):
+    """More power never hurts: T is non-increasing in each cap (property)."""
+    rng = np.random.default_rng(seed)
+    s = surfaces._random_surface(rng, sclass, SYS2)
+    lo_c, hi_c = min(c1, c2), max(c1, c2)
+    lo_g, hi_g = min(g1, g2), max(g1, g2)
+    assert s.runtime(hi_c, hi_g) <= s.runtime(lo_c, lo_g) + 1e-9
+    assert s.runtime(hi_c, lo_g) <= s.runtime(lo_c, lo_g) + 1e-9
+    assert s.runtime(lo_c, hi_g) <= s.runtime(lo_c, lo_g) + 1e-9
+
+
+class TestSuite:
+    def test_table1_suite_composition(self):
+        apps, surfs = surfaces.build_paper_suite(SYS2)
+        assert len(apps) == 40
+        assert len(surfs) == 40
+        counts = {c: sum(1 for a in apps if a.sclass == c) for c in "CGBN"}
+        # Table 1 class histogram
+        assert counts == {"C": 17, "G": 8, "B": 9, "N": 6}
+
+    def test_insensitive_apps_are_donors(self):
+        """N-class natural draw sits below the initial caps on both axes."""
+        apps, surfs = surfaces.build_paper_suite(SYS1)
+        for a in apps:
+            if a.sclass == types.CLASS_NONE:
+                nc, ng = surfs[a.name].power_draw(1e9, 1e9)
+                assert nc < SYS1.init_cpu
+                assert ng < SYS1.init_gpu
+
+    def test_deterministic_suite(self):
+        a1, s1 = surfaces.build_paper_suite(SYS2)
+        a2, s2 = surfaces.build_paper_suite(SYS2)
+        for x, y in zip(a1, a2):
+            assert x == y
+        for n in s1:
+            np.testing.assert_array_equal(
+                s1[n].runtime(350, 350), s2[n].runtime(350, 350)
+            )
+
+    def test_class_sensitivity_profiles(self):
+        """C-class: CPU steps matter, GPU steps don't (and vice versa)."""
+        apps, surfs = surfaces.build_paper_suite(SYS2)
+        grid = SYS2.grid
+        base = (grid.cpu_min + 50, grid.gpu_min + 50)
+        for a in apps:
+            s = surfs[a.name]
+            d_cpu = float(s.improvement(base, grid.cpu_max, base[1]))
+            d_gpu = float(s.improvement(base, base[0], grid.gpu_max))
+            if a.sclass == types.CLASS_CPU:
+                assert d_cpu > 2 * d_gpu, a.name
+            elif a.sclass == types.CLASS_GPU:
+                assert d_gpu > 2 * d_cpu, a.name
+            elif a.sclass == types.CLASS_NONE:
+                assert d_cpu < 0.12 and d_gpu < 0.12, a.name
+
+
+class TestTabulated:
+    def test_matches_analytic_on_grid(self):
+        s = surfaces.cfd_surface()
+        tab = surfaces.tabulate(s, SYS2)
+        for c in SYS2.grid.cpu_levels[::3]:
+            for g in SYS2.grid.gpu_levels[::3]:
+                np.testing.assert_allclose(
+                    tab.runtime(c, g), s.runtime(c, g), rtol=1e-12
+                )
+
+    def test_interpolation_between_grid_points(self):
+        s = surfaces.raytracing_surface()
+        tab = surfaces.tabulate(s, SYS2)
+        # bilinear interp should be within a few % of the smooth surface
+        val = tab.runtime(312.5, 237.5)
+        np.testing.assert_allclose(val, s.runtime(312.5, 237.5), rtol=0.05)
+
+    def test_vectorized_lookup(self):
+        s = surfaces.cfd_surface()
+        tab = surfaces.tabulate(s, SYS2)
+        cs = np.array([250.0, 300.0, 450.0])
+        gs = np.array([150.0, 250.0, 350.0])
+        out = tab.runtime(cs, gs)
+        assert out.shape == (3,)

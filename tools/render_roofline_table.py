@@ -1,0 +1,55 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python tools/render_roofline_table.py [--mesh 16x16]
+"""
+
+import argparse
+import json
+import pathlib
+
+DRY = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCHS = [
+    "chatglm3-6b", "granite-3-2b", "mistral-nemo-12b", "gemma3-27b",
+    "hubert-xlarge", "mixtral-8x22b", "grok-1-314b", "zamba2-2.7b",
+    "llama-3.2-vision-11b", "xlstm-1.3b",
+]
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:.1f}" if s < 10 else f"{s*1e3:.0f}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+
+    print(
+        "| arch | shape | peak GB | fits | compute ms | memory ms | "
+        "collective ms | bottleneck | useful ratio |"
+    )
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in SHAPES:
+            p = DRY / f"{arch}__{shape}__{args.mesh}.json"
+            if not p.exists():
+                continue
+            rec = json.loads(p.read_text())
+            if "skipped" in rec:
+                print(f"| {arch} | {shape} | — | — | — | — | — | skipped: {rec['skipped'][:40]} | — |")
+                continue
+            if "error" in rec:
+                print(f"| {arch} | {shape} | — | — | — | — | — | ERROR | — |")
+                continue
+            r = rec["roofline"]
+            print(
+                f"| {arch} | {shape} | {rec['peak_bytes_per_device']/1e9:.2f} | "
+                f"{'Y' if rec['fits_16gb'] else 'N'} | {fmt_ms(r['compute_s'])} | "
+                f"{fmt_ms(r['memory_s'])} | {fmt_ms(r['collective_s'])} | "
+                f"{r['bottleneck']} | {rec['useful_flops_ratio']:.2f} |"
+            )
+
+
+if __name__ == "__main__":
+    main()
