@@ -12,6 +12,7 @@ import time
 
 import numpy as np
 
+from repro.cluster import ClusterSim
 from repro.core import metrics, ncf, surfaces, types
 from repro.core.allocator import EcoShiftAllocator
 from repro.core.emulator import ClusterEmulator
@@ -77,6 +78,18 @@ def build_cluster(
 ) -> ClusterEmulator:
     apps = surfaces.workload_group(ctx.apps, group)
     return ClusterEmulator.build(
+        ctx.system, apps, ctx.true_surfaces, n_nodes=n_nodes, seed=seed,
+        initial_caps=initial_caps,
+    )
+
+
+def build_cluster_sim(
+    ctx: Context, group: str, *, n_nodes: int = 100, seed: int = 0,
+    initial_caps=None,
+) -> ClusterSim:
+    """Multi-round engine view of the same cluster (repro.cluster.sim)."""
+    apps = surfaces.workload_group(ctx.apps, group)
+    return ClusterSim.build(
         ctx.system, apps, ctx.true_surfaces, n_nodes=n_nodes, seed=seed,
         initial_caps=initial_caps,
     )

@@ -11,8 +11,9 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import Context, build_cluster
-from repro.core import metrics
+from benchmarks.common import Context, build_cluster, build_cluster_sim
+from repro.cluster import Scenario
+from repro.core import metrics, policies
 
 
 @dataclasses.dataclass
@@ -56,6 +57,50 @@ def evaluate(
         jain=float(np.mean(jains)),
         improvements=np.array(pooled),
     )
+
+
+def evaluate_trace(
+    ctx: Context,
+    group: str,
+    policy: str,
+    budgets: tuple[float, ...],
+    *,
+    initial_caps: tuple[float, float] | None = None,
+    n_nodes: int = 100,
+    seeds: tuple[int, ...] = (0, 1, 2, 3, 4),
+) -> dict[float, PolicyResult]:
+    """Scenario-based sweep: all budgets run as one multi-round timeline.
+
+    One stateful controller per seed steps a budget-trace scenario, so
+    EcoShift's option tables build once and every later budget re-solves
+    warm — versus ``evaluate``'s cold single round per budget.
+    """
+    acc: dict[float, tuple[list, list, list]] = {b: ([], [], []) for b in budgets}
+    for seed in seeds:
+        sim = build_cluster_sim(
+            ctx, group, n_nodes=n_nodes, seed=seed, initial_caps=initial_caps
+        )
+        controller = policies.get_controller(policy, ctx.system)
+        surfaces = ctx.predicted_for if policy == "ecoshift" else None
+        scen = Scenario(n_rounds=len(budgets), budget=budgets)
+        trace = sim.run(scen, controller, policy_surfaces=surfaces)
+        for budget, rec in zip(budgets, trace.records):
+            means, jains, pooled = acc[budget]
+            means.append(rec.result.avg_improvement)
+            jains.append(rec.result.jain_index)
+            pooled.extend(rec.result.improvements.values())
+    out = {}
+    for budget, (means, jains, pooled) in acc.items():
+        mean, lo, hi = metrics.mean_ci98(np.array(means))
+        out[budget] = PolicyResult(
+            policy=policy,
+            mean=mean,
+            lo=lo,
+            hi=hi,
+            jain=float(np.mean(jains)),
+            improvements=np.array(pooled),
+        )
+    return out
 
 
 POLICIES = ("ecoshift", "dps", "mixed_adaptive")

@@ -16,6 +16,8 @@ import pathlib
 import tempfile
 
 from repro import configs
+from repro.cluster import ClusterSim, Scenario
+from repro.cluster.sim import NodeState
 from repro.core import policies
 from repro.core.arch_surfaces import RooflineSurface
 from repro.core.types import SYSTEM_TPU_V5E, AppSpec
@@ -59,7 +61,9 @@ def main() -> None:
         trainer.init()
         print(f"fresh run; checkpoints -> {ckpt_dir}")
 
-    # this job + emulated co-tenants as EcoShift receivers
+    # this job + emulated co-tenants as a 3-node EcoShift pod: a declarative
+    # scenario drives the budget trace and ONE stateful controller carries
+    # its cached option tables across every power round
     me = AppSpec("this-train-job", "G", "this-train-job")
     peers = [
         AppSpec("decode-service", "C", "decode-service"),
@@ -70,17 +74,33 @@ def main() -> None:
         "decode-service": RooflineSurface(5e9, 5e9, 1e8, 1e5, 0.020),
         "prefill-burst": RooflineSurface(2e13, 8e10, 3e9, 5e5, 0.012),
     }
-    baselines = {a.name: (250.0, 150.0) for a in (me, *peers)}
+    nodes = [
+        NodeState(node_id=i, app=a, base_app=a.name, caps=(250.0, 150.0))
+        for i, a in enumerate((me, *peers))
+    ]
+    sim = ClusterSim(
+        system=SYSTEM_TPU_V5E, nodes=nodes, surfaces=surfs, n_repeats=1
+    )
+    n_rounds = -(-args.steps // args.power_round_every)
+    scen = Scenario.constant(n_rounds, budget=120.0)
+    controller = policies.get_controller("ecoshift", SYSTEM_TPU_V5E)
 
+    round_idx = 0
     while trainer.step < args.steps:
         n = min(args.power_round_every, args.steps - trainer.step)
         hist = trainer.run(n)
         loss = hist[-1]["loss"]
-        alloc = policies.ecoshift(
-            [me, *peers], baselines, 120.0, SYSTEM_TPU_V5E, surfs
+        res = sim.run_round(
+            controller,
+            budget=scen.budget_at(round_idx),
+            receivers=sim.nodes,
+            round_index=round_idx,
         )
-        c, g = alloc.caps["this-train-job"]
-        gain = float(surfs["this-train-job"].improvement(baselines["this-train-job"], c, g))
+        round_idx += 1
+        c, g = res.allocation.caps["this-train-job"]
+        gain = float(
+            surfs["this-train-job"].improvement((250.0, 150.0), c, g)
+        )
         print(
             f"step {trainer.step:4d}  loss {loss:.4f}  "
             f"power round: this job -> ({c:.0f} W host, {g:.0f} W chip), "

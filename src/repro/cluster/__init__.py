@@ -1,0 +1,24 @@
+"""Stateful, vectorized cluster control loop (EcoShift §5.4, multi-round).
+
+Three layers:
+
+ * ``scenario``   — declarative event timelines (budget/price traces, node
+                    arrivals/failures, straggler onsets, phase changes);
+ * ``controller`` — stateful per-policy controllers carrying warm state
+                    (cached option tables, predictor handles) across rounds;
+ * ``sim``        — the time-stepped multi-round engine with vectorized
+                    measurement and batched DP solves.
+
+``repro.core.emulator.ClusterEmulator`` is a thin single-round wrapper over
+this package, kept for the paper-figure benchmarks and tests.
+"""
+
+from repro.cluster.scenario import (  # noqa: F401
+    NodeArrival,
+    NodeFailure,
+    PhaseChange,
+    Scenario,
+    StragglerOnset,
+)
+from repro.cluster.sim import ClusterSim, RoundRecord, SimResult  # noqa: F401
+from repro.cluster.controller import Controller, make_controller  # noqa: F401

@@ -1,0 +1,254 @@
+"""Stateful policy controllers for the multi-round cluster engine.
+
+One controller per entry in ``repro.core.policies.POLICIES``.  Each wraps
+the existing pure policy function but *carries warm state across rounds*:
+
+ * ``EcoShiftController`` / ``OracleController`` cache per-receiver
+   ``OptionTable``s keyed by (instance, baseline, surface identity).  The
+   tables are budget-independent (built to the grid's headroom ceiling; all
+   MCKP solvers already skip over-budget options), so after a node failure
+   only the *pool* changes and re-optimization reuses every surviving
+   table — the incremental re-solve the paper's fault-tolerance study
+   needs.  Event hooks (``invalidate``) drop entries whose surface or
+   baseline changed (stragglers, phase changes).
+ * heuristic controllers (uniform / DPS / MixedAdaptive) are stateless
+   wrappers, registered for a uniform interface.
+
+Controllers register themselves into ``policies.CONTROLLERS`` so the
+registry lives beside ``POLICIES`` (``policies.get_controller``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core import curves, mckp
+from repro.core import policies as policies_mod
+from repro.core.curves import OptionTable
+from repro.core.surfaces import PowerSurface
+from repro.core.types import (
+    Allocation,
+    AppSpec,
+    SystemSpec,
+    as_receiver_order,
+    validate_allocation,
+)
+
+
+class Controller:
+    """Base: a policy with per-round ``allocate`` plus warm-state hooks."""
+
+    #: key into ``POLICIES`` / the legacy ``run_round`` name
+    policy: str = ""
+    #: True for policies that always see ground-truth surfaces (Oracle)
+    sees_truth: bool = False
+
+    def __init__(self, system: SystemSpec):
+        self.system = system
+
+    def allocate(
+        self,
+        receivers: Sequence[AppSpec],
+        baselines: Mapping[str, tuple[float, float]],
+        budget: float,
+        surfaces: Mapping[str, PowerSurface],
+    ) -> Allocation:
+        raise NotImplementedError
+
+    # -- warm-state hooks ----------------------------------------------------
+
+    def invalidate(self, names: Sequence[str] | None = None) -> None:
+        """Drop cached per-receiver state (``None`` = everything)."""
+
+    def reset(self) -> None:
+        self.invalidate()
+
+
+class _StatelessController(Controller):
+    """Wraps a pure policy function; nothing carries across rounds."""
+
+    def allocate(self, receivers, baselines, budget, surfaces):
+        fn = policies_mod.POLICIES[self.policy]
+        return fn(receivers, baselines, budget, self.system, surfaces)
+
+
+@policies_mod.register_controller("uniform")
+class UniformController(_StatelessController):
+    policy = "uniform"
+
+
+@policies_mod.register_controller("dps")
+class DPSController(_StatelessController):
+    policy = "dps"
+
+
+@policies_mod.register_controller("mixed_adaptive")
+class MixedAdaptiveController(_StatelessController):
+    policy = "mixed_adaptive"
+
+
+class _OptionCachingController(Controller):
+    """Shared warm ``OptionTable`` cache for the DP-based policies."""
+
+    def __init__(self, system: SystemSpec):
+        super().__init__(system)
+        #: name -> (baseline, surface, table); surface compared by identity
+        self._options: dict[
+            str, tuple[tuple[float, float], PowerSurface, OptionTable]
+        ] = {}
+
+    def invalidate(self, names: Sequence[str] | None = None) -> None:
+        if names is None:
+            self._options.clear()
+        else:
+            for n in names:
+                self._options.pop(n, None)
+
+    @property
+    def cached_tables(self) -> int:
+        return len(self._options)
+
+    def _options_for(
+        self,
+        receivers: Sequence[AppSpec],
+        baselines: Mapping[str, tuple[float, float]],
+        surfaces: Mapping[str, PowerSurface],
+    ) -> list[OptionTable]:
+        out = []
+        for a in as_receiver_order(receivers):
+            base = baselines[a.name]
+            surf = surfaces[a.name]
+            hit = self._options.get(a.name)
+            if hit is not None and hit[0] == base and hit[1] is surf:
+                out.append(hit[2])
+                continue
+            # budget-independent: enumerate to the grid headroom ceiling;
+            # every solver skips options costing more than the round budget
+            table = curves.build_options(
+                a.name, surf, base, self.system.grid, np.inf
+            )
+            self._options[a.name] = (base, surf, table)
+            out.append(table)
+        return out
+
+
+@policies_mod.register_controller("ecoshift")
+class EcoShiftController(_OptionCachingController):
+    """MCKP DP on (predicted) surfaces with warm option tables.
+
+    Optionally holds the NCF predictor handle (``allocator``) so predicted
+    surfaces for arriving instances resolve without re-wiring callers.
+    """
+
+    policy = "ecoshift"
+
+    def __init__(
+        self,
+        system: SystemSpec,
+        *,
+        solver: str = "sparse",
+        unit: float = 1.0,
+        allocator=None,
+    ):
+        super().__init__(system)
+        self.solver = solver
+        self.unit = unit
+        #: optional repro.core.allocator.EcoShiftAllocator (warm NCF handle)
+        self.allocator = allocator
+
+    def _solve(self, options, budget) -> mckp.MCKPSolution:
+        if self.solver == "sparse":
+            return mckp.solve_sparse(options, budget)
+        if self.solver == "dense":
+            return mckp.solve_dense(options, budget, unit=self.unit)
+        if self.solver in ("jax", "pallas"):
+            return mckp.solve_dense_jax(
+                options, budget, unit=self.unit, backend=self.solver
+            )
+        raise ValueError(f"unknown solver {self.solver!r}")
+
+    def allocate(self, receivers, baselines, budget, surfaces):
+        options = self._options_for(receivers, baselines, surfaces)
+        sol = self._solve(options, budget)
+        caps = {name: pick[2] for name, pick in sol.picks.items()}
+        alloc = Allocation(
+            caps=caps,
+            spent=sol.spent,
+            predicted_improvement=sol.average_improvement(),
+        )
+        validate_allocation(alloc, baselines, budget, self.system.grid)
+        return alloc
+
+    def allocate_batch(
+        self,
+        receivers: Sequence[AppSpec],
+        baselines: Mapping[str, tuple[float, float]],
+        budgets: Sequence[float],
+        surfaces: Mapping[str, PowerSurface],
+    ) -> list[Allocation]:
+        """Solve one receiver set under many budgets in a single vmapped
+        dense DP (option tables cached once, one accelerator dispatch).
+
+        Always solves on the dense ``unit``-watt budget grid regardless of
+        ``self.solver`` — with fractional option costs the unit rounding can
+        pick slightly different caps than a ``solver='sparse'``
+        :meth:`allocate` call at the same budget."""
+        options = self._options_for(receivers, baselines, surfaces)
+        backend = self.solver if self.solver in ("jax", "pallas") else "jax"
+        sols = mckp.solve_dense_jax_batch(
+            [options] * len(budgets),
+            list(budgets),
+            unit=self.unit,
+            backend=backend,
+        )
+        allocs = []
+        for budget, sol in zip(budgets, sols):
+            caps = {name: pick[2] for name, pick in sol.picks.items()}
+            alloc = Allocation(
+                caps=caps,
+                spent=sol.spent,
+                predicted_improvement=sol.average_improvement(),
+            )
+            validate_allocation(alloc, baselines, budget, self.system.grid)
+            allocs.append(alloc)
+        return allocs
+
+
+@policies_mod.register_controller("oracle")
+class OracleController(_OptionCachingController):
+    """Exhaustive/DP optimum on true surfaces (``sees_truth``)."""
+
+    policy = "oracle"
+    sees_truth = True
+
+    def __init__(self, system: SystemSpec, *, exhaustive: bool | None = None):
+        super().__init__(system)
+        #: None = auto (brute force iff <= 10 receivers, like run_round)
+        self.exhaustive = exhaustive
+
+    def allocate(self, receivers, baselines, budget, surfaces):
+        options = self._options_for(receivers, baselines, surfaces)
+        exhaustive = (
+            len(receivers) <= 10 if self.exhaustive is None else self.exhaustive
+        )
+        sol = (
+            mckp.brute_force(options, budget)
+            if exhaustive
+            else mckp.solve_sparse(options, budget)
+        )
+        caps = {name: pick[2] for name, pick in sol.picks.items()}
+        alloc = Allocation(
+            caps=caps,
+            spent=sol.spent,
+            predicted_improvement=sol.average_improvement(),
+        )
+        validate_allocation(alloc, baselines, budget, self.system.grid)
+        return alloc
+
+
+def make_controller(policy: str, system: SystemSpec, **kwargs) -> Controller:
+    """Instantiate a registered controller by policy name."""
+    return policies_mod.get_controller(policy, system, **kwargs)

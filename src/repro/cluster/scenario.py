@@ -1,0 +1,168 @@
+"""Declarative scenario timelines for multi-round cluster simulation.
+
+A ``Scenario`` is a pure description of *what happens when*: the reclaimed
+budget (or power price) per round and the cluster events — node failures,
+arrivals, straggler onsets, workload phase changes.  Benchmarks build one
+declaratively instead of hand-rolling ``fail_nodes`` / ``add_straggler``
+call sequences, and the same scenario can be replayed against any
+controller (``repro.cluster.controller``) on the engine
+(``repro.cluster.sim``).
+
+Budget / price traces accept three forms:
+
+ * a scalar — constant every round;
+ * a sequence — one entry per round (shorter sequences hold their last
+   value);
+ * a callable ``round -> value``.
+
+A budget of ``None`` means "derive the pool from donor headroom this
+round", matching the single-round emulator's default.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence, Union
+
+from repro.core.types import AppSpec
+
+# ---------------------------------------------------------------------------
+# Events
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeFailure:
+    """Nodes die at the start of ``round``; their cap allotment returns to
+    the reclaimed pool and the controller re-optimizes over survivors."""
+
+    round: int
+    node_ids: tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerOnset:
+    """A node's true surface slows by ``slowdown`` (thermal throttle,
+    failing HBM) from ``round`` on."""
+
+    round: int
+    node_id: int
+    slowdown: float
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseChange:
+    """A node's workload enters a new phase: its surface rebinds to
+    ``surface_id`` (must exist in the simulation's surface table)."""
+
+    round: int
+    node_id: int
+    surface_id: str
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeArrival:
+    """A new instance of ``app`` joins at ``round`` (caps default to the
+    system's initial uniform caps)."""
+
+    round: int
+    app: AppSpec
+    caps: tuple[float, float] | None = None
+
+
+Event = Union[NodeFailure, StragglerOnset, PhaseChange, NodeArrival]
+
+Trace = Union[None, float, Sequence, Callable[[int], object]]
+
+
+def _trace_at(trace: Trace, r: int):
+    if trace is None or isinstance(trace, (int, float)):
+        return trace
+    if callable(trace):
+        return trace(r)
+    if len(trace) == 0:
+        return None
+    return trace[min(r, len(trace) - 1)]
+
+
+# ---------------------------------------------------------------------------
+# Scenario
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A timeline of ``n_rounds`` redistribution rounds."""
+
+    n_rounds: int
+    #: reclaimed budget per round (None = donor-derived pool)
+    budget: Trace = None
+    #: optional $/W power price per round, recorded alongside results
+    power_price: Trace = None
+    events: tuple[Event, ...] = ()
+
+    def budget_at(self, r: int) -> float | None:
+        b = _trace_at(self.budget, r)
+        return None if b is None else float(b)
+
+    def price_at(self, r: int) -> float | None:
+        p = _trace_at(self.power_price, r)
+        return None if p is None else float(p)
+
+    def events_at(self, r: int) -> tuple[Event, ...]:
+        return tuple(e for e in self.events if e.round == r)
+
+    # -- builders ------------------------------------------------------------
+
+    @staticmethod
+    def constant(n_rounds: int, budget: float | None = None) -> "Scenario":
+        return Scenario(n_rounds=n_rounds, budget=budget)
+
+    def with_event(self, event: Event) -> "Scenario":
+        if not 0 <= event.round < self.n_rounds:
+            raise ValueError(
+                f"event round {event.round} outside [0, {self.n_rounds})"
+            )
+        return dataclasses.replace(self, events=self.events + (event,))
+
+    def with_failure(self, round: int, *node_ids: int) -> "Scenario":
+        return self.with_event(NodeFailure(round=round, node_ids=tuple(node_ids)))
+
+    def with_straggler(
+        self, round: int, node_id: int, slowdown: float
+    ) -> "Scenario":
+        return self.with_event(
+            StragglerOnset(round=round, node_id=node_id, slowdown=slowdown)
+        )
+
+    def with_phase_change(
+        self, round: int, node_id: int, surface_id: str
+    ) -> "Scenario":
+        return self.with_event(
+            PhaseChange(round=round, node_id=node_id, surface_id=surface_id)
+        )
+
+    def with_arrival(
+        self, round: int, app: AppSpec, caps: tuple[float, float] | None = None
+    ) -> "Scenario":
+        return self.with_event(NodeArrival(round=round, app=app, caps=caps))
+
+    def with_budget(self, budget: Trace) -> "Scenario":
+        return dataclasses.replace(self, budget=budget)
+
+    @staticmethod
+    def price_capped(
+        n_rounds: int,
+        pool_watts: float,
+        prices: Sequence[float],
+        spend_cap: float,
+    ) -> "Scenario":
+        """Budget follows a power-price trace: each round distributes
+        ``min(pool, spend_cap / price)`` watts — expensive-power rounds
+        shrink the redistribution."""
+        budgets = [
+            min(pool_watts, spend_cap / max(float(p), 1e-12)) for p in prices
+        ]
+        return Scenario(
+            n_rounds=n_rounds, budget=tuple(budgets), power_price=tuple(prices)
+        )

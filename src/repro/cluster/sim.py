@@ -1,0 +1,437 @@
+"""Time-stepped multi-round cluster simulation engine (paper §5.4, temporal).
+
+``ClusterSim`` owns the node states and steps a :class:`Scenario` against a
+stateful :class:`~repro.cluster.controller.Controller`:
+
+ 1. apply this round's events (failures, stragglers, arrivals, phase
+    changes) and invalidate the controller's per-receiver warm state;
+ 2. partition donors/receivers, derive (or read) the reclaimed budget;
+ 3. controller allocates; the engine measures true improvements.
+
+Measurement is *vectorized*: instead of the per-node Python loop the
+single-round emulator used (2 * n_repeats scalar surface lookups and RNG
+draws per receiver), the engine evaluates each distinct surface once over
+all of its receivers' cap vectors and draws the whole
+``[n, n_repeats, 2]`` noise block in one call.  The RNG stream is
+*identical* to the sequential loop (numpy ``Generator`` array fills consume
+the bit stream in element order), so improvements match the legacy path
+bit-for-bit — certified by tests/test_cluster.py.
+
+``measure_improvements_loop`` keeps the legacy per-node loop as the
+equivalence/benchmark reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+from repro.cluster import scenario as scenario_mod
+from repro.cluster.scenario import Scenario
+from repro.core.surfaces import PowerSurface, measured_runtime
+from repro.core.types import (
+    Allocation,
+    AppSpec,
+    EmulationResult,
+    SystemSpec,
+)
+
+#: per-round offset into the measurement RNG stream (round 0 == the legacy
+#: single-round stream, so migrated paths reproduce run_round exactly)
+_ROUND_STRIDE = 1000003
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeState:
+    node_id: int
+    app: AppSpec  # instance (name is unique per node)
+    base_app: str  # underlying app name (surface / predictor identity)
+    caps: tuple[float, float]
+    alive: bool = True
+    slowdown: float = 1.0  # straggler factor on the true surface
+
+
+@dataclasses.dataclass(frozen=True)
+class _SlowedSurface(PowerSurface):
+    base: PowerSurface
+    slowdown: float
+
+    def runtime(self, c, g):
+        return self.base.runtime(c, g) * self.slowdown
+
+    def power_draw(self, c, g):
+        return self.base.power_draw(c, g)
+
+
+def build_nodes(
+    system: SystemSpec,
+    apps: Sequence[AppSpec],
+    *,
+    n_nodes: int,
+    seed: int,
+    initial_caps: tuple[float, float] | None = None,
+) -> list[NodeState]:
+    """Place ``n_nodes`` instances by cycling a shuffled app list."""
+    rng = np.random.default_rng(seed)
+    order = list(apps)
+    rng.shuffle(order)
+    caps = initial_caps or (system.init_cpu, system.init_gpu)
+    nodes = []
+    for i in range(n_nodes):
+        a = order[i % len(order)]
+        inst = AppSpec(
+            name=f"{a.name}#n{i}", sclass=a.sclass, surface_id=a.surface_id
+        )
+        nodes.append(NodeState(node_id=i, app=inst, base_app=a.name, caps=caps))
+    return nodes
+
+
+# ---------------------------------------------------------------------------
+# Round records
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    """Everything observed in one simulated round."""
+
+    round: int
+    result: EmulationResult
+    pool: float  # donor-derived reclaimed pool this round
+    n_alive: int
+    events: tuple = ()
+    power_price: float | None = None
+
+    @property
+    def avg_improvement(self) -> float:
+        return self.result.avg_improvement
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Trace of a whole scenario under one controller."""
+
+    policy: str
+    records: list[RoundRecord]
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.records)
+
+    @property
+    def improvement_trace(self) -> np.ndarray:
+        return np.array([r.avg_improvement for r in self.records])
+
+    def improvements_of(self, name: str) -> np.ndarray:
+        """Per-round improvement of one instance (NaN when not a receiver)."""
+        return np.array(
+            [r.result.improvements.get(name, np.nan) for r in self.records]
+        )
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ClusterSim:
+    system: SystemSpec
+    nodes: list[NodeState]
+    #: true surfaces keyed by *base* app name
+    surfaces: Mapping[str, PowerSurface]
+    n_repeats: int = 5
+    seed: int = 0
+    #: memoized straggler views: stable object identity per (app, slowdown)
+    #: so controllers' identity-keyed option caches stay warm across rounds
+    _slowed: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    @staticmethod
+    def build(
+        system: SystemSpec,
+        apps: Sequence[AppSpec],
+        surfaces: Mapping[str, PowerSurface],
+        *,
+        n_nodes: int = 100,
+        seed: int = 0,
+        initial_caps: tuple[float, float] | None = None,
+    ) -> "ClusterSim":
+        nodes = build_nodes(
+            system, apps, n_nodes=n_nodes, seed=seed, initial_caps=initial_caps
+        )
+        return ClusterSim(system=system, nodes=nodes, surfaces=surfaces, seed=seed)
+
+    # -- node state ----------------------------------------------------------
+
+    def _surface(self, node: NodeState) -> PowerSurface:
+        s = self.surfaces[node.base_app]
+        if node.slowdown == 1.0:
+            return s
+        key = (node.base_app, node.slowdown)
+        hit = self._slowed.get(key)
+        if hit is None or hit.base is not s:
+            hit = _SlowedSurface(s, node.slowdown)
+            self._slowed[key] = hit
+        return hit
+
+    def alive_nodes(self) -> list[NodeState]:
+        return [n for n in self.nodes if n.alive]
+
+    def partition(self) -> tuple[list[NodeState], list[NodeState], float]:
+        """(donors, receivers, reclaimed_pool).  A node donates iff its
+        natural draw sits below its caps on both components (margin 1 W);
+        a dead node donates its entire cap allotment."""
+        donors, receivers = [], []
+        pool = 0.0
+        for node in self.nodes:
+            if not node.alive:
+                pool += node.caps[0] + node.caps[1]
+                continue
+            nat_c, nat_g = self._surface(node).power_draw(1e9, 1e9)
+            slack_c = node.caps[0] - float(nat_c)
+            slack_g = node.caps[1] - float(nat_g)
+            if slack_c > 1.0 and slack_g > 1.0:
+                donors.append(node)
+                pool += slack_c + slack_g
+            else:
+                receivers.append(node)
+        return donors, receivers, pool
+
+    # -- events ---------------------------------------------------------------
+
+    def apply_event(self, event) -> list[str]:
+        """Apply one scenario event; returns affected instance names."""
+        if isinstance(event, scenario_mod.NodeFailure):
+            ids = set(event.node_ids)
+            touched = [n.app.name for n in self.nodes if n.node_id in ids]
+            self.nodes = [
+                dataclasses.replace(n, alive=False) if n.node_id in ids else n
+                for n in self.nodes
+            ]
+            return touched
+        if isinstance(event, scenario_mod.StragglerOnset):
+            self.nodes = [
+                dataclasses.replace(n, slowdown=event.slowdown)
+                if n.node_id == event.node_id
+                else n
+                for n in self.nodes
+            ]
+            return [n.app.name for n in self.nodes if n.node_id == event.node_id]
+        if isinstance(event, scenario_mod.PhaseChange):
+            if event.surface_id not in self.surfaces:
+                raise KeyError(f"unknown surface {event.surface_id!r}")
+            self.nodes = [
+                dataclasses.replace(n, base_app=event.surface_id)
+                if n.node_id == event.node_id
+                else n
+                for n in self.nodes
+            ]
+            return [n.app.name for n in self.nodes if n.node_id == event.node_id]
+        if isinstance(event, scenario_mod.NodeArrival):
+            if event.app.name not in self.surfaces:
+                raise KeyError(f"no surface for arriving app {event.app.name!r}")
+            nid = 1 + max((n.node_id for n in self.nodes), default=-1)
+            caps = event.caps or (self.system.init_cpu, self.system.init_gpu)
+            inst = AppSpec(
+                name=f"{event.app.name}#n{nid}",
+                sclass=event.app.sclass,
+                surface_id=event.app.surface_id,
+            )
+            self.nodes = self.nodes + [
+                NodeState(
+                    node_id=nid, app=inst, base_app=event.app.name, caps=caps
+                )
+            ]
+            return []
+        raise TypeError(f"unknown event {event!r}")
+
+    # -- measurement ----------------------------------------------------------
+
+    def measure_improvements(
+        self,
+        recv_nodes: Sequence[NodeState],
+        alloc: Allocation,
+        rng: np.random.Generator,
+    ) -> dict[str, float]:
+        """Vectorized measurement of all receivers x repeats.
+
+        One surface evaluation per distinct (app, slowdown) group and one
+        RNG fill for the whole noise block; bit-for-bit equal to
+        :func:`measure_improvements_loop`.
+        """
+        n = len(recv_nodes)
+        if n == 0:
+            return {}
+        base = np.array([node.caps for node in recv_nodes], dtype=np.float64)
+        new = np.array(
+            [alloc.caps[node.app.name] for node in recv_nodes], dtype=np.float64
+        )
+        t_base = np.empty(n, dtype=np.float64)
+        t_new = np.empty(n, dtype=np.float64)
+        groups: dict[tuple[str, float], list[int]] = {}
+        for i, node in enumerate(recv_nodes):
+            groups.setdefault((node.base_app, node.slowdown), []).append(i)
+        for (base_app, slowdown), idx in groups.items():
+            surf = self.surfaces[base_app]
+            ii = np.asarray(idx)
+            tb = np.asarray(surf.runtime(base[ii, 0], base[ii, 1]), np.float64)
+            tn = np.asarray(surf.runtime(new[ii, 0], new[ii, 1]), np.float64)
+            t_base[ii] = tb * slowdown
+            t_new[ii] = tn * slowdown
+
+        sigma = self.system.noise_sigma
+        if sigma > 0:
+            # C-order fill == the sequential per-(node, repeat, base/new)
+            # scalar draws of the legacy loop
+            factors = np.exp(rng.normal(0.0, sigma, size=(n, self.n_repeats, 2)))
+            t0 = (t_base[:, None] * factors[:, :, 0]).mean(axis=1)
+            t1 = (t_new[:, None] * factors[:, :, 1]).mean(axis=1)
+        else:
+            t0, t1 = t_base, t_new
+        imp = (t0 - t1) / t0
+        return {
+            node.app.name: float(imp[i]) for i, node in enumerate(recv_nodes)
+        }
+
+    def measure_improvements_loop(
+        self,
+        recv_nodes: Sequence[NodeState],
+        alloc: Allocation,
+        rng: np.random.Generator,
+    ) -> dict[str, float]:
+        """Legacy per-node measurement loop (equivalence/benchmark reference)."""
+        improvements: dict[str, float] = {}
+        for node in recv_nodes:
+            surf = self._surface(node)
+            c, g = alloc.caps[node.app.name]
+            base_ts, new_ts = [], []
+            for _ in range(self.n_repeats):
+                base_ts.append(
+                    measured_runtime(
+                        surf,
+                        *node.caps,
+                        rng=rng,
+                        noise_sigma=self.system.noise_sigma,
+                    )
+                )
+                new_ts.append(
+                    measured_runtime(
+                        surf, c, g, rng=rng, noise_sigma=self.system.noise_sigma
+                    )
+                )
+            t0, t1 = float(np.mean(base_ts)), float(np.mean(new_ts))
+            improvements[node.app.name] = (t0 - t1) / t0
+        return improvements
+
+    # -- rounds ---------------------------------------------------------------
+
+    def round_rng(self, policy: str, round_index: int) -> np.random.Generator:
+        """Measurement RNG: round 0 replays the legacy run_round stream."""
+        return np.random.default_rng(
+            self.seed
+            + zlib.crc32(policy.encode()) % 100003
+            + round_index * _ROUND_STRIDE
+        )
+
+    def run_round(
+        self,
+        controller,
+        budget: float | None = None,
+        *,
+        policy_surfaces: Mapping[str, PowerSurface] | None = None,
+        receivers: Sequence[NodeState] | None = None,
+        round_index: int = 0,
+        use_loop_measurement: bool = False,
+    ) -> EmulationResult:
+        """One redistribution round under a stateful controller.
+
+        ``policy_surfaces`` is what the policy sees (predicted surfaces for
+        EcoShift; defaults to true surfaces keyed per instance).  ``budget``
+        defaults to the donor-derived reclaimed pool.
+        """
+        if receivers is not None and budget is not None:
+            recv_nodes = list(receivers)
+        else:
+            _, recv_nodes, pool = self.partition()
+            if receivers is not None:
+                recv_nodes = list(receivers)
+        b = float(pool if budget is None else budget)
+        recv_apps = [n.app for n in recv_nodes]
+        baselines = {n.app.name: n.caps for n in recv_nodes}
+        true_by_inst = {n.app.name: self._surface(n) for n in recv_nodes}
+        seen = (
+            policy_surfaces if policy_surfaces is not None else true_by_inst
+        )
+        if controller.sees_truth:
+            seen = true_by_inst
+
+        alloc = controller.allocate(recv_apps, baselines, b, seen)
+        rng = self.round_rng(controller.policy, round_index)
+        measure = (
+            self.measure_improvements_loop
+            if use_loop_measurement
+            else self.measure_improvements
+        )
+        improvements = measure(recv_nodes, alloc, rng)
+        return EmulationResult(
+            policy=controller.policy,
+            improvements=improvements,
+            allocation=alloc,
+            budget=b,
+        )
+
+    def run(
+        self,
+        scenario: Scenario,
+        controller,
+        *,
+        policy_surfaces: Mapping[str, PowerSurface]
+        | Callable[["ClusterSim"], Mapping[str, PowerSurface]]
+        | None = None,
+    ) -> SimResult:
+        """Step a scenario: per round, apply events -> allocate -> measure.
+
+        ``policy_surfaces`` may be a mapping (static predicted surfaces) or
+        a callable ``sim -> mapping`` re-evaluated each round (the node set
+        changes under arrivals/failures).
+        """
+        if isinstance(controller, str):
+            from repro.core import policies as policies_mod
+
+            controller = policies_mod.get_controller(controller, self.system)
+        records: list[RoundRecord] = []
+        for r in range(scenario.n_rounds):
+            events = scenario.events_at(r)
+            touched: list[str] = []
+            for ev in events:
+                touched.extend(self.apply_event(ev))
+            if touched:
+                controller.invalidate(touched)
+            seen = (
+                policy_surfaces(self)
+                if callable(policy_surfaces)
+                else policy_surfaces
+            )
+            _, recv, pool = self.partition()
+            b = scenario.budget_at(r)
+            res = self.run_round(
+                controller,
+                budget=pool if b is None else b,
+                policy_surfaces=seen,
+                receivers=recv,
+                round_index=r,
+            )
+            records.append(
+                RoundRecord(
+                    round=r,
+                    result=res,
+                    pool=pool,
+                    n_alive=len(self.alive_nodes()),
+                    events=events,
+                    power_price=scenario.price_at(r),
+                )
+            )
+        return SimResult(policy=controller.policy, records=records)

@@ -118,12 +118,15 @@ def dense_curve(
         if opts.values[j] > f[cu]:
             f[cu] = opts.values[j]
             choice[cu] = j
-    # running max to enforce "cost <= b"
-    for b in range(1, nb):
-        if f[b - 1] > f[b]:
-            f[b] = f[b - 1]
-            choice[b] = choice[b - 1]
-    return f, choice
+    # running max to enforce "cost <= b": a position keeps its own choice iff
+    # it attains the running max (ties keep the later index, matching the
+    # sequential update which only overwrote on strict decrease)
+    run = np.maximum.accumulate(f)
+    kept = np.empty(nb, dtype=bool)
+    kept[0] = True
+    kept[1:] = f[1:] >= run[:-1]
+    src = np.maximum.accumulate(np.where(kept, np.arange(nb), 0))
+    return run, choice[src]
 
 
 def dense_curves_matrix(

@@ -1,20 +1,15 @@
-"""Emulation-based cluster evaluation (paper §5.4).
+"""Emulation-based cluster evaluation (paper §5.4) — single-round facade.
 
-A simulated cluster of N nodes, each running one application instance under
-per-node (cpu, gpu) caps.  The emulator:
+Since the cluster control loop moved into ``repro.cluster`` (scenario /
+controller / sim), this module is a thin wrapper kept for the paper-figure
+benchmarks and tests: one ``ClusterEmulator`` is one ``ClusterSim`` plus
+the legacy ``run_round(policy_name, ...)`` calling convention (a fresh
+stateless controller per call, measurement RNG seeded exactly as before).
 
- * partitions instances into donors (natural draw below assigned caps) and
-   receivers, and can derive the reclaimed pool B from donor headroom or
-   accept B as an explicit input (the paper's policy studies sweep B
-   directly — "EcoShift treats reclaimed power as an explicit input");
- * applies a distribution policy to get per-receiver caps;
- * "executes" each receiver under its caps — a true-surface lookup with
-   multiplicative measurement noise, repeated ``n_repeats`` times (the paper
-   repeats 5x) — and reports relative improvements vs the no-distribution
-   baseline;
- * supports fault-tolerance studies: node failures return the failed node's
-   whole budget to the pool and trigger re-optimization; stragglers degrade
-   a node's surface by a slowdown factor.
+Multi-round studies — failures mid-run, straggler onsets, budget traces —
+should use :class:`repro.cluster.sim.ClusterSim` with a
+:class:`~repro.cluster.scenario.Scenario` directly; ``fail_nodes`` /
+``add_straggler`` here mutate state between independent single rounds.
 """
 
 from __future__ import annotations
@@ -22,21 +17,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping, Sequence
 
-import numpy as np
-
+from repro.cluster.sim import (  # noqa: F401  (re-exported legacy names)
+    ClusterSim,
+    NodeState,
+    _SlowedSurface,
+)
 from repro.core import policies as policies_mod
-from repro.core.surfaces import PowerSurface, measured_runtime
-from repro.core.types import Allocation, AppSpec, EmulationResult, SystemSpec
-
-
-@dataclasses.dataclass(frozen=True)
-class NodeState:
-    node_id: int
-    app: AppSpec  # instance (name is unique per node)
-    base_app: str  # underlying app name (predictor identity)
-    caps: tuple[float, float]
-    alive: bool = True
-    slowdown: float = 1.0  # straggler factor on the true surface
+from repro.core.surfaces import PowerSurface
+from repro.core.types import AppSpec, EmulationResult, SystemSpec
 
 
 @dataclasses.dataclass
@@ -61,50 +49,36 @@ class ClusterEmulator:
         initial_caps: tuple[float, float] | None = None,
     ) -> "ClusterEmulator":
         """Place ``n_nodes`` instances by cycling a shuffled app list."""
-        rng = np.random.default_rng(seed)
-        order = list(apps)
-        rng.shuffle(order)
-        caps = initial_caps or (system.init_cpu, system.init_gpu)
-        nodes = []
-        for i in range(n_nodes):
-            a = order[i % len(order)]
-            inst = AppSpec(
-                name=f"{a.name}#n{i}", sclass=a.sclass, surface_id=a.surface_id
-            )
-            nodes.append(
-                NodeState(node_id=i, app=inst, base_app=a.name, caps=caps)
-            )
+        sim = ClusterSim.build(
+            system,
+            apps,
+            surfaces,
+            n_nodes=n_nodes,
+            seed=seed,
+            initial_caps=initial_caps,
+        )
         return ClusterEmulator(
-            system=system, nodes=nodes, surfaces=surfaces, seed=seed
+            system=system, nodes=sim.nodes, surfaces=surfaces, seed=seed
+        )
+
+    def _sim(self) -> ClusterSim:
+        """Engine view sharing this emulator's node list."""
+        return ClusterSim(
+            system=self.system,
+            nodes=self.nodes,
+            surfaces=self.surfaces,
+            n_repeats=self.n_repeats,
+            seed=self.seed,
         )
 
     # -- donor / receiver partition ------------------------------------------
 
     def _surface(self, node: NodeState) -> PowerSurface:
-        s = self.surfaces[node.base_app]
-        if node.slowdown != 1.0:
-            return _SlowedSurface(s, node.slowdown)
-        return s
+        return self._sim()._surface(node)
 
     def partition(self) -> tuple[list[NodeState], list[NodeState], float]:
-        """(donors, receivers, reclaimed_pool).  A node donates iff its
-        natural draw sits below its caps on both components (margin 1 W)."""
-        donors, receivers = [], []
-        pool = 0.0
-        for node in self.nodes:
-            if not node.alive:
-                # a dead node donates its entire cap allotment
-                pool += node.caps[0] + node.caps[1]
-                continue
-            nat_c, nat_g = self._surface(node).power_draw(1e9, 1e9)
-            slack_c = node.caps[0] - float(nat_c)
-            slack_g = node.caps[1] - float(nat_g)
-            if slack_c > 1.0 and slack_g > 1.0:
-                donors.append(node)
-                pool += slack_c + slack_g
-            else:
-                receivers.append(node)
-        return donors, receivers, pool
+        """(donors, receivers, reclaimed_pool) — see ClusterSim.partition."""
+        return self._sim().partition()
 
     # -- one redistribution round ---------------------------------------------
 
@@ -123,51 +97,13 @@ class ClusterEmulator:
         EcoShift; defaults to true surfaces keyed per instance).  ``budget``
         defaults to the donor-derived reclaimed pool.
         """
-        donors, recv_nodes, pool = self.partition()
-        if receivers is not None:
-            recv_nodes = list(receivers)
-        b = float(pool if budget is None else budget)
-        recv_apps = [n.app for n in recv_nodes]
-        baselines = {n.app.name: n.caps for n in recv_nodes}
-        true_by_inst = {n.app.name: self._surface(n) for n in recv_nodes}
-        seen = (
-            policy_surfaces
-            if policy_surfaces is not None
-            else true_by_inst
-        )
-
-        fn = policies_mod.POLICIES[policy]
-        kwargs = {}
-        if policy == "ecoshift":
-            kwargs["solver"] = solver
-        if policy == "oracle":
-            kwargs["exhaustive"] = len(recv_nodes) <= 10
-            seen = true_by_inst  # the Oracle always sees ground truth
-        alloc: Allocation = fn(recv_apps, baselines, b, self.system, seen, **kwargs)
-
-        import zlib
-
-        rng = np.random.default_rng(self.seed + zlib.crc32(policy.encode()) % 100003)
-        improvements: dict[str, float] = {}
-        for node in recv_nodes:
-            surf = true_by_inst[node.app.name]
-            c, g = alloc.caps[node.app.name]
-            base_ts, new_ts = [], []
-            for _ in range(self.n_repeats):
-                base_ts.append(
-                    measured_runtime(
-                        surf, *node.caps, rng=rng, noise_sigma=self.system.noise_sigma
-                    )
-                )
-                new_ts.append(
-                    measured_runtime(
-                        surf, c, g, rng=rng, noise_sigma=self.system.noise_sigma
-                    )
-                )
-            t0, t1 = float(np.mean(base_ts)), float(np.mean(new_ts))
-            improvements[node.app.name] = (t0 - t1) / t0
-        return EmulationResult(
-            policy=policy, improvements=improvements, allocation=alloc, budget=b
+        kwargs = {"solver": solver} if policy == "ecoshift" else {}
+        controller = policies_mod.get_controller(policy, self.system, **kwargs)
+        return self._sim().run_round(
+            controller,
+            budget=budget,
+            policy_surfaces=policy_surfaces,
+            receivers=receivers,
         )
 
     # -- fault tolerance / stragglers -----------------------------------------
@@ -188,15 +124,3 @@ class ClusterEmulator:
 
     def alive_nodes(self) -> list[NodeState]:
         return [n for n in self.nodes if n.alive]
-
-
-@dataclasses.dataclass(frozen=True)
-class _SlowedSurface(PowerSurface):
-    base: PowerSurface
-    slowdown: float
-
-    def runtime(self, c, g):
-        return self.base.runtime(c, g) * self.slowdown
-
-    def power_draw(self, c, g):
-        return self.base.power_draw(c, g)

@@ -127,6 +127,7 @@ def solve_dense(
     dp = np.zeros(nb, dtype=np.float64)
     args: list[np.ndarray] = []
     costs_per_app: list[np.ndarray] = []
+    kept_per_app: list[np.ndarray] = []
     for opt in options:
         cu = np.ceil(opt.costs / unit - 1e-9).astype(np.int64)
         keep = cu < nb
@@ -134,16 +135,15 @@ def solve_dense(
         dp, arg = _stage_maxplus(dp, cu, vals)
         args.append(arg)
         costs_per_app.append(cu)
+        kept_per_app.append(np.nonzero(keep)[0])
 
     b = int(np.argmax(dp))
     total = float(dp[b])
     picks: dict[str, tuple[float, float, tuple[float, float]]] = {}
     for i in range(len(options) - 1, -1, -1):
         opt = options[i]
-        keep = np.ceil(opt.costs / unit - 1e-9).astype(np.int64) < nb
-        kept_idx = np.nonzero(keep)[0]
         j_local = int(args[i][b])
-        j = int(kept_idx[j_local])
+        j = int(kept_per_app[i][j_local])
         picks[opt.name] = (
             float(opt.costs[j]),
             float(opt.values[j]),
@@ -224,6 +224,96 @@ def solve_dense_jax(
         b -= k
     spent = sum(c for c, _, _ in picks.values())
     return MCKPSolution(total_value=total, spent=spent, picks=picks)
+
+
+def _jax_dp_batch(f_mats, backend: str = "jax"):
+    """Batched forward DP over R independent rounds.
+
+    f_mats: [R, N, NB].  Returns (dp_final [R, NB], args [R, N, NB]): one
+    scan over the N receiver stages where each stage is the *batched*
+    (max,+) convolution over all R rounds at once (vmap over the Pallas
+    kernel for ``backend='pallas'``).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+
+        conv_b = kops.maxplus_conv_batched
+    else:
+        from repro.kernels import ref as kref
+
+        def conv_b(dp, f):
+            return jax.vmap(kref.maxplus_conv)(dp, f)
+
+    def stage(dp, f_rows):  # dp, f_rows: [R, NB]
+        out, arg = conv_b(dp, f_rows)
+        return out, arg
+
+    @jax.jit
+    def run(f_mats):
+        r, _, nb = f_mats.shape
+        dp0 = jnp.zeros((r, nb), dtype=f_mats.dtype)
+        dp_final, args = jax.lax.scan(stage, dp0, f_mats.swapaxes(0, 1))
+        return dp_final, args.swapaxes(0, 1)
+
+    return run(f_mats)
+
+
+def solve_dense_jax_batch(
+    rounds: Sequence[Sequence[OptionTable]],
+    budgets: Sequence[float],
+    unit: float = 1.0,
+    backend: str = "jax",
+) -> list[MCKPSolution]:
+    """Solve R independent dense-DP rounds with one vmapped scan.
+
+    Each round is an (option tables, budget) pair — e.g. the rounds of a
+    scenario trace, or one receiver set under a budget sweep.  Curves are
+    densified on the widest budget grid; rounds with fewer receivers are
+    padded with identity stages (F = [0, -inf, ...], which picks zero
+    spend), and each round's argmax is restricted to its own budget range,
+    so every solution equals its standalone ``solve_dense_jax`` call.
+    """
+    if len(rounds) != len(budgets):
+        raise ValueError("rounds and budgets must have equal length")
+    nbs = [int(np.floor(b / unit + 1e-9)) + 1 for b in budgets]
+    nb = max(nbs)
+    n_max = max(len(r) for r in rounds)
+    f_all = np.empty((len(rounds), n_max, nb), dtype=np.float64)
+    ch_all = np.zeros((len(rounds), n_max, nb), dtype=np.int32)
+    pad_row = np.full(nb, -np.inf)
+    pad_row[0] = 0.0
+    for r, opts in enumerate(rounds):
+        f, ch = dense_curves_matrix(list(opts), (nb - 1) * unit, unit)
+        f_all[r, : len(opts)] = f
+        ch_all[r, : len(opts)] = ch
+        f_all[r, len(opts) :] = pad_row
+
+    dp_final, args = _jax_dp_batch(f_all, backend=backend)
+    dp_final = np.asarray(dp_final)
+    args = np.asarray(args)
+
+    sols: list[MCKPSolution] = []
+    for r, opts in enumerate(rounds):
+        b = int(np.argmax(dp_final[r, : nbs[r]]))
+        total = float(dp_final[r, b])
+        picks: dict[str, tuple[float, float, tuple[float, float]]] = {}
+        for i in range(n_max - 1, -1, -1):
+            k = int(args[r, i, b])
+            if i < len(opts):
+                opt = opts[i]
+                j = int(ch_all[r, i][k])
+                picks[opt.name] = (
+                    float(opt.costs[j]),
+                    float(opt.values[j]),
+                    (float(opt.caps[j, 0]), float(opt.caps[j, 1])),
+                )
+            b -= k
+        spent = sum(c for c, _, _ in picks.values())
+        sols.append(MCKPSolution(total_value=total, spent=spent, picks=picks))
+    return sols
 
 
 # ---------------------------------------------------------------------------

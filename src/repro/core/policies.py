@@ -257,3 +257,34 @@ POLICIES: dict[str, PolicyFn] = {
     "ecoshift": ecoshift,
     "oracle": oracle,
 }
+
+
+# ---------------------------------------------------------------------------
+# Stateful controllers (repro.cluster.controller)
+# ---------------------------------------------------------------------------
+
+#: policy name -> Controller subclass; populated by repro.cluster.controller
+#: via @register_controller so the registry lives beside POLICIES without a
+#: core -> cluster import at module load.
+CONTROLLERS: dict[str, type] = {}
+
+
+def register_controller(name: str):
+    """Class decorator: register a stateful controller for ``name``."""
+    if name not in POLICIES:
+        raise KeyError(f"controller for unknown policy {name!r}")
+
+    def deco(cls):
+        CONTROLLERS[name] = cls
+        return cls
+
+    return deco
+
+
+def get_controller(name: str, system, **kwargs):
+    """Instantiate the stateful controller for ``name`` (see CONTROLLERS)."""
+    if name not in CONTROLLERS:
+        import repro.cluster.controller  # noqa: F401  (populates registry)
+    if name not in CONTROLLERS:
+        raise KeyError(f"no controller registered for policy {name!r}")
+    return CONTROLLERS[name](system, **kwargs)

@@ -26,6 +26,21 @@ def maxplus_conv(dp: jax.Array, f: jax.Array, *, block_b: int = 256):
     )
 
 
+def maxplus_conv_batched(dp: jax.Array, f: jax.Array, *, block_b: int = 256):
+    """Batched (max,+) stage: vmap of the Pallas kernel over a leading dim.
+
+    dp, f: [R, NB].  Returns (out [R, NB], argmax_k [R, NB]).  Each stage
+    of ``repro.core.mckp.solve_dense_jax_batch`` runs through this to solve
+    many independent DP rounds (budget sweeps, scenario traces) at once.
+    """
+    interpret = not _on_tpu()
+    return jax.vmap(
+        lambda d, fr: _mckp_dp.maxplus_conv_pallas(
+            d, fr, block_b=block_b, interpret=interpret
+        )
+    )(dp, f)
+
+
 def flash_attention(q, k, v, **kw):
     """Fused GQA attention (train/prefill).  See flash_attention.py."""
     from repro.kernels import flash_attention as _fa

@@ -210,8 +210,9 @@ def _dot_flops(op: OpInfo, comp: Computation) -> float:
     dm = re.search(r"dot\(([^)]*)\)", op.line)
     if not dm:
         return 0.0
-    # lhs may be inline-shaped (f32[..] %x) or a bare reference (%x)
-    lhs_txt = dm.group(1).split(",")[0].strip()
+    # lhs may be inline-shaped (f32[..] %x) or a bare reference (%x); split
+    # on operand boundaries, not the commas inside shape brackets
+    lhs_txt = re.split(r",\s+(?=[a-z0-9]+\[|%)", dm.group(1))[0].strip()
     sm = _SHAPE_RE.search(lhs_txt)
     if sm:
         dims = [int(x) for x in sm.group(2).split(",") if x]
@@ -369,13 +370,22 @@ def analyze(text: str) -> HLOCosts:
     if entry is None:
         return costs
 
-    def walk(comp_name: str, mult: float, inv_mult: float, depth: int = 0):
+    def walk(
+        comp_name: str,
+        mult: float,
+        inv_mult: float,
+        depth: int = 0,
+        extra_invariant: frozenset[str] = frozenset(),
+    ):
         """``mult``: per-iteration execution count; ``inv_mult``: count for
-        loop-invariant operand reads (once per enclosing-loop entry)."""
+        loop-invariant operand reads (once per enclosing-loop entry).
+        ``extra_invariant``: callee parameter names bound to loop-invariant
+        caller operands (the CPU backend wraps fusions in ``call`` ops, which
+        would otherwise hide a stacked carry's invariance from the billing)."""
         if depth > 32 or comp_name not in comps:
             return
         comp = comps[comp_name]
-        invariant = comp.loop_invariant_symbols()
+        invariant = comp.loop_invariant_symbols() | extra_invariant
         for op in comp.ops:
             kind = op.kind
             if kind == "while":
@@ -394,7 +404,21 @@ def analyze(text: str) -> HLOCosts:
             if kind == "call":
                 m = re.search(r"to_apply=%?([\w.\-]+)", op.line)
                 if m:
-                    walk(m.group(1), mult, inv_mult, depth + 1)
+                    callee_inv = set()
+                    callee = comps.get(m.group(1))
+                    if callee is not None:
+                        pidx = {}
+                        for fop in callee.ops:
+                            pm = re.search(r"parameter\((\d+)\)", fop.line)
+                            if pm:
+                                pidx[int(pm.group(1))] = fop.name
+                        for i, nm in enumerate(_operands(op, comp)):
+                            if nm in invariant and i in pidx:
+                                callee_inv.add(pidx[i])
+                    walk(
+                        m.group(1), mult, inv_mult, depth + 1,
+                        frozenset(callee_inv),
+                    )
                 continue
             base = kind.replace("-start", "")
             if base in _COLLECTIVES:

@@ -1,9 +1,13 @@
 """MCKP solver equivalence + invariants (paper §3.2.2, Algorithm 1)."""
 
-import hypothesis
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # image without hypothesis: property tests skip
+    from _hypothesis_stub import hypothesis, st
 
 from repro.core import curves, mckp
 

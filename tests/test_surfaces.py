@@ -1,9 +1,13 @@
 """Power-performance surface tests: paper-anchor exactness + invariants."""
 
-import hypothesis
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # image without hypothesis: property tests skip
+    from _hypothesis_stub import hypothesis, st
 
 from repro.core import surfaces, types
 

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verify + cluster-engine smoke, as run by .github/workflows/ci.yml.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== cluster.sim smoke scenario (CPU interpret mode) =="
+python tools/smoke_scenario.py

@@ -1,0 +1,88 @@
+"""CI smoke: a seeded multi-round scenario through the cluster engine.
+
+5 rounds, 50 nodes, one failure and one straggler, for both the
+``ecoshift`` and ``dps`` controllers — on CPU (Pallas interpret mode for
+the jax-solver round).  Also reports the vectorized-vs-loop measurement
+speedup at 100 nodes.  Exits nonzero on any regression; budget < 60 s.
+
+    PYTHONPATH=src python tools/smoke_scenario.py
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.cluster import ClusterSim, Scenario
+from repro.cluster.controller import make_controller
+from repro.core import surfaces, types
+
+
+def main() -> None:
+    t_start = time.perf_counter()
+    system = types.SYSTEM_1
+    apps, surfs = surfaces.build_paper_suite(system)
+
+    probe = ClusterSim.build(system, apps, surfs, n_nodes=50, seed=0)
+    victim_f = probe.alive_nodes()[0].node_id
+    victim_s = [n for n in probe.alive_nodes() if n.app.sclass in "CG"][0]
+    scen = (
+        Scenario.constant(5, budget=2000.0)
+        .with_failure(2, victim_f)
+        .with_straggler(3, victim_s.node_id, 1.8)
+    )
+
+    for policy in ("ecoshift", "dps"):
+        sim = ClusterSim.build(system, apps, surfs, n_nodes=50, seed=0)
+        trace = sim.run(scen, policy)
+        imp = trace.improvement_trace
+        assert trace.n_rounds == 5
+        assert trace.records[2].n_alive == 49, "failure not applied"
+        assert np.isfinite(imp).all() and (imp > 0).all(), imp
+        print(
+            f"{policy:9s} rounds={trace.n_rounds} "
+            f"avg_improvement={[f'{x*100:.1f}%' for x in imp]}"
+        )
+
+    # one jax-solver round exercises the (interpret-mode) Pallas DP path
+    sim = ClusterSim.build(system, apps, surfs, n_nodes=20, seed=1)
+    res = sim.run_round(
+        make_controller("ecoshift", system, solver="jax"), budget=1000.0
+    )
+    assert res.avg_improvement > 0
+    print(f"jax-solver round: avg_improvement={res.avg_improvement*100:.1f}%")
+
+    # vectorized measurement speedup at 100 nodes
+    sim = ClusterSim.build(system, apps, surfs, n_nodes=100, seed=0)
+    ctrl = make_controller("dps", system)
+    _, recv, _ = sim.partition()
+    baselines = {n.app.name: n.caps for n in recv}
+    seen = {n.app.name: sim._surface(n) for n in recv}
+    alloc = ctrl.allocate([n.app for n in recv], baselines, 2000.0, seen)
+
+    def best(fn, k=3):
+        ts = []
+        for _ in range(k):
+            rng = sim.round_rng("dps", 0)
+            t0 = time.perf_counter()
+            fn(recv, alloc, rng)
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    t_loop = best(sim.measure_improvements_loop)
+    t_vec = best(sim.measure_improvements)
+    speedup = t_loop / t_vec
+    print(
+        f"measurement at {len(recv)} receivers: loop {t_loop*1e3:.2f} ms, "
+        f"vectorized {t_vec*1e3:.2f} ms ({speedup:.1f}x)"
+    )
+    # generous floor: shared CI runners are noisy; the >=5x acceptance
+    # check runs in tests/test_cluster.py
+    assert speedup >= 2.0, f"vectorized speedup regressed to {speedup:.1f}x"
+
+    print(f"smoke scenario OK in {time.perf_counter() - t_start:.1f} s")
+
+
+if __name__ == "__main__":
+    main()
