@@ -10,10 +10,8 @@ import dataclasses
 import functools
 import time
 
-import numpy as np
-
 from repro.cluster import ClusterSim
-from repro.core import metrics, ncf, surfaces, types
+from repro.core import ncf, surfaces, types
 from repro.core.allocator import EcoShiftAllocator
 from repro.core.emulator import ClusterEmulator
 

@@ -14,7 +14,6 @@ from repro.core import surfaces
 def run(lines: list[str]) -> None:
     cfd = surfaces.cfd_surface()
     rt = surfaces.raytracing_surface()
-    base = (300.0, 200.0)
 
     def gain(surf, a, b):
         ta, tb = float(surf.runtime(*a)), float(surf.runtime(*b))

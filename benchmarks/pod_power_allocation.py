@@ -10,10 +10,8 @@ on the framework's own workloads.
 
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import csv_line
-from repro.core import arch_surfaces, policies
+from repro.core import arch_surfaces
 from repro.core.emulator import ClusterEmulator
 from repro.core.types import SYSTEM_TPU_V5E
 

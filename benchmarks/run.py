@@ -26,6 +26,7 @@ def main() -> None:
         fig9_distribution,
         fig10_oracle_gap,
         fig11_fairness,
+        online_adaptation,
         pod_power_allocation,
         predictor_accuracy,
         roofline_report,
@@ -47,6 +48,7 @@ def main() -> None:
         ("roofline", roofline_report.run, False),
         ("pod_power", pod_power_allocation.run, True),
         ("straggler", straggler_response.run, True),
+        ("online_adaptation", online_adaptation.run, True),
     ]
 
     lines: list[str] = ["name,us_per_call,derived"]

@@ -1,13 +1,16 @@
 """Stateful, vectorized cluster control loop (EcoShift §5.4, multi-round).
 
-Three layers:
+Four layers:
 
  * ``scenario``   — declarative event timelines (budget/price traces, node
                     arrivals/failures, straggler onsets, phase changes);
+ * ``predictor``  — the telemetry-driven online prediction subsystem
+                    (observation buffers, batched NCF online fits,
+                    tolerance-gated surface refresh);
  * ``controller`` — stateful per-policy controllers carrying warm state
                     (cached option tables, predictor handles) across rounds;
  * ``sim``        — the time-stepped multi-round engine with vectorized
-                    measurement and batched DP solves.
+                    measurement, telemetry emission and batched DP solves.
 
 ``repro.core.emulator.ClusterEmulator`` is a thin single-round wrapper over
 this package, kept for the paper-figure benchmarks and tests.
@@ -19,6 +22,11 @@ from repro.cluster.scenario import (  # noqa: F401
     PhaseChange,
     Scenario,
     StragglerOnset,
+)
+from repro.cluster.predictor import (  # noqa: F401
+    OnlinePredictor,
+    OnlinePredictorConfig,
+    TelemetryRecord,
 )
 from repro.cluster.sim import ClusterSim, RoundRecord, SimResult  # noqa: F401
 from repro.cluster.controller import Controller, make_controller  # noqa: F401

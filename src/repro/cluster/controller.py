@@ -11,16 +11,23 @@ the existing pure policy function but *carries warm state across rounds*:
    table — the incremental re-solve the paper's fault-tolerance study
    needs.  Event hooks (``invalidate``) drop entries whose surface or
    baseline changed (stragglers, phase changes).
+ * ``EcoShiftOnlineController`` closes the prediction loop: it sources its
+   surfaces from a telemetry-driven ``repro.cluster.predictor
+   .OnlinePredictor`` instead of a frozen mapping, ingests each round's
+   measurements via ``ingest_telemetry``, and invalidates warm option
+   tables only for instances whose served surface actually moved beyond
+   the predictor's tolerance.
  * heuristic controllers (uniform / DPS / MixedAdaptive) are stateless
    wrappers, registered for a uniform interface.
 
 Controllers register themselves into ``policies.CONTROLLERS`` so the
 registry lives beside ``POLICIES`` (``policies.get_controller``).
+Controller-only policies (``ecoshift_online``) have no pure-function
+counterpart in ``POLICIES`` — the online phase is inherently stateful.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Mapping, Sequence
 
 import numpy as np
@@ -62,6 +69,13 @@ class Controller:
 
     def invalidate(self, names: Sequence[str] | None = None) -> None:
         """Drop cached per-receiver state (``None`` = everything)."""
+
+    def ingest_telemetry(self, records: Sequence) -> None:
+        """Consume one round's noisy measurements
+        (:class:`repro.cluster.predictor.TelemetryRecord`).  The engine
+        calls this after every measured round; predictor-backed
+        controllers refresh their surfaces here, everyone else ignores
+        it."""
 
     def reset(self) -> None:
         self.invalidate()
@@ -215,6 +229,49 @@ class EcoShiftController(_OptionCachingController):
             validate_allocation(alloc, baselines, budget, self.system.grid)
             allocs.append(alloc)
         return allocs
+
+
+@policies_mod.register_controller("ecoshift_online", pure=False)
+class EcoShiftOnlineController(EcoShiftController):
+    """EcoShift with a telemetry-driven online predictor as surface source.
+
+    Ignores the ``surfaces`` mapping the engine passes to ``allocate`` —
+    every receiver's surface comes from the attached
+    :class:`~repro.cluster.predictor.OnlinePredictor` (population prior
+    for cold-start apps).  After each measured round the engine feeds the
+    telemetry back via :meth:`ingest_telemetry` and the predictor
+    refreshes the apps whose telemetry warrants it.  Cache invalidation
+    is implicit: the warm option cache is keyed by surface *identity*
+    (``_OptionCachingController._options_for``), and the predictor swaps
+    a surface object only on tolerance-exceeding moves — so re-solves
+    stay warm exactly while predictions are stable, with no extra
+    bookkeeping here.
+    """
+
+    policy = "ecoshift_online"
+
+    def __init__(
+        self,
+        system: SystemSpec,
+        *,
+        predictor,
+        solver: str = "sparse",
+        unit: float = 1.0,
+    ):
+        super().__init__(system, solver=solver, unit=unit)
+        #: repro.cluster.predictor.OnlinePredictor (required)
+        self.predictor = predictor
+
+    def allocate(self, receivers, baselines, budget, surfaces=None):
+        seen = {
+            a.name: self.predictor.surface_for(a.name, a.surface_id)
+            for a in receivers
+        }
+        return super().allocate(receivers, baselines, budget, seen)
+
+    def ingest_telemetry(self, records) -> None:
+        self.predictor.observe(records)
+        self.predictor.refresh()
 
 
 @policies_mod.register_controller("oracle")

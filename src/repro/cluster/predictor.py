@@ -1,0 +1,288 @@
+"""Telemetry-driven online performance prediction (paper §3.1, closed loop).
+
+After PR 1 only the *allocation* half of EcoShift's "online prediction +
+DP allocation" loop was online: predictors were fit offline and controllers
+consumed frozen predicted surfaces.  This module closes the loop:
+
+ 1. each round the :class:`~repro.cluster.sim.ClusterSim` engine packages
+    the true noisy measurements it already computes into
+    :class:`TelemetryRecord`s (bit-identical to the improvements it
+    reports — certified by tests/test_online_predictor.py);
+ 2. an :class:`OnlinePredictor` ingests them into per-(app, instance)
+    observation buffers, runs the NCF online phase for apps whose telemetry
+    says their surface is wrong (batched across apps via
+    ``NCFPredictor.update_apps``), and
+ 3. swaps an app's :class:`~repro.core.surfaces.TabulatedSurface` — thereby
+    invalidating controllers' warm option-table caches — only when the
+    refreshed surface moved beyond a tolerance.
+
+Information discipline: the predictor sees only *noisy measured runtimes*
+(telemetry), never true surfaces.  Straggler slowdowns are invisible to it
+except through the measurements themselves; because the NCF predicts
+*runtime ratios*, a multiplicatively slowed instance still contributes
+unbiased ratio observations.  Per-instance buffers are normalized by each
+instance's own fastest observed runtime before pooling, so instances with
+different slowdown factors (or measurement epochs) pool cleanly.
+
+Cold start is the default: an arriving app with no pretrained surface is
+allocated from the population-prior surface (the geometric mean of the
+currently *served* ratio tables — never including the cold app itself)
+until enough telemetry accumulates to fit its embeddings — the scenario
+event carries no pre-baked prediction (see
+:class:`repro.cluster.scenario.NodeArrival`).
+
+Design notes: DESIGN.md §10 (loop shape, information discipline, re-fit
+and invalidation gating).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping
+
+import numpy as np
+
+from repro.core.ncf import NCFPredictor
+from repro.core.surfaces import PowerSurface, TabulatedSurface
+
+# ---------------------------------------------------------------------------
+# Telemetry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryRecord:
+    """One receiver's noisy measurement from one redistribution round.
+
+    ``t_baseline`` / ``t_allocated`` are the mean measured runtimes at the
+    baseline and allocated cap pairs (``n_repeats`` noisy executions each);
+    ``improvement`` is derived from exactly those two numbers and equals the
+    engine's reported improvement bit-for-bit.
+    """
+
+    round: int
+    instance: str
+    base_app: str
+    baseline_caps: tuple[float, float]
+    allocated_caps: tuple[float, float]
+    t_baseline: float
+    t_allocated: float
+    improvement: float
+
+
+# ---------------------------------------------------------------------------
+# Online predictor
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlinePredictorConfig:
+    #: distinct observed grid cells an app needs before its first online fit
+    min_cells: int = 3
+    #: relative surface move (max |new/old - 1| over the grid) above which
+    #: the refreshed surface replaces the served one (and caches invalidate)
+    tol: float = 0.01
+    #: re-fit a *known* app only when its running |predicted - measured|
+    #: improvement error exceeds this (cold apps always re-fit); this is the
+    #: drift detector that keeps well-predicted apps off the refit path
+    err_threshold: float = 0.03
+    #: EMA factor for the per-app prediction-error tracker
+    err_ema: float = 0.5
+    #: per-(app, instance) observation buffer bound (distinct cells)
+    max_cells: int = 64
+
+
+class OnlinePredictor:
+    """Stateful wrapper turning streaming telemetry into refreshed surfaces.
+
+    Wraps an offline-trained :class:`~repro.core.ncf.NCFPredictor` (shared
+    config embeddings / MLP stay frozen — the paper's online phase) and
+    maintains:
+
+     * per-(base_app, instance) observation buffers of mean measured
+       runtime per grid cell (off-grid caps snap to the nearest cell: the
+       cap grid is the controller's action space, so telemetry lands at
+       most half a grid step away);
+     * the served surface per app (``surfaces``), swapped only on
+       tolerance-exceeding moves so controllers' identity-keyed option
+       caches stay warm while predictions are stable;
+     * a per-app prediction-error EMA (``prediction_error``) comparing the
+       served surface's predicted improvement against the measured one —
+       the drift signal that triggers re-fits for already-known apps.
+    """
+
+    def __init__(
+        self,
+        predictor: NCFPredictor,
+        cfg: OnlinePredictorConfig = OnlinePredictorConfig(),
+    ):
+        self.ncf = predictor
+        self.system = predictor.system
+        self.cfg = cfg
+        #: (base_app, instance) -> {cell: [runtime_sum, count]}
+        self._buffers: dict[tuple[str, str], dict[tuple[float, float], list]] = {}
+        #: instance -> base_app, learned from telemetry (survives phase
+        #: changes where an AppSpec's surface_id may lag the true binding)
+        self._app_of_instance: dict[str, str] = {}
+        self._dirty: set[str] = set()
+        #: served predicted surfaces keyed by base app name
+        self.surfaces: dict[str, TabulatedSurface] = {}
+        #: per-app |predicted - measured| improvement EMA
+        self.prediction_error: dict[str, float] = {}
+        #: per-app relative move of the last refreshed surface
+        self.last_moves: dict[str, float] = {}
+        self.n_refits = 0
+        self._prior: TabulatedSurface | None = None
+
+    # -- surface source ------------------------------------------------------
+
+    def prior_surface(self) -> TabulatedSurface:
+        """Population prior for cold-start apps: the geometric mean of the
+        *served* predicted ratio tables (seeded offline surfaces and
+        telemetry-fitted refreshes).  A cold app is by definition not
+        served, so its own prediction can never leak into its prior.
+        Before anything is served, falls back to the wrapped predictor's
+        offline apps; flat (no predicted benefit from extra watts) when
+        none exist."""
+        if self._prior is None:
+            grid = self.system.grid
+            n_c, n_g = len(grid.cpu_levels), len(grid.gpu_levels)
+            if self.surfaces:
+                logs = np.stack(
+                    [
+                        np.log(self.surfaces[n].table)
+                        for n in sorted(self.surfaces)
+                    ]
+                )
+                table = np.exp(logs.mean(axis=0))
+            elif self.ncf.app_index:
+                logs = np.stack(
+                    [
+                        self.ncf.predict_log_ratios(n)
+                        for n in sorted(self.ncf.app_index)
+                    ]
+                )
+                table = np.exp(logs.mean(axis=0)).reshape(n_c, n_g)
+            else:
+                table = np.ones((n_c, n_g))
+            self._prior = TabulatedSurface(
+                cpu_levels=grid.cpu_levels,
+                gpu_levels=grid.gpu_levels,
+                table=table,
+            )
+        return self._prior
+
+    def seed_surfaces(
+        self, predicted: Mapping[str, TabulatedSurface]
+    ) -> None:
+        """Adopt offline-predicted surfaces as the served starting point
+        (apps not listed stay cold-start)."""
+        self.surfaces.update(predicted)
+
+    def surface_for(self, instance: str, surface_id: str) -> PowerSurface:
+        """Served surface for one receiver instance (prior when cold)."""
+        app = self._app_of_instance.get(instance, surface_id)
+        return self.surfaces.get(app) or self.prior_surface()
+
+    def is_cold(self, app: str) -> bool:
+        return app not in self.surfaces
+
+    # -- telemetry ingestion -------------------------------------------------
+
+    def _snap(self, caps: tuple[float, float]) -> tuple[float, float]:
+        grid = self.system.grid
+        c = grid.cpu_levels[np.argmin(np.abs(grid.cpu_levels - caps[0]))]
+        g = grid.gpu_levels[np.argmin(np.abs(grid.gpu_levels - caps[1]))]
+        return float(c), float(g)
+
+    def _push(self, app: str, instance: str, caps, t: float) -> None:
+        buf = self._buffers.setdefault((app, instance), {})
+        cell = self._snap(caps)
+        if cell not in buf and len(buf) >= self.cfg.max_cells:
+            return
+        slot = buf.setdefault(cell, [0.0, 0])
+        slot[0] += t
+        slot[1] += 1
+
+    def observe(self, records: Iterable[TelemetryRecord]) -> None:
+        """Ingest one round of telemetry: buffer both measurement points of
+        every record and update the per-app prediction-error EMA."""
+        for r in records:
+            self._app_of_instance[r.instance] = r.base_app
+            self._push(r.base_app, r.instance, r.baseline_caps, r.t_baseline)
+            self._push(r.base_app, r.instance, r.allocated_caps, r.t_allocated)
+            self._dirty.add(r.base_app)
+            served = self.surfaces.get(r.base_app)
+            if served is not None:
+                pred = float(
+                    served.improvement(r.baseline_caps, *r.allocated_caps)
+                )
+                err = abs(pred - r.improvement)
+                prev = self.prediction_error.get(r.base_app)
+                a = self.cfg.err_ema
+                self.prediction_error[r.base_app] = (
+                    err if prev is None else a * err + (1 - a) * prev
+                )
+
+    def _pooled_samples(self, app: str) -> dict[tuple[float, float], float]:
+        """Pool an app's instance buffers into one {cell: runtime-ratio}.
+
+        Each instance normalizes by its own fastest observed mean runtime,
+        making observations comparable across slowdown factors; duplicate
+        cells average across instances."""
+        cells: dict[tuple[float, float], list[float]] = {}
+        for (a, _inst), buf in self._buffers.items():
+            if a != app or not buf:
+                continue
+            means = {cell: s / n for cell, (s, n) in buf.items()}
+            ref = min(means.values())
+            for cell, t in means.items():
+                cells.setdefault(cell, []).append(t / ref)
+        return {cell: float(np.mean(v)) for cell, v in cells.items()}
+
+    # -- refresh -------------------------------------------------------------
+
+    def refresh(self) -> list[str]:
+        """Run the online phase for apps whose telemetry warrants it and
+        return the apps whose *served* surface actually moved (> tol) —
+        exactly the set whose warm controller caches must invalidate.
+
+        An app re-fits when it is dirty (new telemetry), has at least
+        ``min_cells`` distinct observed cells, and is either cold (no
+        served surface) or drifting (prediction-error EMA above
+        ``err_threshold``)."""
+        ready: dict[str, dict] = {}
+        for app in sorted(self._dirty):
+            cold = self.is_cold(app)
+            drifting = (
+                self.prediction_error.get(app, 0.0) > self.cfg.err_threshold
+            )
+            if not (cold or drifting):
+                self._dirty.discard(app)
+                continue
+            pooled = self._pooled_samples(app)
+            if len(pooled) >= self.cfg.min_cells:
+                ready[app] = pooled
+        if not ready:
+            return []
+        self.ncf = self.ncf.update_apps(ready)
+        self.n_refits += len(ready)
+        changed = []
+        for app in ready:
+            self._dirty.discard(app)
+            new = self.ncf.predict_surface(app)
+            old = self.surfaces.get(app)
+            if old is None:
+                move = np.inf
+            else:
+                move = float(np.max(np.abs(new.table / old.table - 1.0)))
+            self.last_moves[app] = move
+            if move > self.cfg.tol:
+                self.surfaces[app] = new
+                changed.append(app)
+            # restart the drift EMA after *every* refit: a swap invalidates
+            # the stale readings, and a no-move refit means the served
+            # surface is as good as the model can do on this buffer — only
+            # freshly re-accumulated error should trigger another fit
+            self.prediction_error[app] = 0.0
+        return changed

@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Sequence, Union
 
+from repro.core.surfaces import PowerSurface
 from repro.core.types import AppSpec
 
 # ---------------------------------------------------------------------------
@@ -63,11 +64,20 @@ class PhaseChange:
 @dataclasses.dataclass(frozen=True)
 class NodeArrival:
     """A new instance of ``app`` joins at ``round`` (caps default to the
-    system's initial uniform caps)."""
+    system's initial uniform caps).
+
+    Arrivals carry **no pre-baked predicted surface** — cold start is the
+    default: predictor-backed controllers serve their population prior
+    until the app's own telemetry accumulates (repro.cluster.predictor).
+    ``surface`` optionally registers a *ground-truth* surface for an app
+    the simulation has never seen (used by the engine for measurement
+    only; the information discipline of DESIGN.md §10 keeps it away from
+    every predictor)."""
 
     round: int
     app: AppSpec
     caps: tuple[float, float] | None = None
+    surface: PowerSurface | None = None
 
 
 Event = Union[NodeFailure, StragglerOnset, PhaseChange, NodeArrival]
@@ -143,9 +153,15 @@ class Scenario:
         )
 
     def with_arrival(
-        self, round: int, app: AppSpec, caps: tuple[float, float] | None = None
+        self,
+        round: int,
+        app: AppSpec,
+        caps: tuple[float, float] | None = None,
+        surface: PowerSurface | None = None,
     ) -> "Scenario":
-        return self.with_event(NodeArrival(round=round, app=app, caps=caps))
+        return self.with_event(
+            NodeArrival(round=round, app=app, caps=caps, surface=surface)
+        )
 
     def with_budget(self, budget: Trace) -> "Scenario":
         return dataclasses.replace(self, budget=budget)

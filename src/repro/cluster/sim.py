@@ -19,6 +19,13 @@ bit-for-bit — certified by tests/test_cluster.py.
 
 ``measure_improvements_loop`` keeps the legacy per-node loop as the
 equivalence/benchmark reference.
+
+Every vectorized measurement is also emitted as telemetry
+(:class:`repro.cluster.predictor.TelemetryRecord` — the same mean measured
+runtimes and improvements, bit-for-bit): ``run_round`` stashes the round's
+records in ``last_telemetry`` and ``run`` hands them to the controller's
+``ingest_telemetry`` hook after each round, closing the online
+prediction loop (DESIGN.md §10).
 """
 
 from __future__ import annotations
@@ -30,6 +37,7 @@ from typing import Callable, Mapping, Sequence
 import numpy as np
 
 from repro.cluster import scenario as scenario_mod
+from repro.cluster.predictor import TelemetryRecord
 from repro.cluster.scenario import Scenario
 from repro.core.surfaces import PowerSurface, measured_runtime
 from repro.core.types import (
@@ -104,6 +112,8 @@ class RoundRecord:
     n_alive: int
     events: tuple = ()
     power_price: float | None = None
+    #: per-receiver noisy measurements (empty on the legacy loop path)
+    telemetry: tuple[TelemetryRecord, ...] = ()
 
     @property
     def avg_improvement(self) -> float:
@@ -148,6 +158,8 @@ class ClusterSim:
     #: memoized straggler views: stable object identity per (app, slowdown)
     #: so controllers' identity-keyed option caches stay warm across rounds
     _slowed: dict = dataclasses.field(default_factory=dict, repr=False)
+    #: telemetry emitted by the latest vectorized-measurement round
+    last_telemetry: tuple = dataclasses.field(default=(), repr=False)
 
     @staticmethod
     def build(
@@ -224,13 +236,24 @@ class ClusterSim:
             if event.surface_id not in self.surfaces:
                 raise KeyError(f"unknown surface {event.surface_id!r}")
             self.nodes = [
-                dataclasses.replace(n, base_app=event.surface_id)
+                dataclasses.replace(
+                    n,
+                    base_app=event.surface_id,
+                    # rebind the instance's surface identity too, so
+                    # predictor-backed controllers resolve the new phase
+                    app=dataclasses.replace(
+                        n.app, surface_id=event.surface_id
+                    ),
+                )
                 if n.node_id == event.node_id
                 else n
                 for n in self.nodes
             ]
             return [n.app.name for n in self.nodes if n.node_id == event.node_id]
         if isinstance(event, scenario_mod.NodeArrival):
+            if event.surface is not None:
+                # a genuinely new app: register its ground-truth surface
+                self.surfaces = {**self.surfaces, event.app.name: event.surface}
             if event.app.name not in self.surfaces:
                 raise KeyError(f"no surface for arriving app {event.app.name!r}")
             nid = 1 + max((n.node_id for n in self.nodes), default=-1)
@@ -262,9 +285,25 @@ class ClusterSim:
         RNG fill for the whole noise block; bit-for-bit equal to
         :func:`measure_improvements_loop`.
         """
+        _, _, imp = self._measure_arrays(recv_nodes, alloc, rng)
+        return {
+            node.app.name: float(imp[i]) for i, node in enumerate(recv_nodes)
+        }
+
+    def _measure_arrays(
+        self,
+        recv_nodes: Sequence[NodeState],
+        alloc: Allocation,
+        rng: np.random.Generator,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorized measurement core: per-receiver mean measured runtimes
+        at (baseline, allocated) caps plus relative improvements — the same
+        arrays back both the engine's reported improvements and the
+        telemetry records, so the two are bit-identical by construction."""
         n = len(recv_nodes)
         if n == 0:
-            return {}
+            z = np.zeros(0, dtype=np.float64)
+            return z, z, z
         base = np.array([node.caps for node in recv_nodes], dtype=np.float64)
         new = np.array(
             [alloc.caps[node.app.name] for node in recv_nodes], dtype=np.float64
@@ -292,9 +331,7 @@ class ClusterSim:
         else:
             t0, t1 = t_base, t_new
         imp = (t0 - t1) / t0
-        return {
-            node.app.name: float(imp[i]) for i, node in enumerate(recv_nodes)
-        }
+        return t0, t1, imp
 
     def measure_improvements_loop(
         self,
@@ -370,12 +407,28 @@ class ClusterSim:
 
         alloc = controller.allocate(recv_apps, baselines, b, seen)
         rng = self.round_rng(controller.policy, round_index)
-        measure = (
-            self.measure_improvements_loop
-            if use_loop_measurement
-            else self.measure_improvements
-        )
-        improvements = measure(recv_nodes, alloc, rng)
+        if use_loop_measurement:
+            improvements = self.measure_improvements_loop(recv_nodes, alloc, rng)
+            self.last_telemetry = ()
+        else:
+            t0, t1, imp = self._measure_arrays(recv_nodes, alloc, rng)
+            improvements = {
+                node.app.name: float(imp[i])
+                for i, node in enumerate(recv_nodes)
+            }
+            self.last_telemetry = tuple(
+                TelemetryRecord(
+                    round=round_index,
+                    instance=node.app.name,
+                    base_app=node.base_app,
+                    baseline_caps=tuple(node.caps),
+                    allocated_caps=tuple(alloc.caps[node.app.name]),
+                    t_baseline=float(t0[i]),
+                    t_allocated=float(t1[i]),
+                    improvement=float(imp[i]),
+                )
+                for i, node in enumerate(recv_nodes)
+            )
         return EmulationResult(
             policy=controller.policy,
             improvements=improvements,
@@ -392,11 +445,15 @@ class ClusterSim:
         | Callable[["ClusterSim"], Mapping[str, PowerSurface]]
         | None = None,
     ) -> SimResult:
-        """Step a scenario: per round, apply events -> allocate -> measure.
+        """Step a scenario: per round, apply events -> allocate -> measure
+        -> feed telemetry back to the controller.
 
         ``policy_surfaces`` may be a mapping (static predicted surfaces) or
         a callable ``sim -> mapping`` re-evaluated each round (the node set
-        changes under arrivals/failures).
+        changes under arrivals/failures).  Predictor-backed controllers
+        (``ecoshift_online``) ignore it and serve their own surfaces; they
+        receive each round's telemetry via ``ingest_telemetry`` and
+        invalidate their warm caches only for surfaces that actually moved.
         """
         if isinstance(controller, str):
             from repro.core import policies as policies_mod
@@ -432,6 +489,8 @@ class ClusterSim:
                     n_alive=len(self.alive_nodes()),
                     events=events,
                     power_price=scenario.price_at(r),
+                    telemetry=self.last_telemetry,
                 )
             )
+            controller.ingest_telemetry(self.last_telemetry)
         return SimResult(policy=controller.policy, records=records)

@@ -25,7 +25,7 @@ import pathlib
 import numpy as np
 
 from repro.core.surfaces import PowerSurface
-from repro.core.types import AppSpec, SystemSpec, SYSTEM_TPU_V5E
+from repro.core.types import AppSpec, SYSTEM_TPU_V5E
 from repro.roofline import model as roof
 
 #: host-side fixed overhead per step (s) at full host clock

@@ -109,7 +109,6 @@ def _stage_maxplus(
     Returns (dp', argmax_j).
     """
     nb = dp.shape[0]
-    k = costs_u.shape[0]
     # cand[j, b] = dp[b - c_j] + v_j
     idx = np.arange(nb)[None, :] - costs_u[:, None]  # [k, nb]
     valid = idx >= 0

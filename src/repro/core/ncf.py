@@ -14,13 +14,29 @@ Two phases, matching the paper's workflow (Fig. 3):
  * ``infer_app``     — online phase for an *unseen* app: freeze config
                        embeddings + MLP, fit only the new app's two
                        embedding vectors on K profiled samples.
+ * ``update_app``    — incremental variant of the online phase: re-fit an
+                       app's embeddings from its *accumulated* observation
+                       buffer (replacing any previous embedding row).  The
+                       seeded from-scratch re-fit makes the result a pure
+                       function of (name, observations, shared params), so
+                       incrementally updated predictors agree bit-for-bit
+                       with a fresh ``infer_app`` on the same observations.
+ * ``update_apps``   — batched online phase: one stacked embedding fit for
+                       every app whose telemetry changed this round (the
+                       per-app losses are independent and AdamW is
+                       elementwise, so the stacked trajectory matches the
+                       sequential per-app fits up to float reduction order).
  * ``predict_table`` — densify the predicted surface over the full grid
                        (handed to the allocator as a TabulatedSurface).
+
+The telemetry-driven wrapper that feeds ``update_apps`` from live cluster
+measurements lives in :mod:`repro.cluster.predictor` (DESIGN.md §10).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Mapping
 
 import jax
@@ -168,40 +184,50 @@ class NCFPredictor:
 
     # -- online phase for unseen apps ---------------------------------------
 
-    def infer_app(
-        self,
-        name: str,
-        samples: Mapping[tuple[float, float], float],
-    ) -> "NCFPredictor":
-        """Fit embeddings for an unseen app from K online-profiled samples.
+    def has_app(self, name: str) -> bool:
+        return name in self.app_index
 
-        Freezes all shared parameters (config embeddings, MLP, head) and
-        optimizes only the new app's GMF/MLP embedding vectors.  Returns a
-        new predictor whose app table includes ``name``.
+    def _sample_arrays(
+        self, samples: Mapping[tuple[float, float], float]
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """(grid-cell ids, log-runtime-ratio targets) for one app's samples.
+
+        The reference is the fastest observed runtime (≈ the max-cap cell),
+        exactly as in :meth:`fit`.
         """
         grid = self.system.grid
         pairs = grid.pairs()
         cell_of = {(round(c, 3), round(g, 3)): i for i, (c, g) in enumerate(pairs)}
         ref = min(samples.values())
-        cols = jnp.asarray(
-            np.array([cell_of[(round(c, 3), round(g, 3))] for c, g in samples], np.int32)
+        cols = np.array(
+            [cell_of[(round(c, 3), round(g, 3))] for c, g in samples], np.int32
         )
-        ys = jnp.asarray(
-            np.array([np.log(t / ref) for t in samples.values()], np.float32)
-        )
-        feats = jnp.asarray(self.cfg_feats)
+        ys = np.array([np.log(t / ref) for t in samples.values()], np.float32)
+        return cols, ys
 
-        frozen = jax.tree.map(
-            jnp.asarray, {k: v for k, v in self.params.items() if "app" not in k}
-        )
+    def _app_rng(self, name: str) -> jax.Array:
+        return jax.random.PRNGKey(zlib.crc32(name.encode()) % (2**31))
+
+    def _init_embedding(self, name: str) -> dict:
         d = self.cfg.embed_dim
-        import zlib
-
-        rng = jax.random.PRNGKey(zlib.crc32(name.encode()) % (2**31))
-        emb = {
+        rng = self._app_rng(name)
+        return {
             "gmf": 0.1 * jax.random.normal(rng, (1, d)),
             "mlp": 0.1 * jax.random.normal(jax.random.fold_in(rng, 1), (1, d)),
         }
+
+    def _fit_embedding(
+        self, name: str, cols: np.ndarray, ys: np.ndarray
+    ) -> dict:
+        """Online phase core: fit one app's embedding pair, shared params
+        frozen.  Deterministic given (name, observations, shared params)."""
+        cols = jnp.asarray(cols)
+        ys = jnp.asarray(ys)
+        feats = jnp.asarray(self.cfg_feats)
+        frozen = jax.tree.map(
+            jnp.asarray, {k: v for k, v in self.params.items() if "app" not in k}
+        )
+        emb = self._init_embedding(name)
         optimizer = opt.adamw(self.cfg.online_lr)
         state = optimizer.init(emb)
 
@@ -220,16 +246,31 @@ class NCFPredictor:
 
         for _ in range(self.cfg.online_steps):
             emb, state, _ = step(emb, state)
+        return {k: np.asarray(v) for k, v in emb.items()}
 
-        new_params = dict(self.params)
-        new_params["app_gmf"] = np.concatenate(
-            [self.params["app_gmf"], np.asarray(emb["gmf"])], axis=0
-        )
-        new_params["app_mlp"] = np.concatenate(
-            [self.params["app_mlp"], np.asarray(emb["mlp"])], axis=0
-        )
+    def _with_embeddings(self, emb_by_app: Mapping[str, dict]) -> "NCFPredictor":
+        """New predictor with the given (1, d) embedding pairs written in:
+        known apps have their row replaced, new apps are appended in sorted
+        name order."""
+        gmf = np.array(self.params["app_gmf"])
+        mlp = np.array(self.params["app_mlp"])
         new_index = dict(self.app_index)
-        new_index[name] = len(self.app_index)
+        appended_g, appended_m = [], []
+        for name in sorted(emb_by_app):
+            e = emb_by_app[name]
+            if name in new_index:
+                gmf[new_index[name]] = e["gmf"][0]
+                mlp[new_index[name]] = e["mlp"][0]
+            else:
+                new_index[name] = len(new_index)
+                appended_g.append(e["gmf"])
+                appended_m.append(e["mlp"])
+        if appended_g:
+            gmf = np.concatenate([gmf] + appended_g, axis=0)
+            mlp = np.concatenate([mlp] + appended_m, axis=0)
+        new_params = dict(self.params)
+        new_params["app_gmf"] = gmf
+        new_params["app_mlp"] = mlp
         return NCFPredictor(
             system=self.system,
             cfg=self.cfg,
@@ -237,6 +278,110 @@ class NCFPredictor:
             app_index=new_index,
             cfg_feats=self.cfg_feats,
         )
+
+    def infer_app(
+        self,
+        name: str,
+        samples: Mapping[tuple[float, float], float],
+    ) -> "NCFPredictor":
+        """Fit embeddings for an unseen app from K online-profiled samples.
+
+        Freezes all shared parameters (config embeddings, MLP, head) and
+        optimizes only the new app's GMF/MLP embedding vectors.  Returns a
+        new predictor whose app table includes ``name``.
+        """
+        cols, ys = self._sample_arrays(samples)
+        return self._with_embeddings({name: self._fit_embedding(name, cols, ys)})
+
+    def update_app(
+        self,
+        name: str,
+        samples: Mapping[tuple[float, float], float],
+    ) -> "NCFPredictor":
+        """Incremental online update: re-fit ``name``'s embeddings from its
+        full accumulated observation set.
+
+        Runs the same seeded fit as :meth:`infer_app`, so updating a stale
+        predictor with the accumulated buffer yields *exactly* the predictor
+        a from-scratch ``infer_app`` on those observations would — the
+        contract tests/test_online_predictor.py certifies.  Unknown apps are
+        added (``update_app`` ⊇ ``infer_app``)."""
+        return self.infer_app(name, samples)
+
+    def update_apps(
+        self,
+        samples_by_app: Mapping[str, Mapping[tuple[float, float], float]],
+    ) -> "NCFPredictor":
+        """Batched online phase: fit every listed app's embedding pair in a
+        single stacked optimization (one jitted step for all apps).
+
+        Per-app loss terms are independent (each involves only that app's
+        embedding row) and AdamW is elementwise, so each row follows the
+        same trajectory as a standalone :meth:`update_app` up to float
+        reduction order.  Observation counts may differ per app; short apps
+        are zero-padded and masked."""
+        names = sorted(samples_by_app)
+        if not names:
+            return self
+        if len(names) == 1:
+            return self.update_app(names[0], samples_by_app[names[0]])
+        arrays = [self._sample_arrays(samples_by_app[n]) for n in names]
+        n_apps = len(names)
+        k_max = max(len(c) for c, _ in arrays)
+        cols = np.zeros((n_apps, k_max), np.int32)
+        ys = np.zeros((n_apps, k_max), np.float32)
+        mask = np.zeros((n_apps, k_max), np.float32)
+        for i, (c, y) in enumerate(arrays):
+            cols[i, : len(c)] = c
+            ys[i, : len(y)] = y
+            mask[i, : len(c)] = 1.0
+        counts = jnp.asarray(mask.sum(axis=1))
+        cols = jnp.asarray(cols)
+        ys = jnp.asarray(ys)
+        mask = jnp.asarray(mask)
+        feats = jnp.asarray(self.cfg_feats)
+        frozen = jax.tree.map(
+            jnp.asarray, {k: v for k, v in self.params.items() if "app" not in k}
+        )
+        emb = {
+            "gmf": jnp.concatenate(
+                [self._init_embedding(n)["gmf"] for n in names], axis=0
+            ),
+            "mlp": jnp.concatenate(
+                [self._init_embedding(n)["mlp"] for n in names], axis=0
+            ),
+        }
+        optimizer = opt.adamw(self.cfg.online_lr)
+        state = optimizer.init(emb)
+        app_ids = jnp.broadcast_to(
+            jnp.arange(n_apps, dtype=jnp.int32)[:, None], (n_apps, k_max)
+        )
+
+        @jax.jit
+        def step(emb, state):
+            def loss_fn(e):
+                p = dict(frozen)
+                p["app_gmf"], p["app_mlp"] = e["gmf"], e["mlp"]
+                pred = _forward(p, app_ids, cols, feats[cols])
+                per_app = jnp.sum(mask * (pred - ys) ** 2, axis=1) / counts
+                # sum (not mean) over apps: each row's gradient equals its
+                # standalone single-app gradient
+                return jnp.sum(per_app)
+
+            loss, grads = jax.value_and_grad(loss_fn)(emb)
+            emb, state = optimizer.update(grads, state, emb)
+            return emb, state, loss
+
+        for _ in range(self.cfg.online_steps):
+            emb, state, _ = step(emb, state)
+        out = {
+            name: {
+                "gmf": np.asarray(emb["gmf"][i : i + 1]),
+                "mlp": np.asarray(emb["mlp"][i : i + 1]),
+            }
+            for i, name in enumerate(names)
+        }
+        return self._with_embeddings(out)
 
     # -- prediction ----------------------------------------------------------
 

@@ -269,9 +269,15 @@ POLICIES: dict[str, PolicyFn] = {
 CONTROLLERS: dict[str, type] = {}
 
 
-def register_controller(name: str):
-    """Class decorator: register a stateful controller for ``name``."""
-    if name not in POLICIES:
+def register_controller(name: str, *, pure: bool = True):
+    """Class decorator: register a stateful controller for ``name``.
+
+    ``pure=True`` (default) requires a pure policy function of the same
+    name in ``POLICIES`` — guarding against typos.  ``pure=False``
+    registers a *controller-only* policy with no stateless counterpart
+    (e.g. ``ecoshift_online``, whose telemetry-driven prediction loop is
+    inherently stateful)."""
+    if pure and name not in POLICIES:
         raise KeyError(f"controller for unknown policy {name!r}")
 
     def deco(cls):

@@ -10,7 +10,6 @@ These are the functions the dry-run lowers and the real launcher executes:
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -15,7 +15,6 @@ Conventions:
 
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Any
 
@@ -140,7 +139,7 @@ def _online_softmax_scan(
 
     def step(carry, inp):
         j, kc, vc = inp
-        m, l, acc = carry
+        m, lsum, acc = carry
         logits = jnp.einsum(
             "bqhd,bkhd->bhqk", qf, kc.astype(jnp.float32),
             preferred_element_type=jnp.float32,
@@ -163,7 +162,7 @@ def _online_softmax_scan(
         p = jnp.exp(logits - m_safe[..., None])
         p = jnp.where(jnp.isfinite(logits), p, 0.0)
         corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
-        l_new = corr * l + jnp.sum(p, axis=-1)
+        l_new = corr * lsum + jnp.sum(p, axis=-1)
         pv = jnp.einsum(
             "bhqk,bkhd->bhqd", p, vc.astype(jnp.float32),
             preferred_element_type=jnp.float32,
@@ -176,10 +175,10 @@ def _online_softmax_scan(
     a0 = jnp.zeros((b, h, cq, hd), jnp.float32)
     # checkpoint each KV step: backward recomputes the [cq, ck] logits tile
     # instead of stacking it across the scan (flash-attention backward)
-    (m, l, acc), _ = jax.lax.scan(
+    (m, lsum, acc), _ = jax.lax.scan(
         jax.checkpoint(step), (m0, l0, a0), (jnp.arange(n_kv), k_chunks, v_chunks)
     )
-    out = acc / jnp.maximum(l, 1e-30)[..., None]  # [b,h,cq,hd]
+    out = acc / jnp.maximum(lsum, 1e-30)[..., None]  # [b,h,cq,hd]
     return out.transpose(0, 2, 1, 3)  # [b,cq,h,hd]
 
 
@@ -394,7 +393,8 @@ def init_mlp(key: jax.Array, cfg: ArchConfig, d_ff: int | None = None) -> Params
 def apply_mlp(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
     dt = cdtype(cfg)
     act = getattr(jax.nn, cfg.act)
-    mm = lambda a, b: jnp.einsum("bsd,df->bsf", a, b, preferred_element_type=dt)
+    def mm(a, b):
+        return jnp.einsum("bsd,df->bsf", a, b, preferred_element_type=dt)
     w1 = shard(p["w1"].astype(dt), "w_ffn_in")  # explicit FSDP gathers
     w3 = shard(p["w3"].astype(dt), "w_ffn_in")
     w2 = shard(p["w2"].astype(dt), "w_ffn_out")

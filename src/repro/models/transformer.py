@@ -13,7 +13,6 @@ layers through the grouped-dispatch MoE.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

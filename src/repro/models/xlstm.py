@@ -67,7 +67,6 @@ def _mlstm_gates(p: Params, x: jax.Array, cfg: ArchConfig):
         "...d,dk->...k", x, shard(p["wqkvz"].astype(dt_c), "w_dense"),
         preferred_element_type=dt_c,
     )
-    d = cfg.d_model
     q, k, v, z = jnp.split(qkvz, 4, axis=-1)
     gates = (x @ p["wif"].astype(dt_c)).astype(jnp.float32) + p["b_if"].astype(
         jnp.float32
@@ -230,7 +229,6 @@ def _slstm_cell(p: Params, xg: jax.Array, state, cfg: ArchConfig):
     rec = jnp.einsum("bhd,ghde->bghe", hh.astype(jnp.float32), p["r"].astype(jnp.float32))
     rec = rec.reshape(bsz, 4 * hp.shape[-1])
     pre = xg.astype(jnp.float32) + rec
-    d = hp.shape[-1]
     i_raw, f_raw, z_raw, o_raw = jnp.split(pre, 4, axis=-1)
     log_f = jax.nn.log_sigmoid(f_raw)
     log_i = jnp.clip(i_raw, -10.0, 10.0)
@@ -286,7 +284,6 @@ def apply_slstm_decode(
     p: Params, x: jax.Array, cache: Params, cfg: ArchConfig
 ) -> tuple[jax.Array, Params]:
     dt_c = jnp.dtype(cfg.dtype)
-    bsz = x.shape[0]
     xg = x[:, 0] @ p["wx"].astype(dt_c) + p["bias"].astype(dt_c)
     state = (cache["h"], cache["c"], cache["n"], cache["m"])
     h_new, c_new, n_new, m_new = _slstm_cell(p, xg, state, cfg)

@@ -149,7 +149,6 @@ def parse_hlo(text: str) -> tuple[dict[str, Computation], str]:
             name, rhs = m.groups()
             if line.lstrip().startswith("ROOT"):
                 cur.root = name
-            sm = _SHAPE_RE.search(rhs)
             result_shape = rhs.split(" ", 1)[0]
             # op kind: first identifier after the result shape
             after = rhs
@@ -220,7 +219,6 @@ def _dot_flops(op: OpInfo, comp: Computation) -> float:
         nm = _OPERAND_RE.search(lhs_txt)
         if not nm or nm.group(1) not in comp.shapes:
             return 0.0
-        shp = _shapes_in(comp.shapes[nm.group(1)])
         raw = _SHAPE_RE.search(comp.shapes[nm.group(1)])
         dims = [int(x) for x in raw.group(2).split(",") if x] if raw else []
     contracted = 1

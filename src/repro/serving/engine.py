@@ -8,7 +8,6 @@ vector, and every decode step is one fixed-shape jit call.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

@@ -35,7 +35,7 @@ def _tree_zeros_like(params: PyTree) -> PyTree:
 def global_norm(tree: PyTree) -> jax.Array:
     leaves = jax.tree.leaves(tree)
     return jnp.sqrt(
-        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+        sum(jnp.sum(jnp.square(leaf.astype(jnp.float32))) for leaf in leaves)
     )
 
 
@@ -101,7 +101,8 @@ def adamw(
         nu_new = b2 * nu + (1 - b2) * g2
         return nu_new, nu_new
 
-    _is_factored = lambda x: isinstance(x, dict) and set(x) == {"row", "col"}
+    def _is_factored(x):
+        return isinstance(x, dict) and set(x) == {"row", "col"}
 
     def update(grads: PyTree, state: AdamState, params: PyTree):
         if max_grad_norm is not None:
@@ -151,9 +152,10 @@ def adamw(
             maybe_chunked, params, state.mu, state.nu, grads, decay_mask,
             is_leaf=lambda x: _is_factored(x),
         )
-        unpack = lambda i: jax.tree.map(
-            lambda t: t[i], triples, is_leaf=lambda x: isinstance(x, tuple)
-        )
+        def unpack(i):
+            return jax.tree.map(
+                lambda t: t[i], triples, is_leaf=lambda x: isinstance(x, tuple)
+            )
         new_params, mu, nu = unpack(0), unpack(1), unpack(2)
         return new_params, AdamState(step=step, mu=mu, nu=nu)
 

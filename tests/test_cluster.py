@@ -17,7 +17,6 @@ from repro.cluster import ClusterSim, Scenario
 from repro.cluster.controller import make_controller
 from repro.core import curves, mckp, policies, surfaces, types
 from repro.core.emulator import ClusterEmulator
-from repro.core.types import AppSpec
 
 
 @pytest.fixture(scope="module")

@@ -4,7 +4,6 @@ import numpy as np
 import pytest
 
 from repro.core import emulator, surfaces, types
-from repro.core.types import AppSpec
 
 
 @pytest.fixture(scope="module")

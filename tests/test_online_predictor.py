@@ -1,0 +1,259 @@
+"""Online-prediction loop tests (DESIGN.md §10).
+
+Certifies the closed-loop contracts:
+ * telemetry records are bit-identical to the engine's measured
+   improvements (same arrays by construction);
+ * the incremental NCF update equals a from-scratch ``infer_app`` on the
+   same observations (seeded, bit-for-bit);
+ * the batched multi-app online fit matches sequential per-app fits;
+ * controller cache invalidation fires only on tolerance-exceeding
+   surface moves;
+ * a cold-start arrival runs end-to-end under ``ecoshift_online`` and its
+   telemetry-refreshed surface beats the population prior.
+"""
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ClusterSim,
+    OnlinePredictor,
+    OnlinePredictorConfig,
+    Scenario,
+)
+from repro.cluster.controller import make_controller
+from repro.core import metrics, ncf, profiler, surfaces, types
+from repro.core.allocator import EcoShiftAllocator
+
+#: tiny config: the loop contracts don't need benchmark-grade accuracy
+FAST = ncf.NCFConfig(train_steps=250, online_steps=150, embed_dim=8)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    system = types.SYSTEM_1
+    apps, surfs = surfaces.build_paper_suite(system)
+    train = [a for a in apps if a.sclass in "CGB"][:8]
+    hist = {a.name: surfs[a.name] for a in train}
+    alloc = EcoShiftAllocator.train_offline(system, hist, FAST)
+    for a in train:
+        alloc.onboard_known(a.name)
+    return system, apps, surfs, train, alloc
+
+
+# ---------------------------------------------------------------------------
+# Telemetry emission
+# ---------------------------------------------------------------------------
+
+
+class TestTelemetry:
+    def test_records_bit_identical_to_improvements(self, trained):
+        system, apps, surfs, train, _ = trained
+        sim = ClusterSim.build(system, train, surfs, n_nodes=12, seed=0)
+        res = sim.run_round(make_controller("dps", system), budget=900.0)
+        tele = sim.last_telemetry
+        assert len(tele) == len(res.improvements)
+        assert {r.instance: r.improvement for r in tele} == res.improvements
+        for r in tele:
+            # the improvement is derived from exactly the recorded runtimes
+            assert r.improvement == (r.t_baseline - r.t_allocated) / r.t_baseline
+            assert r.allocated_caps == res.allocation.caps[r.instance]
+
+    def test_loop_measurement_emits_no_telemetry(self, trained):
+        system, apps, surfs, train, _ = trained
+        sim = ClusterSim.build(system, train, surfs, n_nodes=8, seed=1)
+        sim.run_round(
+            make_controller("dps", system),
+            budget=500.0,
+            use_loop_measurement=True,
+        )
+        assert sim.last_telemetry == ()
+
+    def test_run_attaches_telemetry_to_records(self, trained):
+        system, apps, surfs, train, _ = trained
+        sim = ClusterSim.build(system, train, surfs, n_nodes=8, seed=2)
+        trace = sim.run(Scenario.constant(2, budget=600.0), "dps")
+        for rec in trace.records:
+            assert len(rec.telemetry) == len(rec.result.improvements)
+            assert all(t.round == rec.round for t in rec.telemetry)
+
+
+# ---------------------------------------------------------------------------
+# Incremental / batched NCF online phase
+# ---------------------------------------------------------------------------
+
+
+class TestIncrementalUpdate:
+    def test_update_equals_from_scratch_infer(self, trained):
+        system, apps, surfs, train, alloc = trained
+        base = alloc.predictor
+        unseen = [a for a in apps if a.name not in base.app_index][0]
+        full = profiler.profile_app(surfs[unseen.name], system, n_samples=8, seed=3)
+        few = dict(list(full.items())[:4])
+
+        scratch = base.infer_app("probe", full)
+        stale = base.infer_app("probe", few)
+        incremental = stale.update_app("probe", full)
+
+        i, j = scratch.app_index["probe"], incremental.app_index["probe"]
+        np.testing.assert_array_equal(
+            scratch.params["app_gmf"][i], incremental.params["app_gmf"][j]
+        )
+        np.testing.assert_array_equal(
+            scratch.params["app_mlp"][i], incremental.params["app_mlp"][j]
+        )
+        np.testing.assert_array_equal(
+            scratch.predict_log_ratios("probe"),
+            incremental.predict_log_ratios("probe"),
+        )
+
+    def test_update_does_not_touch_shared_params_or_other_apps(self, trained):
+        system, apps, surfs, train, alloc = trained
+        base = alloc.predictor
+        other = train[0].name
+        before = np.array(base.params["app_gmf"][base.app_index[other]])
+        samples = profiler.profile_app(surfs[train[1].name], system, seed=9)
+        updated = base.update_app(train[1].name, samples)
+        np.testing.assert_array_equal(
+            before, updated.params["app_gmf"][updated.app_index[other]]
+        )
+        np.testing.assert_array_equal(
+            base.params["cfg_gmf"], updated.params["cfg_gmf"]
+        )
+
+    def test_batched_matches_sequential(self, trained):
+        system, apps, surfs, train, alloc = trained
+        base = alloc.predictor
+        unseen = [a for a in apps if a.name not in base.app_index][:2]
+        sa = profiler.profile_app(surfs[unseen[0].name], system, n_samples=8, seed=4)
+        sb = profiler.profile_app(surfs[unseen[1].name], system, n_samples=6, seed=5)
+        seq = base.infer_app("a", sa).infer_app("b", sb)
+        bat = base.update_apps({"a": sa, "b": sb})
+        for n in ("a", "b"):
+            np.testing.assert_allclose(
+                seq.predict_log_ratios(n),
+                bat.predict_log_ratios(n),
+                atol=1e-4,
+            )
+
+    def test_update_apps_empty_is_identity(self, trained):
+        _, _, _, _, alloc = trained
+        assert alloc.predictor.update_apps({}) is alloc.predictor
+
+
+# ---------------------------------------------------------------------------
+# Tolerance-gated surface refresh / cache invalidation
+# ---------------------------------------------------------------------------
+
+
+class TestToleranceGate:
+    def _predictor(self, trained, **kw):
+        _, _, _, _, alloc = trained
+        pred = OnlinePredictor(alloc.predictor, OnlinePredictorConfig(**kw))
+        pred.seed_surfaces(alloc.predicted)
+        return pred
+
+    def _run_rounds(self, trained, pred, n_rounds=3, n_nodes=10):
+        system, apps, surfs, train, _ = trained
+        sim = ClusterSim.build(system, train, surfs, n_nodes=n_nodes, seed=3)
+        ctrl = make_controller("ecoshift_online", system, predictor=pred)
+        budgets = tuple(500.0 + 250.0 * r for r in range(n_rounds))
+        sim.run(Scenario(n_rounds=n_rounds, budget=budgets), ctrl)
+        return ctrl
+
+    def test_accurate_surfaces_never_refit(self, trained):
+        """Seeded offline surfaces predict well: the drift detector stays
+        quiet, no refits happen, warm option tables survive every round."""
+        pred = self._predictor(trained, err_threshold=0.5)
+        ctrl = self._run_rounds(trained, pred)
+        assert pred.n_refits == 0
+        assert ctrl.cached_tables > 0
+
+    def test_infinite_tolerance_never_invalidates(self, trained):
+        """Refits may run (zero err threshold) but with tol=inf no served
+        surface is ever swapped, so no cache entry is ever dropped."""
+        pred = self._predictor(trained, err_threshold=0.0, tol=np.inf)
+        ctrl = self._run_rounds(trained, pred)
+        assert pred.n_refits > 0
+        assert pred.last_moves  # refreshed surfaces were compared...
+        assert ctrl.cached_tables > 0  # ...but none replaced the served one
+
+    def test_zero_tolerance_invalidates_on_refit(self, trained):
+        pred = self._predictor(trained, err_threshold=0.0, tol=0.0)
+        before = dict(pred.surfaces)
+        self._run_rounds(trained, pred)
+        assert pred.n_refits > 0
+        moved = [a for a in before if pred.surfaces[a] is not before[a]]
+        assert moved  # every refit exceeded tol=0 and swapped the surface
+
+    def test_cold_app_first_fit_always_counts_as_moved(self, trained):
+        system, apps, surfs, train, alloc = trained
+        pred = OnlinePredictor(
+            alloc.predictor, OnlinePredictorConfig(tol=1e9, min_cells=2)
+        )
+        # cold: no seeded surfaces at all; first refresh must serve surfaces
+        sim = ClusterSim.build(system, train[:4], surfs, n_nodes=6, seed=4)
+        ctrl = make_controller("ecoshift_online", system, predictor=pred)
+        sim.run(Scenario.constant(2, budget=700.0), ctrl)
+        assert pred.n_refits > 0
+        # despite tol=1e9, every first fit served its surface (cold fits
+        # always count as moved); later drift refits may record finite moves
+        assert pred.surfaces
+        assert not all(pred.is_cold(a.name) for a in train[:4])
+
+
+# ---------------------------------------------------------------------------
+# Cold-start arrival end-to-end
+# ---------------------------------------------------------------------------
+
+
+class TestColdStart:
+    def test_arrival_converges_under_online_controller(self, trained):
+        system, apps, surfs, train, alloc = trained
+        cold = [
+            a for a in apps if a.sclass == "B" and a.name not in alloc.predicted
+        ][0]
+        pred = OnlinePredictor(alloc.predictor, OnlinePredictorConfig())
+        pred.seed_surfaces(alloc.predicted)
+        ctrl = make_controller("ecoshift_online", system, predictor=pred)
+
+        n_nodes, n_rounds = 12, 6
+        sim = ClusterSim.build(system, train, surfs, n_nodes=n_nodes, seed=0)
+        budgets = tuple(600.0 + 300.0 * ((3 * r) % 4) for r in range(n_rounds))
+        scen = Scenario(n_rounds=n_rounds, budget=budgets).with_arrival(1, cold)
+        trace = sim.run(scen, ctrl)
+
+        inst = f"{cold.name}#n{n_nodes}"
+        imp = trace.improvements_of(inst)
+        assert np.isnan(imp[0]) and np.isfinite(imp[1:]).all()
+        # telemetry warmed the app up: it is no longer cold and its served
+        # surface now predicts its measured improvements well
+        assert not pred.is_cold(cold.name)
+        assert pred.n_refits > 0
+        assert pred.prediction_error[cold.name] < 0.05
+        # the refreshed surface is closer to truth than the prior was
+        grid = system.grid
+        cc, gg = np.meshgrid(grid.cpu_levels, grid.gpu_levels, indexing="ij")
+        base = (system.init_cpu, system.init_gpu)
+        true = surfs[cold.name]
+        p_true = true.runtime(*base) / true.runtime(cc, gg)
+
+        def acc(surf):
+            p = surf.runtime(*base) / surf.runtime(cc, gg)
+            return float(
+                np.mean(metrics.prediction_accuracy(p_true.ravel(), p.ravel()))
+            )
+
+        assert acc(pred.surfaces[cold.name]) >= acc(pred.prior_surface())
+
+    def test_arrival_with_novel_surface_registers_ground_truth(self, trained):
+        system, apps, surfs, train, _ = trained
+        novel = types.AppSpec(name="novel.app", sclass="B", surface_id="novel.app")
+        novel_surface = surfs[apps[0].name]
+        sim = ClusterSim.build(system, train, surfs, n_nodes=6, seed=5)
+        scen = Scenario.constant(2, budget=500.0).with_arrival(
+            1, novel, surface=novel_surface
+        )
+        trace = sim.run(scen, "dps")
+        assert trace.records[1].n_alive == 7
+        assert sim.surfaces["novel.app"] is novel_surface

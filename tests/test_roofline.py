@@ -131,6 +131,6 @@ class TestRooflineModel:
         for arch in ("granite-3-2b", "xlstm-1.3b", "zamba2-2.7b"):
             cfg = configs.get_config(arch)
             abstract = Model(cfg).abstract_params()
-            actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(abstract))
+            actual = sum(int(np.prod(leaf.shape)) for leaf in jax.tree.leaves(abstract))
             analytic = roof.param_count(cfg)
             assert abs(actual - analytic) / actual < 0.10, arch

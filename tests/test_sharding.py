@@ -1,7 +1,6 @@
 """Sharding-rule unit tests: PartitionSpecs, layouts, abstract input specs."""
 
 import jax
-import numpy as np
 import pytest
 from jax.sharding import AbstractMesh
 from jax.sharding import PartitionSpec as P

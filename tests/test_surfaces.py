@@ -1,7 +1,6 @@
 """Power-performance surface tests: paper-anchor exactness + invariants."""
 
 import numpy as np
-import pytest
 
 try:
     import hypothesis

@@ -1,13 +1,21 @@
 #!/usr/bin/env bash
-# Tier-1 verify + cluster-engine smoke, as run by .github/workflows/ci.yml.
+# Local mirror of .github/workflows/ci.yml: lint (when ruff is available),
+# tier-1 verify, and the cluster-engine + online-prediction smoke.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+if command -v ruff >/dev/null 2>&1; then
+  echo "== lint (ruff check) =="
+  ruff check .
+else
+  echo "== lint skipped (ruff not installed; CI runs it) =="
+fi
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
-echo "== cluster.sim smoke scenario (CPU interpret mode) =="
+echo "== cluster.sim smoke scenario (CPU interpret mode, incl. online prediction) =="
 python tools/smoke_scenario.py

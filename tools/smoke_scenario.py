@@ -3,7 +3,10 @@
 5 rounds, 50 nodes, one failure and one straggler, for both the
 ``ecoshift`` and ``dps`` controllers — on CPU (Pallas interpret mode for
 the jax-solver round).  Also reports the vectorized-vs-loop measurement
-speedup at 100 nodes.  Exits nonzero on any regression; budget < 60 s.
+speedup at 100 nodes, and exercises the online-prediction path: a
+cold-start arrival (no pretrained surface) converging under the
+``ecoshift_online`` controller within a handful of telemetry rounds.
+Exits nonzero on any regression; hard wall-clock budget < 60 s.
 
     PYTHONPATH=src python tools/smoke_scenario.py
 """
@@ -14,9 +17,57 @@ import time
 
 import numpy as np
 
-from repro.cluster import ClusterSim, Scenario
+from repro.cluster import (
+    ClusterSim,
+    OnlinePredictor,
+    OnlinePredictorConfig,
+    Scenario,
+)
 from repro.cluster.controller import make_controller
-from repro.core import surfaces, types
+from repro.core import ncf, surfaces, types
+from repro.core.allocator import EcoShiftAllocator
+
+#: hard wall-clock budget for the whole smoke (shared CI runners)
+BUDGET_S = 60.0
+
+
+def online_prediction_smoke(system, apps, surfs) -> None:
+    """Cold-start arrival through the telemetry-driven prediction loop."""
+    train = [a for a in apps if a.sclass in "CGB"][:8]
+    cold = [
+        a
+        for a in apps
+        if a.sclass == "B" and all(a.name != t.name for t in train)
+    ][0]
+    cfg = ncf.NCFConfig(train_steps=250, online_steps=150, embed_dim=8)
+    alloc = EcoShiftAllocator.train_offline(
+        system, {a.name: surfs[a.name] for a in train}, cfg
+    )
+    for a in train:
+        alloc.onboard_known(a.name)
+
+    pred = OnlinePredictor(alloc.predictor, OnlinePredictorConfig())
+    pred.seed_surfaces(alloc.predicted)
+    ctrl = make_controller("ecoshift_online", system, predictor=pred)
+
+    n_nodes, n_rounds = 14, 6
+    sim = ClusterSim.build(system, train, surfs, n_nodes=n_nodes, seed=0)
+    budgets = tuple(600.0 + 300.0 * ((3 * r) % 4) for r in range(n_rounds))
+    scen = Scenario(n_rounds=n_rounds, budget=budgets).with_arrival(1, cold)
+    trace = sim.run(scen, ctrl)
+
+    inst = f"{cold.name}#n{n_nodes}"
+    imp = trace.improvements_of(inst)
+    assert np.isfinite(imp[1:]).all(), imp
+    assert not pred.is_cold(cold.name), "arrival never left cold start"
+    assert pred.n_refits > 0, "telemetry never triggered an online fit"
+    err = pred.prediction_error.get(cold.name, np.inf)
+    assert err < 0.05, f"online surface still mispredicts: err={err:.3f}"
+    print(
+        f"online    cold-start {cold.name}: refits={pred.n_refits} "
+        f"pred_err={err:.4f} "
+        f"improvements={[f'{x * 100:.1f}%' for x in imp[1:]]}"
+    )
 
 
 def main() -> None:
@@ -81,7 +132,11 @@ def main() -> None:
     # check runs in tests/test_cluster.py
     assert speedup >= 2.0, f"vectorized speedup regressed to {speedup:.1f}x"
 
-    print(f"smoke scenario OK in {time.perf_counter() - t_start:.1f} s")
+    online_prediction_smoke(system, apps, surfs)
+
+    elapsed = time.perf_counter() - t_start
+    assert elapsed < BUDGET_S, f"smoke took {elapsed:.1f} s (budget {BUDGET_S} s)"
+    print(f"smoke scenario OK in {elapsed:.1f} s")
 
 
 if __name__ == "__main__":
