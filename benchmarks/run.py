@@ -18,6 +18,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        cluster_scaling,
         dp_scaling,
         fig1_heatmaps,
         fig2_marginal_gain,
@@ -45,6 +46,7 @@ def main() -> None:
         ("fig10", fig10_oracle_gap.run, True),
         ("fig11", fig11_fairness.run, True),
         ("dp_scaling", dp_scaling.run, True),
+        ("cluster_scaling", cluster_scaling.run, True),
         ("roofline", roofline_report.run, False),
         ("pod_power", pod_power_allocation.run, True),
         ("straggler", straggler_response.run, True),

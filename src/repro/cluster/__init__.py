@@ -26,7 +26,14 @@ from repro.cluster.scenario import (  # noqa: F401
 from repro.cluster.predictor import (  # noqa: F401
     OnlinePredictor,
     OnlinePredictorConfig,
+    TelemetryBatch,
     TelemetryRecord,
 )
-from repro.cluster.sim import ClusterSim, RoundRecord, SimResult  # noqa: F401
+from repro.cluster.sim import (  # noqa: F401
+    ClusterSim,
+    NodeState,
+    NodeTable,
+    RoundRecord,
+    SimResult,
+)
 from repro.cluster.controller import Controller, make_controller  # noqa: F401

@@ -28,6 +28,7 @@ counterpart in ``POLICIES`` — the online phase is inherently stateful.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Mapping, Sequence
 
 import numpy as np
@@ -39,9 +40,9 @@ from repro.core.surfaces import PowerSurface
 from repro.core.types import (
     Allocation,
     AppSpec,
+    ReceiverBatch,
     SystemSpec,
     as_receiver_order,
-    validate_allocation,
 )
 
 
@@ -52,6 +53,9 @@ class Controller:
     policy: str = ""
     #: True for policies that always see ground-truth surfaces (Oracle)
     sees_truth: bool = False
+    #: True when the controller consumes a columnar ``ReceiverBatch`` via
+    #: ``allocate_grouped`` (group-collapsed DP controllers)
+    supports_grouped: bool = False
 
     def __init__(self, system: SystemSpec):
         self.system = system
@@ -105,7 +109,24 @@ class MixedAdaptiveController(_StatelessController):
 
 
 class _OptionCachingController(Controller):
-    """Shared warm ``OptionTable`` cache for the DP-based policies."""
+    """Shared warm ``OptionTable`` caches for the DP-based policies.
+
+    Two cache layers:
+
+     * per-instance tables keyed by name (the legacy ungrouped path);
+     * **group tables** keyed by (surface identity, baseline) — one table
+       per behaviour class, shared by every member, feeding the
+       group-collapsed solvers.  Keys are value+identity based, so event
+       invalidation is implicit: a straggler/phase-change swaps the
+       surface object and the stale entry simply stops matching (stale
+       keys are pruned opportunistically).
+
+    Both layers build budget-independent tables (grid headroom ceiling;
+    all MCKP solvers skip over-budget options), so after a node failure
+    only the *pool* changes and re-optimization reuses every surviving
+    table — the incremental re-solve the paper's fault-tolerance study
+    needs.
+    """
 
     def __init__(self, system: SystemSpec):
         super().__init__(system)
@@ -113,17 +134,23 @@ class _OptionCachingController(Controller):
         self._options: dict[
             str, tuple[tuple[float, float], PowerSurface, OptionTable]
         ] = {}
+        #: (id(surface), baseline) -> (surface, table)
+        self._group_tables: dict[tuple, tuple[PowerSurface, OptionTable]] = {}
+        #: (table digest, multiplicity, budget) -> aggregate sparse curve
+        self._agg_curves: dict[tuple, object] = {}
 
     def invalidate(self, names: Sequence[str] | None = None) -> None:
         if names is None:
             self._options.clear()
+            self._group_tables.clear()
+            self._agg_curves.clear()
         else:
             for n in names:
                 self._options.pop(n, None)
 
     @property
     def cached_tables(self) -> int:
-        return len(self._options)
+        return len(self._options) + len(self._group_tables)
 
     def _options_for(
         self,
@@ -148,6 +175,44 @@ class _OptionCachingController(Controller):
             out.append(table)
         return out
 
+    def _group_table(
+        self, surf: PowerSurface, base: tuple[float, float]
+    ) -> OptionTable:
+        key = (id(surf), base)
+        hit = self._group_tables.get(key)
+        if hit is not None and hit[0] is surf:
+            return hit[1]
+        table = curves.build_options("class", surf, base, self.system.grid, np.inf)
+        self._group_tables[key] = (surf, table)
+        return table
+
+    def _grouped_options_for(
+        self, batch: ReceiverBatch
+    ) -> list[mckp.GroupedOptions]:
+        """Collapse a receiver batch into behaviour-class groups.
+
+        Group key is (surface identity, baseline): all members share one
+        warm option table, built once per class instead of once per node.
+        """
+        touched: dict[tuple, None] = {}
+
+        def table_for(surf, base):
+            touched[(id(surf), base)] = None
+            return self._group_table(surf, base)
+
+        groups = mckp.collapse_receivers(
+            batch.names, batch.surfaces, batch.baselines, table_for
+        )
+        # opportunistic prune: identity-keyed entries whose surface was
+        # swapped (online refresh, phase change) can never match again
+        if len(self._group_tables) > max(64, 4 * len(groups)):
+            self._group_tables = {
+                k: v for k, v in self._group_tables.items() if k in touched
+            }
+        if len(self._agg_curves) > 512:
+            self._agg_curves.clear()
+        return groups
+
 
 @policies_mod.register_controller("ecoshift")
 class EcoShiftController(_OptionCachingController):
@@ -166,12 +231,20 @@ class EcoShiftController(_OptionCachingController):
         solver: str = "sparse",
         unit: float = 1.0,
         allocator=None,
+        grouped: bool = True,
     ):
         super().__init__(system)
         self.solver = solver
         self.unit = unit
         #: optional repro.core.allocator.EcoShiftAllocator (warm NCF handle)
         self.allocator = allocator
+        #: group-collapsed allocation (one DP super-stage per behaviour
+        #: class); False forces the legacy per-instance path
+        self.grouped = grouped
+
+    @property
+    def supports_grouped(self) -> bool:  # type: ignore[override]
+        return self.grouped
 
     def _solve(self, options, budget) -> mckp.MCKPSolution:
         if self.solver == "sparse":
@@ -187,14 +260,25 @@ class EcoShiftController(_OptionCachingController):
     def allocate(self, receivers, baselines, budget, surfaces):
         options = self._options_for(receivers, baselines, surfaces)
         sol = self._solve(options, budget)
-        caps = {name: pick[2] for name, pick in sol.picks.items()}
-        alloc = Allocation(
-            caps=caps,
-            spent=sol.spent,
-            predicted_improvement=sol.average_improvement(),
+        return policies_mod.allocation_from_solution(
+            sol, baselines, budget, self.system.grid
         )
-        validate_allocation(alloc, baselines, budget, self.system.grid)
-        return alloc
+
+    def allocate_grouped(self, batch: ReceiverBatch, budget: float) -> Allocation:
+        """Group-collapsed round: receivers sharing (surface identity,
+        baseline) solve as one multiplicity-m DP super-stage — parity with
+        :meth:`allocate` is certified by tests/test_grouped_alloc.py."""
+        groups = self._grouped_options_for(batch)
+        sol = mckp.solve_grouped(
+            groups,
+            budget,
+            solver=self.solver,
+            unit=self.unit,
+            curve_cache=self._agg_curves,
+        )
+        return policies_mod.allocation_from_solution(
+            sol, batch.baselines_map(), budget, self.system.grid
+        )
 
     def allocate_batch(
         self,
@@ -218,17 +302,12 @@ class EcoShiftController(_OptionCachingController):
             unit=self.unit,
             backend=backend,
         )
-        allocs = []
-        for budget, sol in zip(budgets, sols):
-            caps = {name: pick[2] for name, pick in sol.picks.items()}
-            alloc = Allocation(
-                caps=caps,
-                spent=sol.spent,
-                predicted_improvement=sol.average_improvement(),
+        return [
+            policies_mod.allocation_from_solution(
+                sol, baselines, budget, self.system.grid
             )
-            validate_allocation(alloc, baselines, budget, self.system.grid)
-            allocs.append(alloc)
-        return allocs
+            for budget, sol in zip(budgets, sols)
+        ]
 
 
 @policies_mod.register_controller("ecoshift_online", pure=False)
@@ -249,6 +328,9 @@ class EcoShiftOnlineController(EcoShiftController):
     """
 
     policy = "ecoshift_online"
+    #: the engine skips filling ReceiverBatch.surfaces: every surface
+    #: comes from the predictor, and ground truth must not transit here
+    serves_own_surfaces = True
 
     def __init__(
         self,
@@ -269,6 +351,15 @@ class EcoShiftOnlineController(EcoShiftController):
         }
         return super().allocate(receivers, baselines, budget, seen)
 
+    def allocate_grouped(self, batch: ReceiverBatch, budget: float):
+        served = [
+            self.predictor.surface_for(name, sid)
+            for name, sid in zip(batch.names, batch.surface_ids)
+        ]
+        return super().allocate_grouped(
+            dataclasses.replace(batch, surfaces=served), budget
+        )
+
     def ingest_telemetry(self, records) -> None:
         self.predictor.observe(records)
         self.predictor.refresh()
@@ -280,6 +371,7 @@ class OracleController(_OptionCachingController):
 
     policy = "oracle"
     sees_truth = True
+    supports_grouped = True
 
     def __init__(self, system: SystemSpec, *, exhaustive: bool | None = None):
         super().__init__(system)
@@ -296,14 +388,25 @@ class OracleController(_OptionCachingController):
             if exhaustive
             else mckp.solve_sparse(options, budget)
         )
-        caps = {name: pick[2] for name, pick in sol.picks.items()}
-        alloc = Allocation(
-            caps=caps,
-            spent=sol.spent,
-            predicted_improvement=sol.average_improvement(),
+        return policies_mod.allocation_from_solution(
+            sol, baselines, budget, self.system.grid
         )
-        validate_allocation(alloc, baselines, budget, self.system.grid)
-        return alloc
+
+    def allocate_grouped(self, batch: ReceiverBatch, budget: float) -> Allocation:
+        groups = self._grouped_options_for(batch)
+        exhaustive = (
+            len(batch) <= 10 if self.exhaustive is None else self.exhaustive
+        )
+        sol = (
+            mckp.brute_force(mckp.expand_groups(groups), budget)
+            if exhaustive
+            else mckp.solve_sparse_grouped(
+                groups, budget, curve_cache=self._agg_curves
+            )
+        )
+        return policies_mod.allocation_from_solution(
+            sol, batch.baselines_map(), budget, self.system.grid
+        )
 
 
 def make_controller(policy: str, system: SystemSpec, **kwargs) -> Controller:

@@ -70,6 +70,61 @@ class TelemetryRecord:
     improvement: float
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class TelemetryBatch:
+    """One round's telemetry as columns (DESIGN.md §11).
+
+    The engine emits measurement arrays directly — instance/app identities
+    are interned ids into the cluster's shared string table, caps and
+    runtimes are [n]- or [n, 2]-arrays.  Iterating (or indexing) a batch
+    materializes :class:`TelemetryRecord` views lazily, so record-oriented
+    consumers keep working while :class:`OnlinePredictor` ingests the
+    columns wholesale.
+    """
+
+    round: int
+    inst_gids: np.ndarray  # [n] int32 into ``strings`` (instance names)
+    app_gids: np.ndarray  # [n] int32 into ``strings`` (base-app names)
+    strings: list  # shared interned string table (append-only)
+    baseline_caps: np.ndarray  # [n, 2]
+    allocated_caps: np.ndarray  # [n, 2]
+    t_baseline: np.ndarray  # [n]
+    t_allocated: np.ndarray  # [n]
+    improvement: np.ndarray  # [n]
+
+    def __len__(self) -> int:
+        return len(self.inst_gids)
+
+    def record(self, i: int) -> TelemetryRecord:
+        return TelemetryRecord(
+            round=self.round,
+            instance=self.strings[self.inst_gids[i]],
+            base_app=self.strings[self.app_gids[i]],
+            baseline_caps=(
+                float(self.baseline_caps[i, 0]),
+                float(self.baseline_caps[i, 1]),
+            ),
+            allocated_caps=(
+                float(self.allocated_caps[i, 0]),
+                float(self.allocated_caps[i, 1]),
+            ),
+            t_baseline=float(self.t_baseline[i]),
+            t_allocated=float(self.t_allocated[i]),
+            improvement=float(self.improvement[i]),
+        )
+
+    def __getitem__(self, i: int) -> TelemetryRecord:
+        return self.record(i)
+
+    def __iter__(self):
+        for i in range(len(self)):
+            yield self.record(i)
+
+    @property
+    def instances(self) -> list[str]:
+        return [self.strings[g] for g in self.inst_gids]
+
+
 # ---------------------------------------------------------------------------
 # Online predictor
 # ---------------------------------------------------------------------------
@@ -204,9 +259,16 @@ class OnlinePredictor:
         slot[0] += t
         slot[1] += 1
 
-    def observe(self, records: Iterable[TelemetryRecord]) -> None:
+    def observe(self, records: "Iterable[TelemetryRecord] | TelemetryBatch") -> None:
         """Ingest one round of telemetry: buffer both measurement points of
-        every record and update the per-app prediction-error EMA."""
+        every record and update the per-app prediction-error EMA.
+
+        A :class:`TelemetryBatch` takes the columnar fast path — one
+        vectorized grid snap for all caps and one served-surface evaluation
+        per app over its records — bit-identical to the record loop."""
+        if isinstance(records, TelemetryBatch):
+            self._observe_batch(records)
+            return
         for r in records:
             self._app_of_instance[r.instance] = r.base_app
             self._push(r.base_app, r.instance, r.baseline_caps, r.t_baseline)
@@ -223,6 +285,78 @@ class OnlinePredictor:
                 self.prediction_error[r.base_app] = (
                     err if prev is None else a * err + (1 - a) * prev
                 )
+
+    def _observe_batch(self, batch: TelemetryBatch) -> None:
+        """Columnar ingest over the batch's interned id tables.
+
+        Cell snapping is one vectorized nearest-level lookup for all 2n
+        measurement points, and the served surface evaluates once per app
+        across its records (the drift EMA folds in record order, exactly
+        like the sequential path).  Buffer pushes replay the interleaved
+        [baseline, allocated] stream so cell admission under ``max_cells``
+        is order-identical to :meth:`observe` on the record views."""
+        n = len(batch)
+        if n == 0:
+            return
+        strings = batch.strings
+        grid = self.system.grid
+
+        def snap_cols(caps: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+            ci = np.argmin(
+                np.abs(grid.cpu_levels[None, :] - caps[:, 0][:, None]), axis=1
+            )
+            gi = np.argmin(
+                np.abs(grid.gpu_levels[None, :] - caps[:, 1][:, None]), axis=1
+            )
+            return grid.cpu_levels[ci], grid.gpu_levels[gi]
+
+        bc, bg = snap_cols(batch.baseline_caps)
+        ac, ag = snap_cols(batch.allocated_caps)
+        max_cells = self.cfg.max_cells
+        for i in range(n):
+            app = strings[batch.app_gids[i]]
+            inst = strings[batch.inst_gids[i]]
+            self._app_of_instance[inst] = app
+            buf = self._buffers.setdefault((app, inst), {})
+            for cell, t in (
+                ((float(bc[i]), float(bg[i])), float(batch.t_baseline[i])),
+                ((float(ac[i]), float(ag[i])), float(batch.t_allocated[i])),
+            ):
+                if cell not in buf and len(buf) >= max_cells:
+                    continue
+                slot = buf.setdefault(cell, [0.0, 0])
+                slot[0] += t
+                slot[1] += 1
+
+        by_app: dict[int, list[int]] = {}
+        for i in range(n):
+            by_app.setdefault(int(batch.app_gids[i]), []).append(i)
+        a = self.cfg.err_ema
+        for gid, idx in by_app.items():
+            app = strings[gid]
+            self._dirty.add(app)
+            served = self.surfaces.get(app)
+            if served is None:
+                continue
+            ii = np.asarray(idx)
+            t0 = np.asarray(
+                served.runtime(
+                    batch.baseline_caps[ii, 0], batch.baseline_caps[ii, 1]
+                ),
+                np.float64,
+            )
+            tn = np.asarray(
+                served.runtime(
+                    batch.allocated_caps[ii, 0], batch.allocated_caps[ii, 1]
+                ),
+                np.float64,
+            )
+            preds = (t0 - tn) / t0
+            prev = self.prediction_error.get(app)
+            for k, i in enumerate(idx):
+                err = abs(float(preds[k]) - float(batch.improvement[i]))
+                prev = err if prev is None else a * err + (1 - a) * prev
+            self.prediction_error[app] = prev
 
     def _pooled_samples(self, app: str) -> dict[tuple[float, float], float]:
         """Pool an app's instance buffers into one {cell: runtime-ratio}.

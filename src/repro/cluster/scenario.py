@@ -120,7 +120,16 @@ class Scenario:
         return None if p is None else float(p)
 
     def events_at(self, r: int) -> tuple[Event, ...]:
-        return tuple(e for e in self.events if e.round == r)
+        # lazily indexed by round: scenario replay is O(rounds + events),
+        # not O(rounds * events) — large clusters carry thousands of events
+        idx = self.__dict__.get("_events_by_round")
+        if idx is None:
+            idx = {}
+            for e in self.events:
+                idx.setdefault(e.round, []).append(e)
+            idx = {k: tuple(v) for k, v in idx.items()}
+            object.__setattr__(self, "_events_by_round", idx)
+        return idx.get(r, ())
 
     # -- builders ------------------------------------------------------------
 
@@ -134,6 +143,16 @@ class Scenario:
                 f"event round {event.round} outside [0, {self.n_rounds})"
             )
         return dataclasses.replace(self, events=self.events + (event,))
+
+    def with_events(self, events: Sequence[Event]) -> "Scenario":
+        """Bulk variant of :meth:`with_event` (one replace, one validation
+        sweep — scaling scenarios attach thousands of events)."""
+        for e in events:
+            if not 0 <= e.round < self.n_rounds:
+                raise ValueError(
+                    f"event round {e.round} outside [0, {self.n_rounds})"
+                )
+        return dataclasses.replace(self, events=self.events + tuple(events))
 
     def with_failure(self, round: int, *node_ids: int) -> "Scenario":
         return self.with_event(NodeFailure(round=round, node_ids=tuple(node_ids)))

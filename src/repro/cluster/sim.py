@@ -1,31 +1,40 @@
 """Time-stepped multi-round cluster simulation engine (paper §5.4, temporal).
 
-``ClusterSim`` owns the node states and steps a :class:`Scenario` against a
-stateful :class:`~repro.cluster.controller.Controller`:
+``ClusterSim`` owns the cluster state and steps a :class:`Scenario` against
+a stateful :class:`~repro.cluster.controller.Controller`:
 
  1. apply this round's events (failures, stragglers, arrivals, phase
     changes) and invalidate the controller's per-receiver warm state;
  2. partition donors/receivers, derive (or read) the reclaimed budget;
  3. controller allocates; the engine measures true improvements.
 
-Measurement is *vectorized*: instead of the per-node Python loop the
-single-round emulator used (2 * n_repeats scalar surface lookups and RNG
-draws per receiver), the engine evaluates each distinct surface once over
-all of its receivers' cap vectors and draws the whole
-``[n, n_repeats, 2]`` noise block in one call.  The RNG stream is
-*identical* to the sequential loop (numpy ``Generator`` array fills consume
-the bit stream in element order), so improvements match the legacy path
-bit-for-bit — certified by tests/test_cluster.py.
+State is **columnar** (DESIGN.md §11): a :class:`NodeTable` keeps caps,
+liveness, slowdowns and interned surface/app ids as struct-of-arrays, so
+partitioning, event application and measurement are numpy passes instead of
+per-node Python.  ``NodeState`` dataclass views are materialized on demand
+(``sim.nodes``) for compatibility — assigning a node list re-ingests it.
 
+Measurement is *vectorized*: the engine evaluates each distinct
+(surface, slowdown) class once over all of its receivers' cap vectors and
+draws the whole ``[n, n_repeats, 2]`` noise block in one call.  The RNG
+stream is *identical* to the sequential loop (numpy ``Generator`` array
+fills consume the bit stream in element order), so improvements match the
+legacy path bit-for-bit — certified by tests/test_cluster.py.
 ``measure_improvements_loop`` keeps the legacy per-node loop as the
 equivalence/benchmark reference.
 
-Every vectorized measurement is also emitted as telemetry
-(:class:`repro.cluster.predictor.TelemetryRecord` — the same mean measured
-runtimes and improvements, bit-for-bit): ``run_round`` stashes the round's
-records in ``last_telemetry`` and ``run`` hands them to the controller's
-``ingest_telemetry`` hook after each round, closing the online
+Every vectorized measurement is emitted as **array-native telemetry**
+(:class:`repro.cluster.predictor.TelemetryBatch` — the same mean measured
+runtimes and improvements, bit-for-bit, with lazy
+:class:`~repro.cluster.predictor.TelemetryRecord` views): ``run_round``
+stashes the round's batch in ``last_telemetry`` and ``run`` hands it to the
+controller's ``ingest_telemetry`` hook after each round, closing the online
 prediction loop (DESIGN.md §10).
+
+Controllers exposing ``supports_grouped`` (the DP policies) receive a
+:class:`~repro.core.types.ReceiverBatch` instead of per-instance AppSpec
+lists, enabling group-collapsed allocation: one option table and one DP
+super-stage per behaviour class (DESIGN.md §11).
 """
 
 from __future__ import annotations
@@ -37,13 +46,14 @@ from typing import Callable, Mapping, Sequence
 import numpy as np
 
 from repro.cluster import scenario as scenario_mod
-from repro.cluster.predictor import TelemetryRecord
+from repro.cluster.predictor import TelemetryBatch
 from repro.cluster.scenario import Scenario
 from repro.core.surfaces import PowerSurface, measured_runtime
 from repro.core.types import (
     Allocation,
     AppSpec,
     EmulationResult,
+    ReceiverBatch,
     SystemSpec,
 )
 
@@ -72,6 +82,153 @@ class _SlowedSurface(PowerSurface):
 
     def power_draw(self, c, g):
         return self.base.power_draw(c, g)
+
+
+# ---------------------------------------------------------------------------
+# Columnar node state
+# ---------------------------------------------------------------------------
+
+
+class _Interner:
+    """Append-only string -> small-int table shared by a NodeTable."""
+
+    __slots__ = ("strings", "_ids")
+
+    def __init__(self):
+        self.strings: list[str] = []
+        self._ids: dict[str, int] = {}
+
+    def intern(self, s: str) -> int:
+        i = self._ids.get(s)
+        if i is None:
+            i = len(self.strings)
+            self.strings.append(s)
+            self._ids[s] = i
+        return i
+
+    def __getitem__(self, i: int) -> str:
+        return self.strings[i]
+
+
+class NodeTable:
+    """Struct-of-arrays cluster node state.
+
+    Columns: ``caps [n,2]``, ``alive [n]``, ``slowdown [n]``,
+    ``node_ids [n]`` plus interned-id columns ``base_gid`` (true-surface /
+    base-app name), ``sid_gid`` (the instance AppSpec's surface id),
+    ``name_gid`` (instance name) and ``sclass_gid``, all indexing the shared
+    :class:`_Interner`.  Rows are append-only (failures flip ``alive``), and
+    ``version`` bumps on every mutation so view caches invalidate.
+    """
+
+    def __init__(self):
+        self.interner = _Interner()
+        self.node_ids = np.empty(0, dtype=np.int64)
+        self.caps = np.empty((0, 2), dtype=np.float64)
+        self.alive = np.empty(0, dtype=bool)
+        self.slowdown = np.empty(0, dtype=np.float64)
+        self.base_gid = np.empty(0, dtype=np.int32)
+        self.sid_gid = np.empty(0, dtype=np.int32)
+        self.name_gid = np.empty(0, dtype=np.int32)
+        self.sclass_gid = np.empty(0, dtype=np.int32)
+        self.names: list[str] = []
+        self.version = 0
+        self._row_of: dict[int, int] | None = None
+
+    def __len__(self) -> int:
+        return len(self.node_ids)
+
+    @property
+    def strings(self) -> list[str]:
+        return self.interner.strings
+
+    def bump(self) -> None:
+        self.version += 1
+
+    @staticmethod
+    def from_nodes(nodes: Sequence[NodeState]) -> "NodeTable":
+        t = NodeTable()
+        if not nodes:
+            return t
+        t.node_ids = np.array([n.node_id for n in nodes], dtype=np.int64)
+        t.caps = np.array([n.caps for n in nodes], dtype=np.float64)
+        t.alive = np.array([n.alive for n in nodes], dtype=bool)
+        t.slowdown = np.array([n.slowdown for n in nodes], dtype=np.float64)
+        t.names = [n.app.name for n in nodes]
+        t.base_gid = np.array(
+            [t.interner.intern(n.base_app) for n in nodes], dtype=np.int32
+        )
+        t.sid_gid = np.array(
+            [t.interner.intern(n.app.surface_id) for n in nodes], dtype=np.int32
+        )
+        t.name_gid = np.array(
+            [t.interner.intern(n.app.name) for n in nodes], dtype=np.int32
+        )
+        t.sclass_gid = np.array(
+            [t.interner.intern(n.app.sclass) for n in nodes], dtype=np.int32
+        )
+        return t
+
+    def append(
+        self,
+        *,
+        node_id: int,
+        name: str,
+        base_app: str,
+        surface_id: str,
+        sclass: str,
+        caps: tuple[float, float],
+    ) -> None:
+        self.node_ids = np.append(self.node_ids, np.int64(node_id))
+        self.caps = np.concatenate(
+            [self.caps, np.asarray([caps], dtype=np.float64)]
+        )
+        self.alive = np.append(self.alive, True)
+        self.slowdown = np.append(self.slowdown, 1.0)
+        self.names.append(name)
+        self.base_gid = np.append(
+            self.base_gid, np.int32(self.interner.intern(base_app))
+        )
+        self.sid_gid = np.append(
+            self.sid_gid, np.int32(self.interner.intern(surface_id))
+        )
+        self.name_gid = np.append(
+            self.name_gid, np.int32(self.interner.intern(name))
+        )
+        self.sclass_gid = np.append(
+            self.sclass_gid, np.int32(self.interner.intern(sclass))
+        )
+        self._row_of = None
+
+    def next_node_id(self) -> int:
+        return 1 + int(self.node_ids.max()) if len(self) else 0
+
+    def rows_for_ids(self, ids: Sequence[int]) -> np.ndarray:
+        if self._row_of is None:
+            self._row_of = {
+                int(nid): r for r, nid in enumerate(self.node_ids)
+            }
+        return np.array([self._row_of[int(i)] for i in ids], dtype=np.int64)
+
+    def view(self, row: int) -> NodeState:
+        s = self.interner.strings
+        return NodeState(
+            node_id=int(self.node_ids[row]),
+            app=AppSpec(
+                name=self.names[row],
+                sclass=s[self.sclass_gid[row]],
+                surface_id=s[self.sid_gid[row]],
+            ),
+            base_app=s[self.base_gid[row]],
+            caps=(float(self.caps[row, 0]), float(self.caps[row, 1])),
+            alive=bool(self.alive[row]),
+            slowdown=float(self.slowdown[row]),
+        )
+
+    def views(self, rows: Sequence[int] | None = None) -> list[NodeState]:
+        if rows is None:
+            rows = range(len(self))
+        return [self.view(r) for r in rows]
 
 
 def build_nodes(
@@ -112,8 +269,9 @@ class RoundRecord:
     n_alive: int
     events: tuple = ()
     power_price: float | None = None
-    #: per-receiver noisy measurements (empty on the legacy loop path)
-    telemetry: tuple[TelemetryRecord, ...] = ()
+    #: per-receiver noisy measurements: a TelemetryBatch on the vectorized
+    #: path (iterable of TelemetryRecord views), () on the legacy loop path
+    telemetry: object = ()
 
     @property
     def avg_improvement(self) -> float:
@@ -147,19 +305,41 @@ class SimResult:
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
 class ClusterSim:
-    system: SystemSpec
-    nodes: list[NodeState]
-    #: true surfaces keyed by *base* app name
-    surfaces: Mapping[str, PowerSurface]
-    n_repeats: int = 5
-    seed: int = 0
-    #: memoized straggler views: stable object identity per (app, slowdown)
-    #: so controllers' identity-keyed option caches stay warm across rounds
-    _slowed: dict = dataclasses.field(default_factory=dict, repr=False)
-    #: telemetry emitted by the latest vectorized-measurement round
-    last_telemetry: tuple = dataclasses.field(default=(), repr=False)
+    """Columnar multi-round cluster engine.
+
+    Constructed either from a ``nodes`` list (ingested into a
+    :class:`NodeTable`) or from an existing ``table``.  ``sim.nodes`` stays
+    a readable/assignable list of :class:`NodeState` views for
+    compatibility with the pre-columnar engine.
+    """
+
+    def __init__(
+        self,
+        system: SystemSpec,
+        nodes: Sequence[NodeState] | None = None,
+        surfaces: Mapping[str, PowerSurface] | None = None,
+        n_repeats: int = 5,
+        seed: int = 0,
+        *,
+        table: NodeTable | None = None,
+    ):
+        self.system = system
+        #: true surfaces keyed by *base* app name
+        self.surfaces: Mapping[str, PowerSurface] = surfaces or {}
+        self.n_repeats = n_repeats
+        self.seed = seed
+        self.table = (
+            table if table is not None else NodeTable.from_nodes(nodes or [])
+        )
+        #: memoized straggler views: stable object identity per (app, slowdown)
+        #: so controllers' identity-keyed option caches stay warm across rounds
+        self._slowed: dict = {}
+        #: natural-draw cache per base-app gid (identity-checked)
+        self._naturals: dict[int, tuple[PowerSurface, float, float]] = {}
+        #: telemetry emitted by the latest vectorized-measurement round
+        self.last_telemetry: object = ()
+        self._views_cache: tuple[int, list[NodeState]] | None = None
 
     @staticmethod
     def build(
@@ -178,144 +358,182 @@ class ClusterSim:
 
     # -- node state ----------------------------------------------------------
 
+    @property
+    def nodes(self) -> list[NodeState]:
+        """NodeState views of the columnar table (fresh list each access).
+
+        Views are snapshots: mutate cluster state by *assigning* a node
+        list (``sim.nodes = [...]``) or via :meth:`apply_events` — editing
+        the returned list in place has no effect on the table.
+        """
+        cache = self._views_cache
+        if cache is None or cache[0] != self.table.version:
+            cache = (self.table.version, self.table.views())
+            self._views_cache = cache
+        return list(cache[1])
+
+    @nodes.setter
+    def nodes(self, value: Sequence[NodeState]) -> None:
+        self.table = NodeTable.from_nodes(value)
+        self._views_cache = None
+        self._naturals.clear()
+
     def _surface(self, node: NodeState) -> PowerSurface:
-        s = self.surfaces[node.base_app]
-        if node.slowdown == 1.0:
+        return self._surface_of(node.base_app, node.slowdown)
+
+    def _surface_of(self, base_app: str, slowdown: float) -> PowerSurface:
+        s = self.surfaces[base_app]
+        if slowdown == 1.0:
             return s
-        key = (node.base_app, node.slowdown)
+        key = (base_app, slowdown)
         hit = self._slowed.get(key)
         if hit is None or hit.base is not s:
-            hit = _SlowedSurface(s, node.slowdown)
+            hit = _SlowedSurface(s, slowdown)
             self._slowed[key] = hit
         return hit
 
     def alive_nodes(self) -> list[NodeState]:
         return [n for n in self.nodes if n.alive]
 
+    def _natural_draws(self) -> np.ndarray:
+        """[n, 2] natural (uncapped) component draws, one surface query per
+        distinct base app (draws are cap- and slowdown-independent)."""
+        t = self.table
+        nat = np.empty((len(t), 2), dtype=np.float64)
+        for gid in np.unique(t.base_gid):
+            name = t.strings[gid]
+            surf = self.surfaces[name]
+            hit = self._naturals.get(int(gid))
+            if hit is None or hit[0] is not surf:
+                c, g = surf.power_draw(1e9, 1e9)
+                hit = (surf, float(c), float(g))
+                self._naturals[int(gid)] = hit
+            nat[t.base_gid == gid] = hit[1:]
+        return nat
+
+    def partition_rows(self) -> tuple[np.ndarray, np.ndarray, float]:
+        """Array-native partition: (donor_rows, receiver_rows, pool).
+
+        A node donates iff its natural draw sits below its caps on both
+        components (margin 1 W); a dead node donates its entire cap
+        allotment.  One vectorized pass — no per-node Python.
+        """
+        t = self.table
+        if not len(t):
+            z = np.empty(0, dtype=np.int64)
+            return z, z, 0.0
+        nat = self._natural_draws()
+        slack = t.caps - nat
+        donor = t.alive & (slack[:, 0] > 1.0) & (slack[:, 1] > 1.0)
+        recv = t.alive & ~donor
+        dead = ~t.alive
+        pool = float(
+            t.caps[dead].sum() + slack[donor].sum()
+        )
+        return np.flatnonzero(donor), np.flatnonzero(recv), pool
+
     def partition(self) -> tuple[list[NodeState], list[NodeState], float]:
-        """(donors, receivers, reclaimed_pool).  A node donates iff its
-        natural draw sits below its caps on both components (margin 1 W);
-        a dead node donates its entire cap allotment."""
-        donors, receivers = [], []
-        pool = 0.0
-        for node in self.nodes:
-            if not node.alive:
-                pool += node.caps[0] + node.caps[1]
-                continue
-            nat_c, nat_g = self._surface(node).power_draw(1e9, 1e9)
-            slack_c = node.caps[0] - float(nat_c)
-            slack_g = node.caps[1] - float(nat_g)
-            if slack_c > 1.0 and slack_g > 1.0:
-                donors.append(node)
-                pool += slack_c + slack_g
-            else:
-                receivers.append(node)
-        return donors, receivers, pool
+        """(donors, receivers, reclaimed_pool) as NodeState views."""
+        donors, recv, pool = self.partition_rows()
+        return self.table.views(donors), self.table.views(recv), pool
 
     # -- events ---------------------------------------------------------------
 
+    def apply_events(self, events: Sequence) -> list[str]:
+        """Apply one round's scenario events in a single columnar pass.
+
+        Events mutate the table's columns in place (order preserved —
+        later events see earlier ones), replacing the legacy one-O(n)-
+        list-rebuild-per-event path; returns affected instance names.
+        """
+        t = self.table
+        touched: list[str] = []
+        for event in events:
+            if isinstance(event, scenario_mod.NodeFailure):
+                rows = np.flatnonzero(
+                    np.isin(t.node_ids, np.asarray(event.node_ids))
+                )
+                touched.extend(t.names[r] for r in rows)
+                t.alive[rows] = False
+            elif isinstance(event, scenario_mod.StragglerOnset):
+                rows = np.flatnonzero(t.node_ids == event.node_id)
+                t.slowdown[rows] = event.slowdown
+                touched.extend(t.names[r] for r in rows)
+            elif isinstance(event, scenario_mod.PhaseChange):
+                if event.surface_id not in self.surfaces:
+                    raise KeyError(f"unknown surface {event.surface_id!r}")
+                rows = np.flatnonzero(t.node_ids == event.node_id)
+                gid = np.int32(t.interner.intern(event.surface_id))
+                # rebind the instance's surface identity too, so
+                # predictor-backed controllers resolve the new phase
+                t.base_gid[rows] = gid
+                t.sid_gid[rows] = gid
+                touched.extend(t.names[r] for r in rows)
+            elif isinstance(event, scenario_mod.NodeArrival):
+                if event.surface is not None:
+                    # a genuinely new app: register its ground-truth surface
+                    self.surfaces = {
+                        **self.surfaces, event.app.name: event.surface
+                    }
+                if event.app.name not in self.surfaces:
+                    raise KeyError(
+                        f"no surface for arriving app {event.app.name!r}"
+                    )
+                nid = t.next_node_id()
+                caps = event.caps or (self.system.init_cpu, self.system.init_gpu)
+                t.append(
+                    node_id=nid,
+                    name=f"{event.app.name}#n{nid}",
+                    base_app=event.app.name,
+                    surface_id=event.app.surface_id,
+                    sclass=event.app.sclass,
+                    caps=caps,
+                )
+            else:
+                raise TypeError(f"unknown event {event!r}")
+        t.bump()
+        return touched
+
     def apply_event(self, event) -> list[str]:
         """Apply one scenario event; returns affected instance names."""
-        if isinstance(event, scenario_mod.NodeFailure):
-            ids = set(event.node_ids)
-            touched = [n.app.name for n in self.nodes if n.node_id in ids]
-            self.nodes = [
-                dataclasses.replace(n, alive=False) if n.node_id in ids else n
-                for n in self.nodes
-            ]
-            return touched
-        if isinstance(event, scenario_mod.StragglerOnset):
-            self.nodes = [
-                dataclasses.replace(n, slowdown=event.slowdown)
-                if n.node_id == event.node_id
-                else n
-                for n in self.nodes
-            ]
-            return [n.app.name for n in self.nodes if n.node_id == event.node_id]
-        if isinstance(event, scenario_mod.PhaseChange):
-            if event.surface_id not in self.surfaces:
-                raise KeyError(f"unknown surface {event.surface_id!r}")
-            self.nodes = [
-                dataclasses.replace(
-                    n,
-                    base_app=event.surface_id,
-                    # rebind the instance's surface identity too, so
-                    # predictor-backed controllers resolve the new phase
-                    app=dataclasses.replace(
-                        n.app, surface_id=event.surface_id
-                    ),
-                )
-                if n.node_id == event.node_id
-                else n
-                for n in self.nodes
-            ]
-            return [n.app.name for n in self.nodes if n.node_id == event.node_id]
-        if isinstance(event, scenario_mod.NodeArrival):
-            if event.surface is not None:
-                # a genuinely new app: register its ground-truth surface
-                self.surfaces = {**self.surfaces, event.app.name: event.surface}
-            if event.app.name not in self.surfaces:
-                raise KeyError(f"no surface for arriving app {event.app.name!r}")
-            nid = 1 + max((n.node_id for n in self.nodes), default=-1)
-            caps = event.caps or (self.system.init_cpu, self.system.init_gpu)
-            inst = AppSpec(
-                name=f"{event.app.name}#n{nid}",
-                sclass=event.app.sclass,
-                surface_id=event.app.surface_id,
-            )
-            self.nodes = self.nodes + [
-                NodeState(
-                    node_id=nid, app=inst, base_app=event.app.name, caps=caps
-                )
-            ]
-            return []
-        raise TypeError(f"unknown event {event!r}")
+        return self.apply_events([event])
 
     # -- measurement ----------------------------------------------------------
 
-    def measure_improvements(
-        self,
-        recv_nodes: Sequence[NodeState],
-        alloc: Allocation,
-        rng: np.random.Generator,
-    ) -> dict[str, float]:
-        """Vectorized measurement of all receivers x repeats.
+    def _measure_groups(self, rows: np.ndarray):
+        """Distinct (base surface, slowdown) classes among ``rows`` as
+        (gid, slowdown, member positions into ``rows``) triples."""
+        t = self.table
+        key = np.empty(
+            len(rows), dtype=[("g", np.int32), ("s", np.float64)]
+        )
+        key["g"] = t.base_gid[rows]
+        key["s"] = t.slowdown[rows]
+        uniq, inv = np.unique(key, return_inverse=True)
+        return [
+            (int(uniq[k]["g"]), float(uniq[k]["s"]), np.flatnonzero(inv == k))
+            for k in range(len(uniq))
+        ]
 
-        One surface evaluation per distinct (app, slowdown) group and one
-        RNG fill for the whole noise block; bit-for-bit equal to
-        :func:`measure_improvements_loop`.
-        """
-        _, _, imp = self._measure_arrays(recv_nodes, alloc, rng)
-        return {
-            node.app.name: float(imp[i]) for i, node in enumerate(recv_nodes)
-        }
-
-    def _measure_arrays(
+    def _measure_rows(
         self,
-        recv_nodes: Sequence[NodeState],
-        alloc: Allocation,
+        rows: np.ndarray,
+        base: np.ndarray,
+        new: np.ndarray,
         rng: np.random.Generator,
     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Vectorized measurement core: per-receiver mean measured runtimes
         at (baseline, allocated) caps plus relative improvements — the same
         arrays back both the engine's reported improvements and the
-        telemetry records, so the two are bit-identical by construction."""
-        n = len(recv_nodes)
+        telemetry batch, so the two are bit-identical by construction."""
+        n = len(rows)
         if n == 0:
             z = np.zeros(0, dtype=np.float64)
             return z, z, z
-        base = np.array([node.caps for node in recv_nodes], dtype=np.float64)
-        new = np.array(
-            [alloc.caps[node.app.name] for node in recv_nodes], dtype=np.float64
-        )
         t_base = np.empty(n, dtype=np.float64)
         t_new = np.empty(n, dtype=np.float64)
-        groups: dict[tuple[str, float], list[int]] = {}
-        for i, node in enumerate(recv_nodes):
-            groups.setdefault((node.base_app, node.slowdown), []).append(i)
-        for (base_app, slowdown), idx in groups.items():
-            surf = self.surfaces[base_app]
-            ii = np.asarray(idx)
+        for gid, slowdown, ii in self._measure_groups(rows):
+            surf = self.surfaces[self.table.strings[gid]]
             tb = np.asarray(surf.runtime(base[ii, 0], base[ii, 1]), np.float64)
             tn = np.asarray(surf.runtime(new[ii, 0], new[ii, 1]), np.float64)
             t_base[ii] = tb * slowdown
@@ -332,6 +550,28 @@ class ClusterSim:
             t0, t1 = t_base, t_new
         imp = (t0 - t1) / t0
         return t0, t1, imp
+
+    def _rows_for_nodes(self, recv_nodes: Sequence[NodeState]) -> np.ndarray:
+        return self.table.rows_for_ids([n.node_id for n in recv_nodes])
+
+    def measure_improvements(
+        self,
+        recv_nodes: Sequence[NodeState],
+        alloc: Allocation,
+        rng: np.random.Generator,
+    ) -> dict[str, float]:
+        """Vectorized measurement of all receivers x repeats.
+
+        One surface evaluation per distinct (app, slowdown) class and one
+        RNG fill for the whole noise block; bit-for-bit equal to
+        :func:`measure_improvements_loop`.
+        """
+        rows = self._rows_for_nodes(recv_nodes)
+        base = self.table.caps[rows]
+        names = [self.table.names[r] for r in rows]
+        new = np.array([alloc.caps[nm] for nm in names], dtype=np.float64)
+        _, _, imp = self._measure_rows(rows, base, new, rng)
+        return {nm: float(imp[i]) for i, nm in enumerate(names)}
 
     def measure_improvements_loop(
         self,
@@ -373,6 +613,42 @@ class ClusterSim:
             + round_index * _ROUND_STRIDE
         )
 
+    def _receiver_batch(
+        self,
+        rows: np.ndarray,
+        policy_surfaces: Mapping[str, PowerSurface] | None,
+        sees_truth: bool,
+        *,
+        skip_surfaces: bool = False,
+    ) -> ReceiverBatch:
+        """Columnar receiver view for group-collapsing controllers.
+
+        ``skip_surfaces`` leaves the surface column unfilled for
+        controllers that serve their own surfaces (``ecoshift_online``) —
+        ground truth must never even transit their inputs (DESIGN.md §10
+        information discipline).
+        """
+        t = self.table
+        names = [t.names[r] for r in rows]
+        strings = t.strings
+        surface_ids = [strings[t.sid_gid[r]] for r in rows]
+        surfaces: list[PowerSurface] = [None] * len(rows)  # type: ignore[list-item]
+        if skip_surfaces:
+            pass
+        elif policy_surfaces is not None and not sees_truth:
+            surfaces = [policy_surfaces[nm] for nm in names]
+        else:
+            for gid, slowdown, ii in self._measure_groups(rows):
+                surf = self._surface_of(strings[gid], slowdown)
+                for i in ii:
+                    surfaces[i] = surf
+        return ReceiverBatch(
+            names=names,
+            surface_ids=surface_ids,
+            baselines=t.caps[rows],
+            surfaces=surfaces,
+        )
+
     def run_round(
         self,
         controller,
@@ -382,52 +658,69 @@ class ClusterSim:
         receivers: Sequence[NodeState] | None = None,
         round_index: int = 0,
         use_loop_measurement: bool = False,
+        _recv_rows: np.ndarray | None = None,
     ) -> EmulationResult:
         """One redistribution round under a stateful controller.
 
         ``policy_surfaces`` is what the policy sees (predicted surfaces for
         EcoShift; defaults to true surfaces keyed per instance).  ``budget``
-        defaults to the donor-derived reclaimed pool.
+        defaults to the donor-derived reclaimed pool.  Controllers with
+        ``supports_grouped`` allocate from a columnar ``ReceiverBatch``
+        (group-collapsed DP); everyone else gets the per-instance view.
         """
-        if receivers is not None and budget is not None:
-            recv_nodes = list(receivers)
+        t = self.table
+        if receivers is not None:
+            _recv_rows = self._rows_for_nodes(receivers)
+        if _recv_rows is not None and budget is not None:
+            recv_rows = np.asarray(_recv_rows)
         else:
-            _, recv_nodes, pool = self.partition()
-            if receivers is not None:
-                recv_nodes = list(receivers)
+            _, part_rows, pool = self.partition_rows()
+            recv_rows = (
+                np.asarray(_recv_rows) if _recv_rows is not None else part_rows
+            )
         b = float(pool if budget is None else budget)
-        recv_apps = [n.app for n in recv_nodes]
-        baselines = {n.app.name: n.caps for n in recv_nodes}
-        true_by_inst = {n.app.name: self._surface(n) for n in recv_nodes}
-        seen = (
-            policy_surfaces if policy_surfaces is not None else true_by_inst
-        )
-        if controller.sees_truth:
-            seen = true_by_inst
+        names = [t.names[r] for r in recv_rows]
+        base = t.caps[recv_rows]
 
-        alloc = controller.allocate(recv_apps, baselines, b, seen)
+        if getattr(controller, "supports_grouped", False):
+            batch = self._receiver_batch(
+                recv_rows,
+                policy_surfaces,
+                controller.sees_truth,
+                skip_surfaces=getattr(controller, "serves_own_surfaces", False),
+            )
+            alloc = controller.allocate_grouped(batch, b)
+        else:
+            recv_nodes = t.views(recv_rows)
+            recv_apps = [n.app for n in recv_nodes]
+            baselines = {n.app.name: n.caps for n in recv_nodes}
+            true_by_inst = {n.app.name: self._surface(n) for n in recv_nodes}
+            seen = (
+                policy_surfaces if policy_surfaces is not None else true_by_inst
+            )
+            if controller.sees_truth:
+                seen = true_by_inst
+            alloc = controller.allocate(recv_apps, baselines, b, seen)
+
         rng = self.round_rng(controller.policy, round_index)
         if use_loop_measurement:
+            recv_nodes = t.views(recv_rows)
             improvements = self.measure_improvements_loop(recv_nodes, alloc, rng)
             self.last_telemetry = ()
         else:
-            t0, t1, imp = self._measure_arrays(recv_nodes, alloc, rng)
-            improvements = {
-                node.app.name: float(imp[i])
-                for i, node in enumerate(recv_nodes)
-            }
-            self.last_telemetry = tuple(
-                TelemetryRecord(
-                    round=round_index,
-                    instance=node.app.name,
-                    base_app=node.base_app,
-                    baseline_caps=tuple(node.caps),
-                    allocated_caps=tuple(alloc.caps[node.app.name]),
-                    t_baseline=float(t0[i]),
-                    t_allocated=float(t1[i]),
-                    improvement=float(imp[i]),
-                )
-                for i, node in enumerate(recv_nodes)
+            new = np.array([alloc.caps[nm] for nm in names], dtype=np.float64)
+            t0, t1, imp = self._measure_rows(recv_rows, base, new, rng)
+            improvements = {nm: float(imp[i]) for i, nm in enumerate(names)}
+            self.last_telemetry = TelemetryBatch(
+                round=round_index,
+                inst_gids=t.name_gid[recv_rows],
+                app_gids=t.base_gid[recv_rows],
+                strings=t.strings,
+                baseline_caps=base,
+                allocated_caps=new,
+                t_baseline=t0,
+                t_allocated=t1,
+                improvement=imp,
             )
         return EmulationResult(
             policy=controller.policy,
@@ -462,9 +755,7 @@ class ClusterSim:
         records: list[RoundRecord] = []
         for r in range(scenario.n_rounds):
             events = scenario.events_at(r)
-            touched: list[str] = []
-            for ev in events:
-                touched.extend(self.apply_event(ev))
+            touched = self.apply_events(events) if events else []
             if touched:
                 controller.invalidate(touched)
             seen = (
@@ -472,21 +763,21 @@ class ClusterSim:
                 if callable(policy_surfaces)
                 else policy_surfaces
             )
-            _, recv, pool = self.partition()
+            _, recv_rows, pool = self.partition_rows()
             b = scenario.budget_at(r)
             res = self.run_round(
                 controller,
                 budget=pool if b is None else b,
                 policy_surfaces=seen,
-                receivers=recv,
                 round_index=r,
+                _recv_rows=recv_rows,
             )
             records.append(
                 RoundRecord(
                     round=r,
                     result=res,
                     pool=pool,
-                    n_alive=len(self.alive_nodes()),
+                    n_alive=int(np.count_nonzero(self.table.alive)),
                     events=events,
                     power_price=scenario.price_at(r),
                     telemetry=self.last_telemetry,

@@ -111,13 +111,22 @@ def dense_curve(
     f = np.zeros(nb, dtype=np.float64)
     choice = np.zeros(nb, dtype=np.int32)
     cost_units = np.ceil(opts.costs / unit - 1e-9).astype(np.int64)
-    for j in range(opts.k):
-        cu = cost_units[j]
-        if cu >= nb:
-            continue
-        if opts.values[j] > f[cu]:
-            f[cu] = opts.values[j]
-            choice[cu] = j
+    # scatter the best option onto each occupied grid position: sort by
+    # (unit cost asc, value desc, index asc) and keep each position's first
+    # row — the first option attaining the position's max value, exactly the
+    # strict-improvement sequential update; positions whose max value is
+    # <= 0 keep the (0, choice 0) default
+    valid = np.nonzero(cost_units < nb)[0]
+    if valid.size:
+        order = valid[
+            np.lexsort((valid, -opts.values[valid], cost_units[valid]))
+        ]
+        cu_s = cost_units[order]
+        first = np.ones(len(order), dtype=bool)
+        first[1:] = cu_s[1:] != cu_s[:-1]
+        take = order[first & (opts.values[order] > 0.0)]
+        f[cost_units[take]] = opts.values[take]
+        choice[cost_units[take]] = take
     # running max to enforce "cost <= b": a position keeps its own choice iff
     # it attains the running max (ties keep the later index, matching the
     # sequential update which only overwrote on strict decrease)
@@ -132,10 +141,22 @@ def dense_curve(
 def dense_curves_matrix(
     options: list[OptionTable], budget: float, unit: float = 1.0
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Stack per-receiver dense curves: F [N, B+1], choices [N, B+1]."""
+    """Stack per-receiver dense curves: F [N, B+1], choices [N, B+1].
+
+    Receivers sharing an ``OptionTable`` object (group-collapsed clusters
+    replicate one table across a whole behaviour class) densify once; the
+    stacked result gathers the shared rows.
+    """
+    slot_of: dict[int, int] = {}
+    inv = np.empty(len(options), dtype=np.int64)
     fs, chs = [], []
-    for o in options:
-        f, ch = dense_curve(o, budget, unit)
-        fs.append(f)
-        chs.append(ch)
-    return np.stack(fs), np.stack(chs)
+    for i, o in enumerate(options):
+        slot = slot_of.get(id(o))
+        if slot is None:
+            slot = len(fs)
+            slot_of[id(o)] = slot
+            f, ch = dense_curve(o, budget, unit)
+            fs.append(f)
+            chs.append(ch)
+        inv[i] = slot
+    return np.stack(fs)[inv], np.stack(chs)[inv]

@@ -16,16 +16,45 @@ exhaustive brute force):
 All solvers return allocations in *watts spent per receiver* plus the cap
 pair realizing it, and they all respect the monotone-upgrade model: a
 receiver may always take the zero-cost baseline option.
+
+**Group-collapsed solving** (DESIGN.md §11): real clusters replicate a small
+number of behaviour classes across thousands of nodes, so receivers sharing
+one option table collapse into a :class:`GroupedOptions` with multiplicity
+``m``:
+
+ * ``solve_sparse_grouped``    — bounded MCKP: each group's m-fold aggregate
+                                 curve is built by binary-split (max,+)
+                                 self-convolution (O(log m) convolutions),
+                                 then one sparse DP runs over the ~G group
+                                 super-stages instead of the N receivers.
+                                 Bit-for-bit equal to ``solve_sparse`` on
+                                 the name-sorted ungrouped expansion.
+ * ``solve_dense_jax_grouped`` — repeated-stage scan: the lax.scan walks a
+                                 per-receiver group-id sequence and gathers
+                                 its stage curve from a [G, NB] matrix, so
+                                 curves are densified once per group.
+                                 Bitwise identical to ``solve_dense_jax``
+                                 (same convolutions, same order).
+ * ``solve_dense_grouped``     — the numpy analogue of the gather scan.
+
+Determinism contract: receivers with *byte-identical* option tables are
+interchangeable, so every optimum is degenerate under permutations of their
+picks.  ``solve_sparse`` canonicalizes — identical-table stages exchange
+their chosen options so costs ascend in stage order, and ``total_value`` /
+``spent`` are re-accumulated in stage order — which is exactly the form the
+group-collapsed solver reproduces.  (Parity assumes option costs are well
+above the 1e-6 W state-merge tolerance; true for watt-granular cap grids.)
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+import math
+from typing import MutableMapping, Sequence
 
 import numpy as np
 
-from repro.core.curves import OptionTable, dense_curves_matrix
+from repro.core.curves import OptionTable, dense_curve, dense_curves_matrix
 
 
 @dataclasses.dataclass
@@ -47,18 +76,80 @@ class MCKPSolution:
 # ---------------------------------------------------------------------------
 
 
+def _qkey(u: float) -> float:
+    """State key: costs within 1e-6 W merge into one DP state.
+
+    Defined as floor(u * 1e6 + 0.5) * 1e-6 so the scalar form and the
+    vectorized :func:`_qkey_np` are bitwise identical (same float64 ops) —
+    the grouped solver's array DP and the ungrouped dict DP must agree on
+    every state key.  For grid-exact watt costs the key equals the sum
+    itself, so per-step rounding order cannot diverge between the two.
+    """
+    return math.floor(u * 1e6 + 0.5) * 1e-6
+
+
+def _qkey_np(u: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`_qkey` (bitwise-identical float64 pipeline)."""
+    return np.floor(u * 1e6 + 0.5) * 1e-6
+
+
+def table_digest(opt: OptionTable) -> tuple:
+    """Content identity of an option table (costs, values, caps bytes).
+
+    Receivers whose tables digest equally are *interchangeable* in any MCKP
+    — permuting their picks preserves value and feasibility.  This is the
+    group key of the collapsed solvers, and the equivalence class within
+    which ``solve_sparse`` canonicalizes its assignment.  Note a
+    multiplicatively-slowed straggler digests equally to its healthy peers:
+    relative improvements are invariant under constant slowdown.
+    """
+    return (opt.costs.tobytes(), opt.values.tobytes(), opt.caps.tobytes())
+
+
+def _canonical_solution(
+    options: Sequence[OptionTable], js: list[int]
+) -> MCKPSolution:
+    """Assemble a solution from per-stage option choices in canonical form.
+
+    Identical-table stages (same :func:`table_digest`) exchange their
+    chosen options so option indices ascend in stage order, and
+    ``total_value`` / ``spent`` are accumulated stage by stage — the one
+    deterministic representative of the optimum's permutation class, and
+    exactly what :func:`solve_sparse_grouped` reconstructs.
+    """
+    by_digest: dict[tuple, list[int]] = {}
+    for i, opt in enumerate(options):
+        by_digest.setdefault(table_digest(opt), []).append(i)
+    for idxs in by_digest.values():
+        if len(idxs) > 1:
+            for i, j in zip(idxs, sorted(js[i] for i in idxs)):
+                js[i] = j
+    picks: dict[str, tuple[float, float, tuple[float, float]]] = {}
+    total = 0.0
+    spent = 0.0
+    for i, opt in enumerate(options):
+        j = js[i]
+        picks[opt.name] = (
+            float(opt.costs[j]),
+            float(opt.values[j]),
+            (float(opt.caps[j, 0]), float(opt.caps[j, 1])),
+        )
+        total += float(opt.values[j])
+        spent += float(opt.costs[j])
+    return MCKPSolution(total_value=total, spent=spent, picks=picks)
+
+
 def solve_sparse(options: Sequence[OptionTable], budget: float) -> MCKPSolution:
     """Paper Algorithm 1 with parent-pointer backtracking.
 
     States are keyed by *used power* (floats straight from the option
     tables — no budget discretization), exactly like the pseudo-code's
     ``DP`` dict.  Costs within 1e-6 W are merged to keep the state count
-    equal to the number of distinct achievable sums.
+    equal to the number of distinct achievable sums.  The returned solution
+    is canonicalized (see :func:`_canonical_solution`) so interchangeable
+    receivers always get their picks in ascending-cost stage order.
     """
-
-    def qkey(u: float) -> float:
-        return round(u, 6)
-
+    qkey = _qkey
     # DP: used -> (score, parent_used, option_index)
     dp: dict[float, tuple[float, float, int]] = {0.0: (0.0, -1.0, -1)}
     stages: list[dict[float, tuple[float, float, int]]] = []
@@ -79,19 +170,289 @@ def solve_sparse(options: Sequence[OptionTable], budget: float) -> MCKPSolution:
 
     # best end state, then walk parents backwards
     best_u = max(dp, key=lambda u: dp[u][0])
-    total = dp[best_u][0]
-    picks: dict[str, tuple[float, float, tuple[float, float]]] = {}
+    js: list[int] = [0] * len(options)
     u = best_u
     for i in range(len(options) - 1, -1, -1):
-        score, parent, j = stages[i][qkey(u)]
-        opt = options[i]
-        picks[opt.name] = (
-            float(opt.costs[j]),
-            float(opt.values[j]),
-            (float(opt.caps[j, 0]), float(opt.caps[j, 1])),
-        )
+        _, parent, j = stages[i][qkey(u)]
+        js[i] = j
         u = parent
-    spent = sum(c for c, _, _ in picks.values())
+    return _canonical_solution(options, js)
+
+
+# ---------------------------------------------------------------------------
+# Group-collapsed sparse DP (bounded MCKP via binary-split multiplicity)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedOptions:
+    """One behaviour class: a shared option table with its member receivers.
+
+    All members share the table (same surface identity, baseline and
+    slowdown class), so the group acts as a bounded multiple-choice item
+    with multiplicity ``m = len(members)``.
+    """
+
+    table: OptionTable
+    members: tuple[str, ...]
+
+    @property
+    def m(self) -> int:
+        return len(self.members)
+
+
+def expand_groups(groups: Sequence[GroupedOptions]) -> list[OptionTable]:
+    """Ungrouped, name-sorted expansion (the parity reference ordering)."""
+    out = [
+        dataclasses.replace(g.table, name=name)
+        for g in groups
+        for name in g.members
+    ]
+    out.sort(key=lambda o: o.name)
+    return out
+
+
+def collapse_receivers(
+    names: Sequence[str],
+    surfaces: Sequence,
+    baselines: Sequence[tuple[float, float]],
+    build_table,
+) -> list[GroupedOptions]:
+    """Collapse aligned receiver columns into behaviour-class groups.
+
+    Receivers sharing (surface identity, baseline) form one class;
+    ``build_table(surface, baseline)`` is called once per class (a warm
+    cache lookup on the controller path, a fresh ``curves.build_options``
+    on the pure-policy path).
+    """
+    classes: dict[tuple, list] = {}
+    for name, surf, base in zip(names, surfaces, baselines):
+        key = (id(surf), base[0], base[1])
+        slot = classes.get(key)
+        if slot is None:
+            classes[key] = [surf, (float(base[0]), float(base[1])), [name]]
+        else:
+            slot[2].append(name)
+    return [
+        GroupedOptions(
+            table=build_table(surf, base), members=tuple(sorted(members))
+        )
+        for surf, base, members in classes.values()
+    ]
+
+
+def solve_grouped(
+    groups: Sequence[GroupedOptions],
+    budget: float,
+    *,
+    solver: str = "sparse",
+    unit: float = 1.0,
+    curve_cache: MutableMapping | None = None,
+) -> MCKPSolution:
+    """Solver dispatch for the group-collapsed paths (see ``solve_*_grouped``)."""
+    if solver == "sparse":
+        return solve_sparse_grouped(groups, budget, curve_cache=curve_cache)
+    if solver == "dense":
+        return solve_dense_grouped(groups, budget, unit=unit)
+    if solver in ("jax", "pallas"):
+        return solve_dense_jax_grouped(groups, budget, unit=unit, backend=solver)
+    raise ValueError(f"unknown solver {solver!r}")
+
+
+def _dedupe_first_max(
+    keys: np.ndarray, vals: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per distinct key keep the max value — first occurrence on ties.
+
+    Mirrors the dict DP's ``cur is None or s > cur[0]`` update over the
+    candidates in array order.  Returns (sorted unique keys, selector into
+    the input arrays).
+    """
+    order = np.lexsort((np.arange(len(keys)), -vals, keys))
+    k_sorted = keys[order]
+    first = np.ones(len(order), dtype=bool)
+    first[1:] = k_sorted[1:] != k_sorted[:-1]
+    sel = order[first]
+    return keys[sel], sel
+
+
+class _AggCurve:
+    """Sparse aggregate curve of ``t`` copies of one option table.
+
+    Columns over the curve's states (ascending spend key): ``keys`` are
+    quantized spends, ``vals`` the best achievable value at each.  For a
+    leaf curve (t == 1) ``back`` holds option indices; for a combined curve
+    ``back_left`` / ``back_right`` hold the (left, right) spend split, so
+    :meth:`unwind` can walk the binary-split tree back down to the multiset
+    of single-receiver picks.  All convolutions are vectorized outer
+    (max,+) products deduped by :func:`_dedupe_first_max` — the same
+    candidate order and tie-breaking as the scalar dict DP.
+    """
+
+    __slots__ = ("keys", "vals", "back", "back_left", "back_right", "left", "right")
+
+    def __init__(self, keys, vals, back=None, back_left=None, back_right=None,
+                 left=None, right=None):
+        self.keys: np.ndarray = keys
+        self.vals: np.ndarray = vals
+        self.back = back
+        self.back_left = back_left
+        self.back_right = back_right
+        self.left: _AggCurve | None = left
+        self.right: _AggCurve | None = right
+
+    @staticmethod
+    def leaf(table: OptionTable, budget: float) -> "_AggCurve":
+        feas = np.flatnonzero(table.costs <= budget + 1e-9)
+        keys = _qkey_np(table.costs[feas])
+        _, sel = _dedupe_first_max(keys, table.values[feas])
+        return _AggCurve(
+            keys=keys[sel], vals=table.values[feas][sel], back=feas[sel]
+        )
+
+    @staticmethod
+    def combine(a: "_AggCurve", b: "_AggCurve", budget: float) -> "_AggCurve":
+        raw = (a.keys[:, None] + b.keys[None, :]).ravel()
+        vals = (a.vals[:, None] + b.vals[None, :]).ravel()
+        feas = np.flatnonzero(raw <= budget + 1e-9)
+        keys, sel = _dedupe_first_max(_qkey_np(raw[feas]), vals[feas])
+        sel = feas[sel]
+        nb = len(b.keys)
+        return _AggCurve(
+            keys=keys,
+            vals=vals[sel],
+            back_left=a.keys[sel // nb],
+            back_right=b.keys[sel % nb],
+            left=a,
+            right=b,
+        )
+
+    def _at(self, spend: float) -> int:
+        i = int(np.searchsorted(self.keys, spend))
+        if i >= len(self.keys) or self.keys[i] != spend:
+            raise KeyError(f"aggregate curve has no state at {spend!r}")
+        return i
+
+    def unwind(self, spend: float, out: list[int]) -> None:
+        """Collect the option-index multiset realizing ``spend``."""
+        i = self._at(spend)
+        if self.left is None:
+            out.append(int(self.back[i]))
+        else:
+            self.left.unwind(float(self.back_left[i]), out)
+            self.right.unwind(float(self.back_right[i]), out)
+
+
+def aggregate_curve(table: OptionTable, m: int, budget: float) -> _AggCurve:
+    """m-fold (max,+) self-convolution of a table's sparse staircase.
+
+    Binary split: O(log m) pairwise convolutions build the doubling chain
+    P_1, P_2, P_4, ... and the set bits of ``m`` combine into the final
+    curve.  State count stays bounded by the distinct achievable sums
+    <= budget, so each convolution is one small vectorized outer product.
+    """
+    base = _AggCurve.leaf(table, budget)
+    acc: _AggCurve | None = None
+    power = base
+    bit = m
+    while bit:
+        if bit & 1:
+            acc = power if acc is None else _AggCurve.combine(acc, power, budget)
+        bit >>= 1
+        if bit:
+            power = _AggCurve.combine(power, power, budget)
+    assert acc is not None
+    return acc
+
+
+def solve_sparse_grouped(
+    groups: Sequence[GroupedOptions],
+    budget: float,
+    *,
+    curve_cache: MutableMapping | None = None,
+) -> MCKPSolution:
+    """Group-collapsed Algorithm 1: one DP super-stage per behaviour class.
+
+    Equivalent to — and bit-for-bit equal with — ``solve_sparse`` on the
+    name-sorted ungrouped expansion: groups digesting equally merge first
+    (their members are interchangeable), each merged group contributes its
+    m-fold aggregate curve as a single DP stage, and the backtracked
+    per-group spends unwind into option multisets assigned to name-sorted
+    members in ascending-cost order (the sparse solver's canonical form).
+
+    ``curve_cache`` (a mutable mapping, e.g. a controller's warm dict)
+    memoizes aggregate curves keyed by (digest, m, quantized budget).
+    """
+    # merge interchangeable groups (equal table content)
+    merged: dict[tuple, list] = {}
+    for g in groups:
+        d = table_digest(g.table)
+        slot = merged.get(d)
+        if slot is None:
+            merged[d] = [g.table, list(g.members), d]
+        else:
+            slot[1].extend(g.members)
+    classes = sorted(merged.values(), key=lambda s: min(s[1]))
+
+    # aggregate curve + sorted (cost, value) super-options per class
+    curves_: list[_AggCurve] = []
+    for table, members, d in classes:
+        key = (d, len(members), _qkey(budget))
+        curve = curve_cache.get(key) if curve_cache is not None else None
+        if curve is None:
+            curve = aggregate_curve(table, len(members), budget)
+            if curve_cache is not None:
+                curve_cache[key] = curve  # type: ignore[index]
+        curves_.append(curve)
+
+    # top-level sparse DP over the class super-stages (vectorized: each
+    # stage is one outer (max,+) product over [states x class spends])
+    dp_keys = np.zeros(1, dtype=np.float64)
+    dp_vals = np.zeros(1, dtype=np.float64)
+    stages: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+    for curve in curves_:
+        raw = (dp_keys[:, None] + curve.keys[None, :]).ravel()
+        scores = (dp_vals[:, None] + curve.vals[None, :]).ravel()
+        feas = np.flatnonzero(raw <= budget + 1e-9)
+        keys, sel = _dedupe_first_max(_qkey_np(raw[feas]), scores[feas])
+        sel = feas[sel]
+        # keys come back ascending from the stable lexsort dedupe, so the
+        # stage arrays are searchsorted-ready as-is
+        nc = len(curve.keys)
+        stages.append((keys, dp_keys[sel // nc], curve.keys[sel % nc]))
+        dp_keys = keys
+        dp_vals = scores[sel]
+
+    u = float(dp_keys[int(np.argmax(dp_vals))])
+    spends: list[float] = [0.0] * len(classes)
+    for i in range(len(classes) - 1, -1, -1):
+        keys, parents, spends_stage = stages[i]
+        pos = int(np.searchsorted(keys, u))
+        spends[i] = float(spends_stage[pos])
+        u = float(parents[pos])
+
+    # unwind each class to its option multiset; ascending picks over
+    # name-sorted members == solve_sparse's canonical assignment
+    choice_of: dict[str, tuple[OptionTable, int]] = {}
+    for (table, members, _), curve, spend in zip(classes, curves_, spends):
+        js: list[int] = []
+        curve.unwind(spend, js)
+        for name, j in zip(sorted(members), sorted(js)):
+            choice_of[name] = (table, j)
+
+    # canonical stage-order accumulation (bit-for-bit the ungrouped form)
+    picks: dict[str, tuple[float, float, tuple[float, float]]] = {}
+    total = 0.0
+    spent = 0.0
+    for name in sorted(choice_of):
+        table, j = choice_of[name]
+        picks[name] = (
+            float(table.costs[j]),
+            float(table.values[j]),
+            (float(table.caps[j, 0]), float(table.caps[j, 1])),
+        )
+        total += float(table.values[j])
+        spent += float(table.costs[j])
     return MCKPSolution(total_value=total, spent=spent, picks=picks)
 
 
@@ -149,6 +510,83 @@ def solve_dense(
             (float(opt.caps[j, 0]), float(opt.caps[j, 1])),
         )
         b -= int(costs_per_app[i][j_local])
+    spent = sum(c for c, _, _ in picks.values())
+    return MCKPSolution(total_value=total, spent=spent, picks=picks)
+
+
+def _grouped_dense_layout(
+    groups: Sequence[GroupedOptions], budget: float, unit: float
+):
+    """Digest-merged stage layout shared by the grouped dense solvers.
+
+    Returns ``(names, stage_gids, tables, f_groups, ch_groups)``: the
+    name-sorted receiver order, each receiver's behaviour-class id, and the
+    per-class tables / dense curves — densified once per class instead of
+    once per receiver.
+    """
+    merged: dict[tuple, list] = {}
+    for g in groups:
+        d = table_digest(g.table)
+        slot = merged.get(d)
+        if slot is None:
+            merged[d] = [g.table, list(g.members)]
+        else:
+            slot[1].extend(g.members)
+    classes = sorted(merged.values(), key=lambda s: min(s[1]))
+    pairs = sorted(
+        (name, cid)
+        for cid, (_, members) in enumerate(classes)
+        for name in members
+    )
+    names = [p[0] for p in pairs]
+    stage_gids = np.array([p[1] for p in pairs], dtype=np.int32)
+    tables = [c[0] for c in classes]
+    fs, chs = [], []
+    for table in tables:
+        f, ch = dense_curve(table, budget, unit)
+        fs.append(f)
+        chs.append(ch)
+    return names, stage_gids, tables, np.stack(fs), np.stack(chs)
+
+
+def solve_dense_grouped(
+    groups: Sequence[GroupedOptions], budget: float, unit: float = 1.0
+) -> MCKPSolution:
+    """Grouped numpy dense DP: per-class cost/value prep, one stage per
+    receiver — bitwise identical to ``solve_dense`` on the name-sorted
+    ungrouped expansion (same stage convolutions in the same order)."""
+    nb = int(np.floor(budget / unit + 1e-9)) + 1
+    names, stage_gids, tables, _, _ = _grouped_dense_layout(
+        groups, budget, unit
+    )
+    cu_of, vals_of, kept_of = [], [], []
+    for table in tables:
+        cu = np.ceil(table.costs / unit - 1e-9).astype(np.int64)
+        keep = cu < nb
+        cu_of.append(cu[keep])
+        vals_of.append(table.values[keep])
+        kept_of.append(np.nonzero(keep)[0])
+
+    dp = np.zeros(nb, dtype=np.float64)
+    args: list[np.ndarray] = []
+    for gid in stage_gids:
+        dp, arg = _stage_maxplus(dp, cu_of[gid], vals_of[gid])
+        args.append(arg)
+
+    b = int(np.argmax(dp))
+    total = float(dp[b])
+    picks: dict[str, tuple[float, float, tuple[float, float]]] = {}
+    for i in range(len(names) - 1, -1, -1):
+        gid = stage_gids[i]
+        table = tables[gid]
+        j_local = int(args[i][b])
+        j = int(kept_of[gid][j_local])
+        picks[names[i]] = (
+            float(table.costs[j]),
+            float(table.values[j]),
+            (float(table.caps[j, 0]), float(table.caps[j, 1])),
+        )
+        b -= int(cu_of[gid][j_local])
     spent = sum(c for c, _, _ in picks.values())
     return MCKPSolution(total_value=total, spent=spent, picks=picks)
 
@@ -219,6 +657,69 @@ def solve_dense_jax(
             float(opt.costs[j]),
             float(opt.values[j]),
             (float(opt.caps[j, 0]), float(opt.caps[j, 1])),
+        )
+        b -= k
+    spent = sum(c for c, _, _ in picks.values())
+    return MCKPSolution(total_value=total, spent=spent, picks=picks)
+
+
+def _jax_dp_gather(f_groups, stage_gids, backend: str = "jax"):
+    """Repeated-stage forward DP: scan over group ids, gathering each
+    stage's curve from the [G, NB] class matrix.  Same convolutions in the
+    same order as ``_jax_dp`` on the row-expanded matrix — bitwise equal —
+    without materializing [N, NB] curves."""
+    import jax
+    import jax.numpy as jnp
+
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.maxplus_scan(f_groups, stage_gids)
+
+    from repro.kernels import ref as kref
+
+    @jax.jit
+    def run(f_groups, gids):
+        def stage(dp, gid):
+            out, arg = kref.maxplus_conv(dp, f_groups[gid])
+            return out, arg
+
+        dp0 = jnp.zeros(f_groups.shape[1], dtype=f_groups.dtype)
+        return jax.lax.scan(stage, dp0, gids)
+
+    return run(f_groups, jnp.asarray(stage_gids))
+
+
+def solve_dense_jax_grouped(
+    groups: Sequence[GroupedOptions],
+    budget: float,
+    unit: float = 1.0,
+    backend: str = "jax",
+) -> MCKPSolution:
+    """Grouped dense DP via the repeated-stage gather scan.
+
+    Bitwise identical to ``solve_dense_jax`` on the name-sorted ungrouped
+    expansion; curves are densified once per behaviour class and the scan
+    gathers its stage row by class id (jax or Pallas (max,+) kernel)."""
+    names, stage_gids, tables, f_groups, ch_groups = _grouped_dense_layout(
+        groups, budget, unit
+    )
+    dp_final, args = _jax_dp_gather(f_groups, stage_gids, backend=backend)
+    dp_final = np.asarray(dp_final)
+    args = np.asarray(args)
+
+    b = int(np.argmax(dp_final))
+    total = float(dp_final[b])
+    picks: dict[str, tuple[float, float, tuple[float, float]]] = {}
+    for i in range(len(names) - 1, -1, -1):
+        gid = stage_gids[i]
+        table = tables[gid]
+        k = int(args[i, b])  # units granted to receiver i
+        j = int(ch_groups[gid][k])  # option index realizing F(k)
+        picks[names[i]] = (
+            float(table.costs[j]),
+            float(table.values[j]),
+            (float(table.caps[j, 0]), float(table.caps[j, 1])),
         )
         b -= k
     spent = sum(c for c, _, _ in picks.values())

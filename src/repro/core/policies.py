@@ -32,6 +32,23 @@ from repro.core.types import (
 PolicyFn = Callable[..., Allocation]
 
 
+def allocation_from_solution(
+    sol: mckp.MCKPSolution,
+    baselines: Mapping[str, tuple[float, float]],
+    budget: float,
+    grid,
+) -> Allocation:
+    """Turn an MCKP solution's picks into a validated ``Allocation`` —
+    the shared assembly step of every DP policy and controller."""
+    alloc = Allocation(
+        caps={name: pick[2] for name, pick in sol.picks.items()},
+        spent=sol.spent,
+        predicted_improvement=sol.average_improvement(),
+    )
+    validate_allocation(alloc, baselines, budget, grid)
+    return alloc
+
+
 def _headroom(baselines, name, system) -> tuple[float, float]:
     c0, g0 = baselines[name]
     grid = system.grid
@@ -181,10 +198,29 @@ def ecoshift(
     *,
     solver: str = "sparse",
     unit: float = 1.0,
+    grouped: bool = False,
 ) -> Allocation:
     """Build per-receiver option curves from the (predicted) surfaces and
-    solve the multiple-choice knapsack with the DP of §3.2.2."""
+    solve the multiple-choice knapsack with the DP of §3.2.2.
+
+    ``grouped=True`` collapses receivers sharing (surface identity,
+    baseline) into one behaviour class — one option table and one DP
+    super-stage per class (DESIGN.md §11) — solving clusters of replicated
+    app classes in ~G stages instead of N, with bit-for-bit (sparse) /
+    bitwise (dense) parity against the ungrouped path.
+    """
     order = as_receiver_order(receivers)
+    if grouped:
+        groups = mckp.collapse_receivers(
+            [a.name for a in order],
+            [surfaces[a.name] for a in order],
+            [baselines[a.name] for a in order],
+            lambda surf, base: curves.build_options(
+                "class", surf, base, system.grid, budget
+            ),
+        )
+        sol = mckp.solve_grouped(groups, budget, solver=solver, unit=unit)
+        return allocation_from_solution(sol, baselines, budget, system.grid)
     options = [
         curves.build_options(
             a.name, surfaces[a.name], baselines[a.name], system.grid, budget
@@ -199,14 +235,7 @@ def ecoshift(
         sol = mckp.solve_dense_jax(options, budget, unit=unit, backend=solver)
     else:
         raise ValueError(f"unknown solver {solver!r}")
-    caps = {name: pick[2] for name, pick in sol.picks.items()}
-    alloc = Allocation(
-        caps=caps,
-        spent=sol.spent,
-        predicted_improvement=sol.average_improvement(),
-    )
-    validate_allocation(alloc, baselines, budget, system.grid)
-    return alloc
+    return allocation_from_solution(sol, baselines, budget, system.grid)
 
 
 # ---------------------------------------------------------------------------
@@ -242,12 +271,7 @@ def oracle(
         if exhaustive
         else mckp.solve_sparse(options, budget)
     )
-    caps = {name: pick[2] for name, pick in sol.picks.items()}
-    alloc = Allocation(
-        caps=caps, spent=sol.spent, predicted_improvement=sol.average_improvement()
-    )
-    validate_allocation(alloc, baselines, budget, system.grid)
-    return alloc
+    return allocation_from_solution(sol, baselines, budget, system.grid)
 
 
 POLICIES: dict[str, PolicyFn] = {

@@ -168,6 +168,32 @@ class EmulationResult:
         return metrics.jain_index(np.array(list(self.improvements.values())))
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class ReceiverBatch:
+    """Columnar receiver view handed to group-collapsing controllers.
+
+    The cluster engine materializes this instead of per-instance AppSpec
+    lists: aligned name/surface-id lists, a [n, 2] baseline-caps array and
+    one surface *object* per receiver.  Receivers sharing a surface
+    identity and baseline collapse into one option table / DP super-stage
+    (DESIGN.md §11).
+    """
+
+    names: Sequence[str]
+    surface_ids: Sequence[str]
+    baselines: np.ndarray  # [n, 2] float64
+    surfaces: Sequence  # PowerSurface per receiver, identity-groupable
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+    def baselines_map(self) -> dict[str, tuple[float, float]]:
+        return {
+            name: (float(self.baselines[i, 0]), float(self.baselines[i, 1]))
+            for i, name in enumerate(self.names)
+        }
+
+
 def validate_allocation(
     alloc: Allocation,
     baselines: Mapping[str, tuple[float, float]],

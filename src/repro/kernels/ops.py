@@ -41,6 +41,41 @@ def maxplus_conv_batched(dp: jax.Array, f: jax.Array, *, block_b: int = 256):
     )(dp, f)
 
 
+@functools.cache
+def _maxplus_scan_fn(block_b: int, interpret: bool):
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def run(f_groups, gids):
+        def stage(dp, gid):
+            out, arg = _mckp_dp.maxplus_conv_pallas(
+                dp, f_groups[gid], block_b=block_b, interpret=interpret
+            )
+            return out, arg
+
+        dp0 = jnp.zeros(f_groups.shape[1], dtype=f_groups.dtype)
+        return jax.lax.scan(stage, dp0, gids)
+
+    return run
+
+
+def maxplus_scan(f_groups, stage_gids, *, block_b: int = 256):
+    """Repeated-stage (max,+) DP scan over a group-id sequence.
+
+    f_groups: [G, NB] per-behaviour-class dense curves; stage_gids: [N]
+    int32, one class id per DP stage.  Each stage gathers its curve row and
+    runs the Pallas (max,+) convolution, so N-receiver clusters with G
+    distinct classes never materialize an [N, NB] curve matrix.  Returns
+    (dp_final [NB], argmax_k [N, NB]) — bitwise equal to scanning the
+    row-expanded matrix through ``maxplus_conv``.
+    """
+    import jax.numpy as jnp
+
+    run = _maxplus_scan_fn(block_b, not _on_tpu())
+    return run(f_groups, jnp.asarray(stage_gids))
+
+
 def flash_attention(q, k, v, **kw):
     """Fused GQA attention (train/prefill).  See flash_attention.py."""
     from repro.kernels import flash_attention as _fa

@@ -1,0 +1,336 @@
+"""Columnar cluster state tests (DESIGN.md §11).
+
+Certifies the NodeTable refactor's contracts:
+ * NodeState views round-trip losslessly through the columnar store;
+ * batched event application (`apply_events`) is semantically identical to
+   the legacy one-list-rebuild-per-event path (reference implementation
+   kept here) AND to one-event-at-a-time application;
+ * conservation: the reclaimed pool plus surviving draws/caps always
+   accounts for the cluster's total cap allotment, under failures,
+   stragglers and arrivals;
+ * array-native telemetry (TelemetryBatch) is bit-identical to its record
+   views, and the predictor's columnar ingest matches the record loop.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterSim, Scenario, TelemetryBatch
+from repro.cluster.controller import make_controller
+from repro.cluster.predictor import OnlinePredictor, OnlinePredictorConfig
+from repro.cluster.scenario import (
+    NodeArrival,
+    NodeFailure,
+    PhaseChange,
+    StragglerOnset,
+)
+from repro.cluster.sim import NodeState, NodeTable
+from repro.core import surfaces, types
+
+
+@pytest.fixture(scope="module")
+def suite():
+    system = types.SYSTEM_1
+    apps, surfs = surfaces.build_paper_suite(system)
+    return system, apps, surfs
+
+
+def _sim(suite, n_nodes=30, seed=0):
+    system, apps, surfs = suite
+    return ClusterSim.build(system, apps, surfs, n_nodes=n_nodes, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Columnar store round-trips
+# ---------------------------------------------------------------------------
+
+
+class TestNodeTable:
+    def test_views_round_trip(self, suite):
+        sim = _sim(suite)
+        nodes = sim.nodes
+        rebuilt = NodeTable.from_nodes(nodes)
+        assert rebuilt.views() == nodes
+
+    def test_nodes_setter_reingests(self, suite):
+        sim = _sim(suite)
+        mutated = [
+            dataclasses.replace(n, slowdown=2.5) if n.node_id == 3 else n
+            for n in sim.nodes
+        ]
+        sim.nodes = mutated
+        assert sim.table.slowdown[3] == 2.5
+        assert sim.nodes == mutated
+
+    def test_views_cache_invalidated_by_events(self, suite):
+        sim = _sim(suite)
+        before = sim.nodes
+        sim.apply_event(NodeFailure(round=0, node_ids=(1,)))
+        after = sim.nodes
+        assert before is not after
+        assert not after[1].alive
+
+    def test_interned_ids_consistent(self, suite):
+        sim = _sim(suite)
+        t = sim.table
+        for r, n in enumerate(sim.nodes):
+            assert t.strings[t.base_gid[r]] == n.base_app
+            assert t.strings[t.sid_gid[r]] == n.app.surface_id
+            assert t.strings[t.name_gid[r]] == n.app.name
+
+    def test_rows_for_ids_preserves_order(self, suite):
+        sim = _sim(suite)
+        ids = [7, 2, 11]
+        rows = sim.table.rows_for_ids(ids)
+        assert [int(sim.table.node_ids[r]) for r in rows] == ids
+
+
+# ---------------------------------------------------------------------------
+# Batched events == legacy per-event list rebuild
+# ---------------------------------------------------------------------------
+
+
+def _legacy_apply(nodes, surfs, system, event):
+    """The pre-columnar apply_event (PR 2 semantics), verbatim."""
+    if isinstance(event, NodeFailure):
+        ids = set(event.node_ids)
+        touched = [n.app.name for n in nodes if n.node_id in ids]
+        nodes = [
+            dataclasses.replace(n, alive=False) if n.node_id in ids else n
+            for n in nodes
+        ]
+        return nodes, surfs, touched
+    if isinstance(event, StragglerOnset):
+        nodes = [
+            dataclasses.replace(n, slowdown=event.slowdown)
+            if n.node_id == event.node_id
+            else n
+            for n in nodes
+        ]
+        return (
+            nodes,
+            surfs,
+            [n.app.name for n in nodes if n.node_id == event.node_id],
+        )
+    if isinstance(event, PhaseChange):
+        nodes = [
+            dataclasses.replace(
+                n,
+                base_app=event.surface_id,
+                app=dataclasses.replace(n.app, surface_id=event.surface_id),
+            )
+            if n.node_id == event.node_id
+            else n
+            for n in nodes
+        ]
+        return (
+            nodes,
+            surfs,
+            [n.app.name for n in nodes if n.node_id == event.node_id],
+        )
+    if isinstance(event, NodeArrival):
+        if event.surface is not None:
+            surfs = {**surfs, event.app.name: event.surface}
+        nid = 1 + max((n.node_id for n in nodes), default=-1)
+        caps = event.caps or (system.init_cpu, system.init_gpu)
+        inst = types.AppSpec(
+            name=f"{event.app.name}#n{nid}",
+            sclass=event.app.sclass,
+            surface_id=event.app.surface_id,
+        )
+        nodes = nodes + [
+            NodeState(node_id=nid, app=inst, base_app=event.app.name, caps=caps)
+        ]
+        return nodes, surfs, []
+    raise TypeError(event)
+
+
+class TestBatchedEvents:
+    def _event_batch(self, suite):
+        _, apps, _ = suite
+        return [
+            NodeFailure(round=0, node_ids=(2, 5)),
+            StragglerOnset(round=0, node_id=7, slowdown=1.9),
+            PhaseChange(round=0, node_id=9, surface_id=apps[1].name),
+            NodeArrival(round=0, app=apps[0]),
+            StragglerOnset(round=0, node_id=7, slowdown=2.4),  # re-touch
+            NodeFailure(round=0, node_ids=(30,)),  # the arrival dies again
+        ]
+
+    def test_batched_matches_legacy_reference(self, suite):
+        system, apps, surfs = suite
+        sim = _sim(suite)
+        events = self._event_batch(suite)
+
+        nodes_ref = list(sim.nodes)
+        surfs_ref = dict(surfs)
+        touched_ref: list[str] = []
+        for ev in events:
+            nodes_ref, surfs_ref, t = _legacy_apply(
+                nodes_ref, surfs_ref, system, ev
+            )
+            touched_ref.extend(t)
+
+        touched = sim.apply_events(events)
+        assert touched == touched_ref
+        assert sim.nodes == nodes_ref
+
+    def test_batched_matches_one_at_a_time(self, suite):
+        events = self._event_batch(suite)
+        sim_a = _sim(suite)
+        sim_b = _sim(suite)
+        touched_a = sim_a.apply_events(events)
+        touched_b: list[str] = []
+        for ev in events:
+            touched_b.extend(sim_b.apply_event(ev))
+        assert touched_a == touched_b
+        assert sim_a.nodes == sim_b.nodes
+
+    def test_arrival_with_novel_surface_registers(self, suite):
+        system, apps, surfs = suite
+        sim = _sim(suite, n_nodes=5)
+        novel = types.AppSpec(name="novel", sclass="B", surface_id="novel")
+        surf = surfs[apps[0].name]
+        sim.apply_events([NodeArrival(round=0, app=novel, surface=surf)])
+        assert sim.surfaces["novel"] is surf
+        assert sim.nodes[-1].base_app == "novel"
+
+    def test_unknown_phase_surface_raises(self, suite):
+        sim = _sim(suite, n_nodes=5)
+        with pytest.raises(KeyError):
+            sim.apply_events(
+                [PhaseChange(round=0, node_id=0, surface_id="nope")]
+            )
+
+
+# ---------------------------------------------------------------------------
+# Conservation invariants
+# ---------------------------------------------------------------------------
+
+
+class TestConservation:
+    @pytest.mark.parametrize("seed", [0, 3, 11])
+    def test_pool_accounts_for_total_allotment(self, suite, seed):
+        """pool + donor natural draws + alive-receiver caps == total caps,
+        maintained through failures, stragglers and arrivals."""
+        system, apps, surfs = suite
+        sim = ClusterSim.build(system, apps, surfs, n_nodes=60, seed=seed)
+        rng = np.random.default_rng(seed)
+        for step in range(4):
+            donors, recv, pool = sim.partition()
+            total = float(sim.table.caps.sum())
+            donor_draw = sum(
+                float(sum(sim._surface(n).power_draw(1e9, 1e9))) for n in donors
+            )
+            recv_caps = sum(n.caps[0] + n.caps[1] for n in recv)
+            # donors keep their natural draw; 'slack' is what they donate
+            assert np.isclose(pool + donor_draw + recv_caps, total), (
+                f"step {step}: {pool} + {donor_draw} + {recv_caps} != {total}"
+            )
+            # mutate: one failure + one arrival + one straggler
+            alive = [n.node_id for n in sim.alive_nodes()]
+            sim.apply_events(
+                [
+                    NodeFailure(round=0, node_ids=(int(rng.choice(alive)),)),
+                    NodeArrival(round=0, app=apps[int(rng.integers(len(apps)))]),
+                    StragglerOnset(
+                        round=0,
+                        node_id=int(rng.choice(alive)),
+                        slowdown=float(rng.uniform(1.2, 2.5)),
+                    ),
+                ]
+            )
+
+    def test_partition_rows_matches_views(self, suite):
+        sim = _sim(suite, n_nodes=50)
+        sim.apply_events([NodeFailure(round=0, node_ids=(1, 4, 9))])
+        d_rows, r_rows, pool_rows = sim.partition_rows()
+        donors, recv, pool = sim.partition()
+        assert [n.node_id for n in donors] == [
+            int(sim.table.node_ids[r]) for r in d_rows
+        ]
+        assert [n.node_id for n in recv] == [
+            int(sim.table.node_ids[r]) for r in r_rows
+        ]
+        assert pool == pool_rows
+        # every node is exactly one of donor / receiver / dead
+        assert len(d_rows) + len(r_rows) == len(sim.alive_nodes())
+
+
+# ---------------------------------------------------------------------------
+# Array-native telemetry
+# ---------------------------------------------------------------------------
+
+
+class _StubNCF:
+    """Enough NCFPredictor surface for observe-only predictor tests."""
+
+    def __init__(self, system):
+        self.system = system
+        self.app_index: dict = {}
+
+
+class TestTelemetryBatch:
+    def _round(self, suite, n_nodes=16):
+        system, apps, surfs = suite
+        sim = ClusterSim.build(system, apps, surfs, n_nodes=n_nodes, seed=2)
+        res = sim.run_round(make_controller("dps", system), budget=1200.0)
+        return system, surfs, sim, res
+
+    def test_batch_views_match_result(self, suite):
+        _, _, sim, res = self._round(suite)
+        batch = sim.last_telemetry
+        assert isinstance(batch, TelemetryBatch)
+        assert len(batch) == len(res.improvements)
+        assert {r.instance: r.improvement for r in batch} == res.improvements
+        for r in batch:
+            assert r.improvement == (r.t_baseline - r.t_allocated) / r.t_baseline
+            assert r.allocated_caps == res.allocation.caps[r.instance]
+
+    def test_indexing_and_instances(self, suite):
+        _, _, sim, _ = self._round(suite)
+        batch = sim.last_telemetry
+        assert batch[0] == next(iter(batch))
+        assert batch.instances == [r.instance for r in batch]
+
+    def test_predictor_batch_ingest_equals_record_loop(self, suite):
+        system, surfs, sim, _ = self._round(suite)
+        batch = sim.last_telemetry
+        served = {
+            app: surfaces.tabulate(surfs[app], system)
+            for app in {r.base_app for r in batch}
+        }
+        pa = OnlinePredictor(_StubNCF(system), OnlinePredictorConfig())
+        pb = OnlinePredictor(_StubNCF(system), OnlinePredictorConfig())
+        pa.seed_surfaces(served)
+        pb.seed_surfaces(served)
+        pa.observe(batch)  # columnar fast path
+        pb.observe(tuple(batch))  # record loop
+        assert pa._buffers == pb._buffers  # bit-for-bit sums and counts
+        assert pa.prediction_error == pb.prediction_error
+        assert pa._app_of_instance == pb._app_of_instance
+        assert pa._dirty == pb._dirty
+
+    def test_max_cells_admission_order(self, suite):
+        """Cell admission under the buffer bound follows stream order on
+        both ingest paths."""
+        system, surfs, sim, _ = self._round(suite)
+        batch = sim.last_telemetry
+        cfg = OnlinePredictorConfig(max_cells=1)
+        pa = OnlinePredictor(_StubNCF(system), cfg)
+        pb = OnlinePredictor(_StubNCF(system), cfg)
+        pa.observe(batch)
+        pb.observe(tuple(batch))
+        assert pa._buffers == pb._buffers
+
+    def test_loop_measurement_still_emits_empty(self, suite):
+        system, apps, surfs = suite
+        sim = ClusterSim.build(system, apps, surfs, n_nodes=8, seed=1)
+        sim.run_round(
+            make_controller("dps", system),
+            budget=500.0,
+            use_loop_measurement=True,
+        )
+        assert sim.last_telemetry == ()

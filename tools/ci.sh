@@ -17,5 +17,8 @@ fi
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
-echo "== cluster.sim smoke scenario (CPU interpret mode, incl. online prediction) =="
+echo "== cluster.sim smoke scenario (CPU interpret mode, incl. online prediction + 1k scaling tier) =="
 python tools/smoke_scenario.py
+
+echo "== cluster scaling bench (fast tiers; emits BENCH_cluster_scaling.json) =="
+python -m benchmarks.cluster_scaling --fast --out BENCH_cluster_scaling.json

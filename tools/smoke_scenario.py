@@ -3,10 +3,13 @@
 5 rounds, 50 nodes, one failure and one straggler, for both the
 ``ecoshift`` and ``dps`` controllers — on CPU (Pallas interpret mode for
 the jax-solver round).  Also reports the vectorized-vs-loop measurement
-speedup at 100 nodes, and exercises the online-prediction path: a
-cold-start arrival (no pretrained surface) converging under the
-``ecoshift_online`` controller within a handful of telemetry rounds.
-Exits nonzero on any regression; hard wall-clock budget < 60 s.
+speedup at 100 nodes, runs the **1k-node scaling tier** (group-collapsed
+columnar engine: a 6-round scenario with failure/straggler/arrival under
+its own wall-clock guard, plus a grouped-vs-legacy allocation parity spot
+check), and exercises the online-prediction path: a cold-start arrival
+(no pretrained surface) converging under the ``ecoshift_online``
+controller within a handful of telemetry rounds.  Exits nonzero on any
+regression; hard wall-clock budget < 60 s.
 
     PYTHONPATH=src python tools/smoke_scenario.py
 """
@@ -29,6 +32,57 @@ from repro.core.allocator import EcoShiftAllocator
 
 #: hard wall-clock budget for the whole smoke (shared CI runners)
 BUDGET_S = 60.0
+
+#: wall-clock guard for the 1k-node scaling tier alone
+SCALING_BUDGET_S = 15.0
+
+
+def scaling_smoke(system, apps, surfs) -> None:
+    """1k-node tier through the group-collapsed columnar engine."""
+    n = 1000
+    t0 = time.perf_counter()
+    sim = ClusterSim.build(
+        system, apps, surfs, n_nodes=n, seed=0, initial_caps=(150.0, 150.0)
+    )
+    scen = (
+        Scenario.constant(6, budget=2000.0)
+        .with_failure(1, *range(10))
+        .with_straggler(2, 500, 1.7)
+        .with_arrival(3, apps[0])
+    )
+    trace = sim.run(scen, make_controller("ecoshift", system))
+    elapsed = time.perf_counter() - t0
+    imp = trace.improvement_trace
+    assert trace.n_rounds == 6
+    assert trace.records[1].n_alive == n - 10, "failures not applied"
+    assert trace.records[3].n_alive == n - 9, "arrival not applied"
+    assert np.isfinite(imp).all() and (imp > 0).all(), imp
+    assert elapsed < SCALING_BUDGET_S, (
+        f"1k-node scaling tier took {elapsed:.1f} s "
+        f"(guard {SCALING_BUDGET_S} s)"
+    )
+    print(
+        f"scaling   {n} nodes x {trace.n_rounds} rounds in {elapsed:.1f} s "
+        f"({trace.n_rounds / elapsed:.1f} rounds/s), "
+        f"avg_improvement={imp.mean() * 100:.1f}%"
+    )
+
+    # grouped-vs-legacy allocation parity spot check (200 nodes)
+    sim_g = ClusterSim.build(
+        system, apps, surfs, n_nodes=200, seed=1, initial_caps=(150.0, 150.0)
+    )
+    res_g = sim_g.run_round(make_controller("ecoshift", system), budget=1500.0)
+    sim_l = ClusterSim.build(
+        system, apps, surfs, n_nodes=200, seed=1, initial_caps=(150.0, 150.0)
+    )
+    res_l = sim_l.run_round(
+        make_controller("ecoshift", system, grouped=False), budget=1500.0
+    )
+    assert dict(res_g.allocation.caps) == dict(res_l.allocation.caps), (
+        "grouped allocation diverged from the per-instance path"
+    )
+    assert res_g.improvements == res_l.improvements
+    print("scaling   grouped == legacy per-instance at 200 nodes (bit-for-bit)")
 
 
 def online_prediction_smoke(system, apps, surfs) -> None:
@@ -131,6 +185,8 @@ def main() -> None:
     # generous floor: shared CI runners are noisy; the >=5x acceptance
     # check runs in tests/test_cluster.py
     assert speedup >= 2.0, f"vectorized speedup regressed to {speedup:.1f}x"
+
+    scaling_smoke(system, apps, surfs)
 
     online_prediction_smoke(system, apps, surfs)
 
