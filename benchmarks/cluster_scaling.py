@@ -16,6 +16,11 @@ Grouped-vs-legacy cap parity is asserted at every tier before timing.
 Run as a module to emit ``BENCH_cluster_scaling.json``:
 
     PYTHONPATH=src python -m benchmarks.cluster_scaling [--fast]
+
+``--check BENCH_cluster_scaling.json`` additionally guards against
+regressions: fresh warm-round times must stay within a generous factor of
+the committed reference (the reference is loaded before ``--out``
+overwrites it, so both flags may point at the same file — CI does).
 """
 
 from __future__ import annotations
@@ -166,15 +171,61 @@ def run(lines: list[str], *, fast: bool = False, results: list | None = None):
         )
 
 
+#: regression-guard tolerance vs a committed reference: generous, because
+#: the reference was measured on a different (possibly idle) machine
+CHECK_FACTOR = 5.0
+CHECK_SLACK_S = 0.25
+
+
+def check_against(reference: dict, results: list) -> list[str]:
+    """Compare fresh warm-round times against a committed reference run.
+
+    A tier regresses when its fresh grouped warm round exceeds
+    ``CHECK_FACTOR x ref + CHECK_SLACK_S`` — loose enough for shared-runner
+    noise, tight enough to catch an accidental return to per-node scaling
+    (the legacy path is 60-370x slower at the upper tiers).  Only tiers
+    present in both runs are compared.  Returns regression messages.
+    """
+    ref_by_n = {t["n_nodes"]: t for t in reference.get("tiers", [])}
+    problems = []
+    for tier in results:
+        ref = ref_by_n.get(tier["n_nodes"])
+        if ref is None:
+            continue
+        fresh = tier["grouped_round_s"]["warm"]
+        budget = CHECK_FACTOR * ref["grouped_round_s"]["warm"] + CHECK_SLACK_S
+        if fresh > budget:
+            problems.append(
+                f"n={tier['n_nodes']}: warm grouped round {fresh:.3f}s "
+                f"exceeds {budget:.3f}s "
+                f"({CHECK_FACTOR}x ref {ref['grouped_round_s']['warm']:.3f}s "
+                f"+ {CHECK_SLACK_S}s)"
+            )
+    return problems
+
+
 def main() -> None:
     import argparse
+    import sys
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="skip the 10k tier")
     ap.add_argument(
         "--out", default="BENCH_cluster_scaling.json", help="JSON output path"
     )
+    ap.add_argument(
+        "--check",
+        default=None,
+        metavar="REF_JSON",
+        help="compare fresh warm-round times against a committed reference "
+        "(loaded before --out overwrites it); exit 1 on regression",
+    )
     args = ap.parse_args()
+
+    reference = None
+    if args.check:
+        with open(args.check) as f:
+            reference = json.load(f)
 
     lines: list[str] = ["name,us_per_call,derived"]
     results: list = []
@@ -190,6 +241,14 @@ def main() -> None:
         json.dump(payload, f, indent=2)
     print("\n".join(lines))
     print(f"# wrote {args.out} in {payload['elapsed_s']:.1f}s")
+
+    if reference is not None:
+        problems = check_against(reference, results)
+        for p in problems:
+            print(f"# REGRESSION: {p}", file=sys.stderr)
+        if problems:
+            sys.exit(1)
+        print(f"# regression guard OK vs {args.check}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,251 @@
+"""Hierarchical vs flat allocation benchmark (DESIGN.md §12).
+
+For n ∈ {1k, 10k} nodes and rack fan-outs {1, 4, 16}, times one
+redistribution round through
+
+ * **flat**: the group-collapsed columnar engine (no topology) — the PR 3
+   reference path;
+ * **hier**: the same engine with a site → rack PowerTopology attached and
+   the two-level capped-frontier solver (``ecoshift_hier``);
+
+and reports achieved performance (average measured improvement) plus each
+path's worst per-domain overdraw — the flat allocator ignores rack caps
+and overdraws tight racks, the hierarchical one never does (engine-
+asserted).  Rack caps are set to committed draw + 60% of the rack's
+budget share, so the caps genuinely bind.
+
+At fan-out 1 the topology degenerates to a single root and the
+hierarchical allocation is asserted cap-for-cap equal to the flat one; at
+10k nodes the multi-domain warm round must finish within 2x the flat warm
+round (the DESIGN.md §12 acceptance bar).
+
+Run as a module to emit ``BENCH_hier_alloc.json``:
+
+    PYTHONPATH=src python -m benchmarks.hier_alloc [--fast]
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks.common import csv_line, get_suite
+from repro.cluster import ClusterSim, PowerDomain, PowerTopology
+from repro.cluster.controller import make_controller
+
+#: acceptance bar: multi-domain round time vs the flat grouped round
+MAX_RATIO_VS_FLAT = 2.0
+
+#: rack headroom as a fraction of the rack's even budget share
+RACK_HEADROOM_FRAC = 0.6
+
+
+def _sim(system, apps, surfs, n: int, topology=None) -> ClusterSim:
+    return ClusterSim.build(
+        system, apps, surfs, n_nodes=n, seed=0,
+        initial_caps=(150.0, 150.0), topology=topology,
+    )
+
+
+def _budget(n: int) -> float:
+    return float(min(2.0 * n, 8000.0))
+
+
+def _topology(system, apps, surfs, n: int, n_racks: int, budget: float):
+    """Site → rack tree with *per-rack* binding caps: each rack gets its
+    own committed draw + 60% of its even budget share, so every rack's
+    cap genuinely binds (fan-out 1 keeps an unconstrained root — the
+    parity anchor)."""
+    if n_racks == 1:
+        return PowerTopology.single_root(n, cap=1e18)
+    probe = _sim(
+        system, apps, surfs, n,
+        topology=PowerTopology.uniform_racks(n, n_racks, rack_cap=1e15),
+    )
+    _, committed, _ = probe.domain_headroom(0)
+    rack_extra = RACK_HEADROOM_FRAC * budget / n_racks
+    racks = tuple(
+        PowerDomain(
+            name=probe.topology.domains[i].name,
+            cap=float(committed[i]) + rack_extra,
+            nodes=probe.topology.domains[i].nodes,
+        )
+        for i in probe.topology.leaf_ids
+    )
+    return PowerTopology(PowerDomain(name="site", cap=1e18, children=racks))
+
+
+def _timed_round(sim, ctrl, budget: float) -> tuple[float, object]:
+    t0 = time.perf_counter()
+    res = sim.run_round(ctrl, budget=budget)
+    return time.perf_counter() - t0, res
+
+
+def _max_overdraw(sim) -> float:
+    if not sim.last_domain_draw:
+        return 0.0
+    return max(
+        0.0,
+        max(
+            sim.last_domain_draw[k] - sim.last_domain_caps[k]
+            for k in sim.last_domain_draw
+        ),
+    )
+
+
+def run(lines: list[str], *, fast: bool = False, results: list | None = None):
+    system, apps, surfs = get_suite("system1-a100")
+    tiers = [1000] if fast else [1000, 10000]
+    fanouts = [1, 4, 16]
+    for n in tiers:
+        budget = _budget(n)
+
+        # flat grouped reference (no topology): cold + warm round
+        sim_f = _sim(system, apps, surfs, n)
+        ctrl_f = make_controller("ecoshift", system)
+        t_flat_cold, res_flat = _timed_round(sim_f, ctrl_f, budget)
+        t_flat_warm, _ = _timed_round(sim_f, ctrl_f, budget)
+
+        tier = {
+            "n_nodes": n,
+            "budget_w": budget,
+            "flat_round_s": {"cold": t_flat_cold, "warm": t_flat_warm},
+            "fanouts": [],
+        }
+        for n_racks in fanouts:
+            topo = _topology(system, apps, surfs, n, n_racks, budget)
+
+            sim_h = _sim(system, apps, surfs, n, topology=topo)
+            ctrl_h = make_controller("ecoshift_hier", system)
+            t_cold, res_h = _timed_round(sim_h, ctrl_h, budget)
+            hier_over = _max_overdraw(sim_h)
+            t_warm, _ = _timed_round(sim_h, ctrl_h, budget)
+
+            if n_racks == 1:
+                # single-root degenerate topology == flat, cap for cap
+                assert dict(res_h.allocation.caps) == dict(
+                    res_flat.allocation.caps
+                ), "single-root hierarchical diverged from flat grouped"
+
+            # what a flat allocator does to the same rack caps
+            sim_v = _sim(system, apps, surfs, n, topology=topo)
+            sim_v.run_round(make_controller("ecoshift", system), budget=budget)
+            flat_over = _max_overdraw(sim_v)
+
+            ratio = t_warm / t_flat_warm
+            if n >= 10000 and n_racks > 1:
+                assert ratio <= MAX_RATIO_VS_FLAT, (
+                    f"hier round at n={n}, {n_racks} racks took "
+                    f"{ratio:.2f}x the flat round (bar {MAX_RATIO_VS_FLAT}x)"
+                )
+            entry = {
+                "n_racks": n_racks,
+                "hier_round_s": {"cold": t_cold, "warm": t_warm},
+                "ratio_warm_vs_flat": ratio,
+                "hier_avg_improvement": res_h.avg_improvement,
+                "flat_avg_improvement": res_flat.avg_improvement,
+                "hier_max_overdraw_w": hier_over,
+                "flat_max_overdraw_w": flat_over,
+            }
+            assert hier_over <= 1e-6, "hierarchical path overdrew a domain"
+            tier["fanouts"].append(entry)
+            lines.append(
+                csv_line(
+                    f"hier_alloc.n{n}.racks{n_racks}",
+                    t_warm * 1e6,
+                    f"hier_warm_s={t_warm:.4f};flat_warm_s={t_flat_warm:.4f};"
+                    f"ratio={ratio:.2f}x;"
+                    f"hier_imp={res_h.avg_improvement * 100:.2f}%;"
+                    f"flat_imp={res_flat.avg_improvement * 100:.2f}%;"
+                    f"flat_overdraw_w={flat_over:.0f};"
+                    f"hier_overdraw_w={hier_over:.0f}",
+                )
+            )
+        if results is not None:
+            results.append(tier)
+
+
+#: regression-guard tolerance vs a committed reference (mirrors
+#: benchmarks.cluster_scaling; generous for shared-runner noise)
+CHECK_FACTOR = 5.0
+CHECK_SLACK_S = 0.25
+
+
+def check_against(reference: dict, results: list) -> list[str]:
+    """Warm hierarchical-round regressions vs a committed reference run.
+
+    Compares (n_nodes, n_racks) pairs present in both runs; a fresh warm
+    round above ``CHECK_FACTOR x ref + CHECK_SLACK_S`` regresses.
+    """
+    ref_by_key = {
+        (t["n_nodes"], f["n_racks"]): f
+        for t in reference.get("tiers", [])
+        for f in t["fanouts"]
+    }
+    problems = []
+    for tier in results:
+        for f in tier["fanouts"]:
+            ref = ref_by_key.get((tier["n_nodes"], f["n_racks"]))
+            if ref is None:
+                continue
+            fresh = f["hier_round_s"]["warm"]
+            budget = CHECK_FACTOR * ref["hier_round_s"]["warm"] + CHECK_SLACK_S
+            if fresh > budget:
+                problems.append(
+                    f"n={tier['n_nodes']}, racks={f['n_racks']}: warm hier "
+                    f"round {fresh:.3f}s exceeds {budget:.3f}s "
+                    f"({CHECK_FACTOR}x ref {ref['hier_round_s']['warm']:.3f}s "
+                    f"+ {CHECK_SLACK_S}s)"
+                )
+    return problems
+
+
+def main() -> None:
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="skip the 10k tier")
+    ap.add_argument(
+        "--out", default="BENCH_hier_alloc.json", help="JSON output path"
+    )
+    ap.add_argument(
+        "--check",
+        default=None,
+        metavar="REF_JSON",
+        help="compare fresh warm hier-round times against a committed "
+        "reference (loaded before --out overwrites it); exit 1 on regression",
+    )
+    args = ap.parse_args()
+
+    reference = None
+    if args.check:
+        with open(args.check) as f:
+            reference = json.load(f)
+
+    lines: list[str] = ["name,us_per_call,derived"]
+    results: list = []
+    t0 = time.time()
+    run(lines, fast=args.fast, results=results)
+    payload = {
+        "benchmark": "hier_alloc",
+        "fast": args.fast,
+        "elapsed_s": time.time() - t0,
+        "tiers": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print("\n".join(lines))
+    print(f"# wrote {args.out} in {payload['elapsed_s']:.1f}s")
+
+    if reference is not None:
+        problems = check_against(reference, results)
+        for p in problems:
+            print(f"# REGRESSION: {p}", file=sys.stderr)
+        if problems:
+            sys.exit(1)
+        print(f"# regression guard OK vs {args.check}")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ def main() -> None:
     from benchmarks import (
         cluster_scaling,
         dp_scaling,
+        hier_alloc,
         fig1_heatmaps,
         fig2_marginal_gain,
         fig5_budget_sweep,
@@ -47,6 +48,7 @@ def main() -> None:
         ("fig11", fig11_fairness.run, True),
         ("dp_scaling", dp_scaling.run, True),
         ("cluster_scaling", cluster_scaling.run, True),
+        ("hier_alloc", hier_alloc.run, True),
         ("roofline", roofline_report.run, False),
         ("pod_power", pod_power_allocation.run, True),
         ("straggler", straggler_response.run, True),

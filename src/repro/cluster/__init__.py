@@ -16,7 +16,9 @@ Four layers:
 this package, kept for the paper-figure benchmarks and tests.
 """
 
+from repro.core.topology import PowerDomain, PowerTopology  # noqa: F401
 from repro.cluster.scenario import (  # noqa: F401
+    DomainCapChange,
     NodeArrival,
     NodeFailure,
     PhaseChange,

@@ -17,6 +17,11 @@ the existing pure policy function but *carries warm state across rounds*:
    measurements via ``ingest_telemetry``, and invalidates warm option
    tables only for instances whose served surface actually moved beyond
    the predictor's tolerance.
+ * ``EcoShiftHierController`` allocates through the topology-aware
+   two-level capped-frontier DP (DESIGN.md §12), collapsing behaviour
+   classes within each leaf power domain and splitting the cluster budget
+   across domains subject to every local cap — with the same warm
+   content-keyed caches, plus per-domain frontier memoization.
  * heuristic controllers (uniform / DPS / MixedAdaptive) are stateless
    wrappers, registered for a uniform interface.
 
@@ -186,6 +191,16 @@ class _OptionCachingController(Controller):
         self._group_tables[key] = (surf, table)
         return table
 
+    def _prune_group_caches(self, touched: dict, n_groups: int) -> None:
+        """Opportunistic prune: identity-keyed entries whose surface was
+        swapped (online refresh, phase change) can never match again."""
+        if len(self._group_tables) > max(64, 4 * n_groups):
+            self._group_tables = {
+                k: v for k, v in self._group_tables.items() if k in touched
+            }
+        if len(self._agg_curves) > 512:
+            self._agg_curves.clear()
+
     def _grouped_options_for(
         self, batch: ReceiverBatch
     ) -> list[mckp.GroupedOptions]:
@@ -203,14 +218,7 @@ class _OptionCachingController(Controller):
         groups = mckp.collapse_receivers(
             batch.names, batch.surfaces, batch.baselines, table_for
         )
-        # opportunistic prune: identity-keyed entries whose surface was
-        # swapped (online refresh, phase change) can never match again
-        if len(self._group_tables) > max(64, 4 * len(groups)):
-            self._group_tables = {
-                k: v for k, v in self._group_tables.items() if k in touched
-            }
-        if len(self._agg_curves) > 512:
-            self._agg_curves.clear()
+        self._prune_group_caches(touched, len(groups))
         return groups
 
 
@@ -308,6 +316,152 @@ class EcoShiftController(_OptionCachingController):
             )
             for budget, sol in zip(budgets, sols)
         ]
+
+
+@policies_mod.register_controller("ecoshift_hier")
+class EcoShiftHierController(EcoShiftController):
+    """Topology-aware EcoShift: two-level capped-frontier MCKP (DESIGN.md §12).
+
+    The engine hands this controller a columnar receiver batch *with leaf
+    domain ids* plus the round's per-domain extra-power headroom; receivers
+    collapse into behaviour classes **within each leaf domain** (same warm
+    identity-keyed group tables as the flat path), each leaf's class DP
+    becomes a capped value-vs-spend frontier, and the upper-level DP splits
+    the cluster budget across domains (``mckp.solve_hierarchical``).
+
+    Warm state (``solver='sparse'``, the default): the shared
+    aggregate-curve cache plus a **frontier cache** keyed by (per-class
+    digest+multiplicity layout, quantized budget) — both content-keyed, so
+    telemetry-driven surface swaps invalidate implicitly (a swapped
+    surface digests differently and the stale entry stops matching).  The
+    dense ``'jax'``/``'pallas'`` path recomputes its layouts per round
+    (the warm tables still apply).  Passing ``predictor`` sources every
+    receiver surface
+    from a telemetry-driven :class:`~repro.cluster.predictor
+    .OnlinePredictor` exactly like ``ecoshift_online``.
+    """
+
+    policy = "ecoshift_hier"
+    supports_hierarchical = True
+
+    def __init__(
+        self,
+        system: SystemSpec,
+        *,
+        topology=None,
+        solver: str = "sparse",
+        unit: float = 1.0,
+        predictor=None,
+        allocator=None,
+    ):
+        super().__init__(system, solver=solver, unit=unit, allocator=allocator)
+        #: repro.core.topology.PowerTopology (bound here or by the engine)
+        self.topology = topology
+        #: optional OnlinePredictor: serve predicted surfaces + ingest telemetry
+        self.predictor = predictor
+        #: (class layout, quantized budget) -> leaf frontier DP arrays
+        self._frontiers: dict = {}
+        #: per-domain watts spent by the latest hierarchical solve
+        self.last_domain_spent: dict[str, float] | None = None
+
+    @property
+    def serves_own_surfaces(self) -> bool:
+        return self.predictor is not None
+
+    def bind_topology(self, topology) -> None:
+        """Attach (or swap) the domain tree; a swap drops warm state."""
+        if self.topology is not None and self.topology is not topology:
+            self.invalidate()
+        self.topology = topology
+
+    def _served_batch(self, batch: ReceiverBatch) -> ReceiverBatch:
+        if self.predictor is None:
+            return batch
+        served = [
+            self.predictor.surface_for(name, sid)
+            for name, sid in zip(batch.names, batch.surface_ids)
+        ]
+        return dataclasses.replace(batch, surfaces=served)
+
+    _NO_TOPOLOGY = (
+        "ecoshift_hier allocates per power domain — attach a PowerTopology "
+        "to the sim/scenario, or use 'ecoshift' for flat allocation"
+    )
+
+    def allocate(self, receivers, baselines, budget, surfaces):
+        # reached only when the engine has no topology attached: a silent
+        # flat fallback under the hier name would be a footgun
+        raise ValueError(self._NO_TOPOLOGY)
+
+    def allocate_grouped(self, batch: ReceiverBatch, budget: float):
+        raise ValueError(self._NO_TOPOLOGY)
+
+    def invalidate(self, names: Sequence[str] | None = None) -> None:
+        super().invalidate(names)
+        if names is None:
+            self._frontiers.clear()
+
+    def _grouped_options_by_leaf(
+        self, batch: ReceiverBatch
+    ) -> dict[int, list[mckp.GroupedOptions]]:
+        """Per-leaf-domain behaviour-class collapse over the warm tables."""
+        touched: dict[tuple, None] = {}
+
+        def table_for(surf, base):
+            touched[(id(surf), base)] = None
+            return self._group_table(surf, base)
+
+        by_leaf: dict[int, list[mckp.GroupedOptions]] = {}
+        leaf_ids = np.asarray(batch.domain_ids)
+        n_groups = 0
+        for leaf in np.unique(leaf_ids):
+            ii = np.flatnonzero(leaf_ids == leaf)
+            groups = mckp.collapse_receivers(
+                [batch.names[i] for i in ii],
+                [batch.surfaces[i] for i in ii],
+                batch.baselines[ii],
+                table_for,
+            )
+            by_leaf[int(leaf)] = groups
+            n_groups += len(groups)
+        self._prune_group_caches(touched, n_groups)
+        if len(self._frontiers) > 512:
+            self._frontiers.clear()
+        return by_leaf
+
+    def allocate_hierarchical(
+        self,
+        batch: ReceiverBatch,
+        budget: float,
+        domain_extra: np.ndarray,
+    ) -> Allocation:
+        """One topology-aware round: per-domain capped frontiers + the
+        upper-level budget-split DP.  ``domain_extra`` is the per-domain
+        extra-power headroom (preorder ids, caps net of committed draw)."""
+        if self.topology is None:
+            raise ValueError("ecoshift_hier needs a bound PowerTopology")
+        if batch.domain_ids is None:
+            raise ValueError("receiver batch carries no domain ids")
+        batch = self._served_batch(batch)
+        by_leaf = self._grouped_options_by_leaf(batch)
+        root = policies_mod.domain_tree(self.topology, domain_extra, by_leaf)
+        sol = mckp.solve_hierarchical(
+            root,
+            budget,
+            solver=self.solver,
+            unit=self.unit,
+            curve_cache=self._agg_curves,
+            frontier_cache=self._frontiers,
+        )
+        self.last_domain_spent = sol.domain_spent
+        return policies_mod.allocation_from_solution(
+            sol, batch.baselines_map(), budget, self.system.grid
+        )
+
+    def ingest_telemetry(self, records) -> None:
+        if self.predictor is not None:
+            self.predictor.observe(records)
+            self.predictor.refresh()
 
 
 @policies_mod.register_controller("ecoshift_online", pure=False)

@@ -17,6 +17,13 @@ Budget / price traces accept three forms:
 
 A budget of ``None`` means "derive the pool from donor headroom this
 round", matching the single-round emulator's default.
+
+A scenario may **attach a power topology** (``with_topology``): the
+rack/PDU domain tree the engine enforces (DESIGN.md §12).  Attachment
+makes node-id events *fail fast* — ``with_failure`` / ``with_straggler`` /
+``with_phase_change`` referencing node ids no leaf domain owns raise at
+build time instead of mid-sim — and enables ``DomainCapChange`` events
+(e.g. a rack PDU derating mid-scenario).
 """
 
 from __future__ import annotations
@@ -78,9 +85,65 @@ class NodeArrival:
     app: AppSpec
     caps: tuple[float, float] | None = None
     surface: PowerSurface | None = None
+    #: leaf power-domain placement (required by topology-constrained sims
+    #: when the assigned node id falls outside every leaf's range)
+    domain: str | None = None
 
 
-Event = Union[NodeFailure, StragglerOnset, PhaseChange, NodeArrival]
+@dataclasses.dataclass(frozen=True)
+class DomainCapChange:
+    """A power domain's cap moves to ``cap`` watts from ``round`` on — a
+    rack PDU derating, a site-level demand-response curtailment.  Applies
+    to any domain (leaf or internal) of the simulation's topology."""
+
+    round: int
+    domain: str
+    cap: float
+
+
+Event = Union[
+    NodeFailure, StragglerOnset, PhaseChange, NodeArrival, DomainCapChange
+]
+
+
+def _validate_against_topology(events: Sequence[Event], topology) -> None:
+    """Build-time fail-fast: every node-id event must reference ids some
+    leaf domain owns, and domain events must name existing domains.
+
+    One vectorized ``leaf_of`` per node-id event — no per-id probing, so
+    bulk ``with_events`` attachment validates in a single numpy pass per
+    event."""
+    for e in events:
+        if isinstance(e, (NodeFailure, StragglerOnset, PhaseChange)):
+            ids = (
+                list(e.node_ids)
+                if isinstance(e, NodeFailure)
+                else [e.node_id]
+            )
+            try:
+                topology.leaf_of(ids)
+            except ValueError as err:
+                raise ValueError(
+                    f"{type(e).__name__} at round {e.round}: {err}"
+                ) from None
+        elif isinstance(e, NodeArrival):
+            if e.domain is not None:
+                try:
+                    topology.require_leaf(e.domain)
+                except ValueError as err:
+                    raise ValueError(
+                        f"arrival at round {e.round}: {err}"
+                    ) from None
+        elif isinstance(e, DomainCapChange):
+            if e.domain not in topology.index:
+                raise ValueError(
+                    f"cap change at round {e.round} references unknown "
+                    f"domain {e.domain!r}"
+                )
+            if e.cap <= 0:
+                raise ValueError(
+                    f"cap change at round {e.round}: cap must be positive"
+                )
 
 Trace = Union[None, float, Sequence, Callable[[int], object]]
 
@@ -110,6 +173,12 @@ class Scenario:
     #: optional $/W power price per round, recorded alongside results
     power_price: Trace = None
     events: tuple[Event, ...] = ()
+    #: optional power-domain tree (repro.core.topology.PowerTopology); the
+    #: engine adopts and enforces it, and the builder methods validate
+    #: node-id events against its leaf ranges at build time (with_topology
+    #: sweeps existing events once; with_event/with_events validate only
+    #: what they add, so chained builders stay O(total events))
+    topology: object | None = None
 
     def budget_at(self, r: int) -> float | None:
         b = _trace_at(self.budget, r)
@@ -142,7 +211,16 @@ class Scenario:
             raise ValueError(
                 f"event round {event.round} outside [0, {self.n_rounds})"
             )
+        if self.topology is not None:
+            _validate_against_topology((event,), self.topology)
         return dataclasses.replace(self, events=self.events + (event,))
+
+    def with_topology(self, topology) -> "Scenario":
+        """Attach the power-domain tree: existing events are validated
+        against its leaf ranges in one sweep, and every future builder
+        call validates what it adds (fail fast at build, not mid-sim)."""
+        _validate_against_topology(self.events, topology)
+        return dataclasses.replace(self, topology=topology)
 
     def with_events(self, events: Sequence[Event]) -> "Scenario":
         """Bulk variant of :meth:`with_event` (one replace, one validation
@@ -152,6 +230,8 @@ class Scenario:
                 raise ValueError(
                     f"event round {e.round} outside [0, {self.n_rounds})"
                 )
+        if self.topology is not None:
+            _validate_against_topology(events, self.topology)
         return dataclasses.replace(self, events=self.events + tuple(events))
 
     def with_failure(self, round: int, *node_ids: int) -> "Scenario":
@@ -177,9 +257,19 @@ class Scenario:
         app: AppSpec,
         caps: tuple[float, float] | None = None,
         surface: PowerSurface | None = None,
+        domain: str | None = None,
     ) -> "Scenario":
         return self.with_event(
-            NodeArrival(round=round, app=app, caps=caps, surface=surface)
+            NodeArrival(
+                round=round, app=app, caps=caps, surface=surface, domain=domain
+            )
+        )
+
+    def with_domain_cap(self, round: int, domain: str, cap: float) -> "Scenario":
+        """A rack/PDU derating (or uprating): ``domain``'s cap becomes
+        ``cap`` watts from ``round`` on."""
+        return self.with_event(
+            DomainCapChange(round=round, domain=domain, cap=cap)
         )
 
     def with_budget(self, budget: Trace) -> "Scenario":

@@ -35,6 +35,14 @@ Controllers exposing ``supports_grouped`` (the DP policies) receive a
 :class:`~repro.core.types.ReceiverBatch` instead of per-instance AppSpec
 lists, enabling group-collapsed allocation: one option table and one DP
 super-stage per behaviour class (DESIGN.md §11).
+
+A :class:`~repro.core.topology.PowerTopology` attaches a **hierarchical
+power-domain tree** (DESIGN.md §12): the table interns each node's owning
+leaf domain, the engine accounts per-domain committed draw (receiver
+baselines + donor natural draw) each round, hierarchy-aware controllers
+(``supports_hierarchical``) allocate through per-domain capped frontiers,
+and a sim-side conservation check asserts no domain ever draws above its
+cap — including mid-scenario ``DomainCapChange`` deratings.
 """
 
 from __future__ import annotations
@@ -131,6 +139,8 @@ class NodeTable:
         self.sid_gid = np.empty(0, dtype=np.int32)
         self.name_gid = np.empty(0, dtype=np.int32)
         self.sclass_gid = np.empty(0, dtype=np.int32)
+        #: owning leaf power-domain id (PowerTopology preorder; -1 = none)
+        self.domain_id = np.empty(0, dtype=np.int32)
         self.names: list[str] = []
         self.version = 0
         self._row_of: dict[int, int] | None = None
@@ -167,6 +177,7 @@ class NodeTable:
         t.sclass_gid = np.array(
             [t.interner.intern(n.app.sclass) for n in nodes], dtype=np.int32
         )
+        t.domain_id = np.full(len(nodes), -1, dtype=np.int32)
         return t
 
     def append(
@@ -178,6 +189,7 @@ class NodeTable:
         surface_id: str,
         sclass: str,
         caps: tuple[float, float],
+        domain_id: int = -1,
     ) -> None:
         self.node_ids = np.append(self.node_ids, np.int64(node_id))
         self.caps = np.concatenate(
@@ -198,6 +210,7 @@ class NodeTable:
         self.sclass_gid = np.append(
             self.sclass_gid, np.int32(self.interner.intern(sclass))
         )
+        self.domain_id = np.append(self.domain_id, np.int32(domain_id))
         self._row_of = None
 
     def next_node_id(self) -> int:
@@ -272,6 +285,9 @@ class RoundRecord:
     #: per-receiver noisy measurements: a TelemetryBatch on the vectorized
     #: path (iterable of TelemetryRecord views), () on the legacy loop path
     telemetry: object = ()
+    #: per-domain draw / cap watts this round (topology sims only)
+    domain_draw: dict | None = None
+    domain_caps: dict | None = None
 
     @property
     def avg_improvement(self) -> float:
@@ -323,6 +339,7 @@ class ClusterSim:
         seed: int = 0,
         *,
         table: NodeTable | None = None,
+        topology=None,
     ):
         self.system = system
         #: true surfaces keyed by *base* app name
@@ -337,9 +354,21 @@ class ClusterSim:
         self._slowed: dict = {}
         #: natural-draw cache per base-app gid (identity-checked)
         self._naturals: dict[int, tuple[PowerSurface, float, float]] = {}
+        #: whole-cluster natural-draw array, keyed by table version (the
+        #: partition and the per-domain accounting both read it each round)
+        self._nat_cache: tuple[int, np.ndarray, np.ndarray] | None = None
         #: telemetry emitted by the latest vectorized-measurement round
         self.last_telemetry: object = ()
         self._views_cache: tuple[int, list[NodeState]] | None = None
+        #: hierarchical power-domain tree (repro.core.topology.PowerTopology)
+        self.topology = None
+        #: persisted DomainCapChange overrides: domain id -> cap watts
+        self._domain_cap_override: dict[int, float] = {}
+        #: per-domain draw/cap observed by the latest topology round
+        self.last_domain_draw: dict[str, float] | None = None
+        self.last_domain_caps: dict[str, float] | None = None
+        if topology is not None:
+            self.attach_topology(topology)
 
     @staticmethod
     def build(
@@ -350,11 +379,85 @@ class ClusterSim:
         n_nodes: int = 100,
         seed: int = 0,
         initial_caps: tuple[float, float] | None = None,
+        topology=None,
     ) -> "ClusterSim":
         nodes = build_nodes(
             system, apps, n_nodes=n_nodes, seed=seed, initial_caps=initial_caps
         )
-        return ClusterSim(system=system, nodes=nodes, surfaces=surfaces, seed=seed)
+        return ClusterSim(
+            system=system,
+            nodes=nodes,
+            surfaces=surfaces,
+            seed=seed,
+            topology=topology,
+        )
+
+    # -- power-domain topology ------------------------------------------------
+
+    def attach_topology(self, topology) -> None:
+        """Adopt a power-domain tree: intern every node's owning leaf.
+
+        Raises if any current node id sits outside every leaf range —
+        the engine-side counterpart of the scenario's build-time check.
+        Interning happens before any state changes, so a failed attach
+        leaves the sim exactly as it was.
+        """
+        t = self.table
+        domain_id = (
+            topology.leaf_of(t.node_ids).astype(np.int32) if len(t) else None
+        )
+        self.topology = topology
+        self._domain_cap_override = {}
+        if domain_id is not None:
+            t.domain_id = domain_id
+            t.bump()
+
+    def _committed_draw(
+        self, recv_rows: np.ndarray | None = None
+    ) -> np.ndarray:
+        """[n] per-node committed watts: a receiver pins its baseline cap
+        allotment, a donor its natural draw, a dead node nothing.
+
+        ``recv_rows`` forces those rows to receiver accounting — when a
+        caller overrides ``run_round(receivers=...)``, a node the slack
+        heuristic would call a donor still gets grown from its baseline,
+        so it must commit its caps, not its natural draw.
+        """
+        t = self.table
+        nat, donor = self._donor_mask()
+        committed = np.where(donor, nat.sum(axis=1), t.caps.sum(axis=1))
+        if recv_rows is not None and len(recv_rows):
+            committed[recv_rows] = t.caps[recv_rows].sum(axis=1)
+        committed[~t.alive] = 0.0
+        return committed
+
+    def domain_headroom(
+        self,
+        round_index: int = 0,
+        recv_rows: np.ndarray | None = None,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-domain ``(extra, committed, caps)`` at ``round_index``.
+
+        ``caps`` resolves each domain's cap trace with persisted
+        ``DomainCapChange`` overrides applied; ``committed`` aggregates the
+        per-node committed draw up the tree (``recv_rows`` as in
+        :meth:`_committed_draw`); ``extra`` is the headroom the
+        hierarchical allocator may spend inside each domain (>= 0).
+        """
+        topo = self.topology
+        caps = topo.cap_at(round_index, self._domain_cap_override)
+        leaf = np.zeros(len(topo), dtype=np.float64)
+        t = self.table
+        if len(t):
+            owned = t.domain_id >= 0
+            leaf += np.bincount(
+                t.domain_id[owned],
+                weights=self._committed_draw(recv_rows)[owned],
+                minlength=len(topo),
+            )
+        committed = topo.aggregate_leaves(leaf)
+        extra = np.clip(caps - committed, 0.0, None)
+        return extra, committed, caps
 
     # -- node state ----------------------------------------------------------
 
@@ -374,9 +477,17 @@ class ClusterSim:
 
     @nodes.setter
     def nodes(self, value: Sequence[NodeState]) -> None:
-        self.table = NodeTable.from_nodes(value)
+        table = NodeTable.from_nodes(value)
+        if self.topology is not None and len(table):
+            # intern before swapping state in: a failed leaf_of leaves the
+            # sim's previous table intact
+            table.domain_id = self.topology.leaf_of(table.node_ids).astype(
+                np.int32
+            )
+        self.table = table
         self._views_cache = None
         self._naturals.clear()
+        self._nat_cache = None
 
     def _surface(self, node: NodeState) -> PowerSurface:
         return self._surface_of(node.base_app, node.slowdown)
@@ -397,10 +508,26 @@ class ClusterSim:
 
     def _natural_draws(self) -> np.ndarray:
         """[n, 2] natural (uncapped) component draws, one surface query per
-        distinct base app (draws are cap- and slowdown-independent)."""
+        distinct base app (draws are cap- and slowdown-independent).
+
+        The assembled array is cached per table version (validated against
+        per-gid surface identity, so online surface swaps still refresh) —
+        partitioning and the per-domain draw accounting share one pass.
+        """
         t = self.table
+        cache = self._nat_cache
+        if cache is not None and cache[0] == t.version:
+            fresh = True
+            for gid in cache[2]:
+                hit = self._naturals.get(int(gid))
+                if hit is None or hit[0] is not self.surfaces[t.strings[gid]]:
+                    fresh = False
+                    break
+            if fresh:
+                return cache[1]
         nat = np.empty((len(t), 2), dtype=np.float64)
-        for gid in np.unique(t.base_gid):
+        gids = np.unique(t.base_gid)
+        for gid in gids:
             name = t.strings[gid]
             surf = self.surfaces[name]
             hit = self._naturals.get(int(gid))
@@ -409,7 +536,19 @@ class ClusterSim:
                 hit = (surf, float(c), float(g))
                 self._naturals[int(gid)] = hit
             nat[t.base_gid == gid] = hit[1:]
+        self._nat_cache = (t.version, nat, gids)
         return nat
+
+    def _donor_mask(self) -> tuple[np.ndarray, np.ndarray]:
+        """(natural draws [n, 2], donor mask [n]): a node donates iff its
+        natural draw sits below its caps on both components (margin 1 W).
+        The one donor predicate shared by partitioning and the per-domain
+        committed-draw accounting."""
+        t = self.table
+        nat = self._natural_draws()
+        slack = t.caps - nat
+        donor = t.alive & (slack[:, 0] > 1.0) & (slack[:, 1] > 1.0)
+        return nat, donor
 
     def partition_rows(self) -> tuple[np.ndarray, np.ndarray, float]:
         """Array-native partition: (donor_rows, receiver_rows, pool).
@@ -422,13 +561,11 @@ class ClusterSim:
         if not len(t):
             z = np.empty(0, dtype=np.int64)
             return z, z, 0.0
-        nat = self._natural_draws()
-        slack = t.caps - nat
-        donor = t.alive & (slack[:, 0] > 1.0) & (slack[:, 1] > 1.0)
+        nat, donor = self._donor_mask()
         recv = t.alive & ~donor
         dead = ~t.alive
         pool = float(
-            t.caps[dead].sum() + slack[donor].sum()
+            t.caps[dead].sum() + (t.caps - nat)[donor].sum()
         )
         return np.flatnonzero(donor), np.flatnonzero(recv), pool
 
@@ -480,6 +617,21 @@ class ClusterSim:
                         f"no surface for arriving app {event.app.name!r}"
                     )
                 nid = t.next_node_id()
+                domain_id = -1
+                if self.topology is not None:
+                    if event.domain is not None:
+                        domain_id = self.topology.require_leaf(event.domain)
+                    else:
+                        # the assigned id must fall inside some leaf range
+                        try:
+                            domain_id = int(self.topology.leaf_of([nid])[0])
+                        except ValueError:
+                            raise ValueError(
+                                f"arrival of {event.app.name!r} at round "
+                                f"{event.round} got node id {nid}, which no "
+                                f"leaf domain owns — pass "
+                                f"NodeArrival(domain=...) to place it"
+                            ) from None
                 caps = event.caps or (self.system.init_cpu, self.system.init_gpu)
                 t.append(
                     node_id=nid,
@@ -488,7 +640,18 @@ class ClusterSim:
                     surface_id=event.app.surface_id,
                     sclass=event.app.sclass,
                     caps=caps,
+                    domain_id=domain_id,
                 )
+            elif isinstance(event, scenario_mod.DomainCapChange):
+                if self.topology is None:
+                    raise ValueError(
+                        "DomainCapChange requires an attached PowerTopology"
+                    )
+                if event.domain not in self.topology.index:
+                    raise KeyError(f"unknown domain {event.domain!r}")
+                self._domain_cap_override[
+                    self.topology.index[event.domain]
+                ] = float(event.cap)
             else:
                 raise TypeError(f"unknown event {event!r}")
         t.bump()
@@ -647,7 +810,59 @@ class ClusterSim:
             surface_ids=surface_ids,
             baselines=t.caps[rows],
             surfaces=surfaces,
+            domain_ids=t.domain_id[rows] if self.topology is not None else None,
         )
+
+    def _check_domain_conservation(
+        self,
+        recv_rows: np.ndarray,
+        names: Sequence[str],
+        base: np.ndarray,
+        alloc: Allocation,
+        round_index: int,
+        headroom: tuple[np.ndarray, np.ndarray, np.ndarray],
+        *,
+        enforce: bool,
+    ) -> None:
+        """Sim-side per-domain draw accounting after an allocation.
+
+        Every domain's draw (committed + allocated extra, aggregated up the
+        tree) is recorded in ``last_domain_draw`` / ``last_domain_caps``;
+        with ``enforce`` a cap violation raises — the conservation
+        guarantee of the hierarchical allocator.  Flat controllers on a
+        topology sim only get the accounting (their violations are the
+        point of the comparison benchmarks).
+        """
+        topo = self.topology
+        t = self.table
+        new = np.array([alloc.caps[nm] for nm in names], dtype=np.float64)
+        extra_node = new.sum(axis=1) - base.sum(axis=1) if len(names) else []
+        leaf = np.zeros(len(topo), dtype=np.float64)
+        if len(names):
+            leaf += np.bincount(
+                t.domain_id[recv_rows],
+                weights=extra_node,
+                minlength=len(topo),
+            )
+        spend = topo.aggregate_leaves(leaf)
+        extra, committed, caps = headroom
+        draw = committed + spend
+        dnames = topo.names
+        self.last_domain_draw = dict(zip(dnames, draw.tolist()))
+        self.last_domain_caps = dict(zip(dnames, caps.tolist()))
+        if enforce:
+            # the allocator is accountable for the *extra* it places: it can
+            # never spend past a domain's headroom.  (A cap already below
+            # the committed baseline draw is unsatisfiable under the
+            # monotone-upgrade model — the allocator just gets 0 headroom.)
+            over = np.flatnonzero(spend > extra + 1e-6)
+            if over.size:
+                i = int(over[0])
+                raise RuntimeError(
+                    f"round {round_index}: domain {dnames[i]!r} draws "
+                    f"{draw[i]:.3f} W over its {caps[i]:.3f} W cap "
+                    f"(allocated {spend[i]:.3f} W > {extra[i]:.3f} W headroom)"
+                )
 
     def run_round(
         self,
@@ -682,7 +897,24 @@ class ClusterSim:
         names = [t.names[r] for r in recv_rows]
         base = t.caps[recv_rows]
 
-        if getattr(controller, "supports_grouped", False):
+        hierarchical = self.topology is not None and getattr(
+            controller, "supports_hierarchical", False
+        )
+        headroom = (
+            self.domain_headroom(round_index, recv_rows)
+            if self.topology is not None
+            else None
+        )
+        if hierarchical:
+            controller.bind_topology(self.topology)
+            batch = self._receiver_batch(
+                recv_rows,
+                policy_surfaces,
+                controller.sees_truth,
+                skip_surfaces=getattr(controller, "serves_own_surfaces", False),
+            )
+            alloc = controller.allocate_hierarchical(batch, b, headroom[0])
+        elif getattr(controller, "supports_grouped", False):
             batch = self._receiver_batch(
                 recv_rows,
                 policy_surfaces,
@@ -701,6 +933,12 @@ class ClusterSim:
             if controller.sees_truth:
                 seen = true_by_inst
             alloc = controller.allocate(recv_apps, baselines, b, seen)
+
+        if self.topology is not None:
+            self._check_domain_conservation(
+                recv_rows, names, base, alloc, round_index, headroom,
+                enforce=hierarchical,
+            )
 
         rng = self.round_rng(controller.policy, round_index)
         if use_loop_measurement:
@@ -752,6 +990,13 @@ class ClusterSim:
             from repro.core import policies as policies_mod
 
             controller = policies_mod.get_controller(controller, self.system)
+        if scenario.topology is not None:
+            if self.topology is None:
+                self.attach_topology(scenario.topology)
+            elif self.topology is not scenario.topology:
+                raise ValueError(
+                    "scenario topology differs from the sim's attached one"
+                )
         records: list[RoundRecord] = []
         for r in range(scenario.n_rounds):
             events = scenario.events_at(r)
@@ -781,6 +1026,8 @@ class ClusterSim:
                     events=events,
                     power_price=scenario.price_at(r),
                     telemetry=self.last_telemetry,
+                    domain_draw=self.last_domain_draw,
+                    domain_caps=self.last_domain_caps,
                 )
             )
             controller.ingest_telemetry(self.last_telemetry)

@@ -37,6 +37,13 @@ one option table collapse into a :class:`GroupedOptions` with multiplicity
                                  (same convolutions, same order).
  * ``solve_dense_grouped``     — the numpy analogue of the gather scan.
 
+**Hierarchical solving** (DESIGN.md §12): facilities cascade caps down a
+site → rack/PDU tree, so :func:`solve_hierarchical` turns each domain's
+group-collapsed aggregates into a *capped value-vs-spend frontier* and an
+upper-level DP convolves sibling frontiers to split every parent budget
+subject to each domain's local cap.  A single root domain with cap >= the
+cluster budget reproduces the flat grouped solve bit-for-bit.
+
 Determinism contract: receivers with *byte-identical* option tables are
 interchangeable, so every optimum is degenerate under permutations of their
 picks.  ``solve_sparse`` canonicalizes — identical-table stages exchange
@@ -65,6 +72,8 @@ class MCKPSolution:
     spent: float  # watts used out of the budget
     #: per-receiver picks: name -> (cost_watts, value, (c, g))
     picks: dict[str, tuple[float, float, tuple[float, float]]]
+    #: hierarchical solves only: domain name -> watts spent inside it
+    domain_spent: dict[str, float] | None = None
 
     def average_improvement(self) -> float:
         n = len(self.picks)
@@ -365,6 +374,116 @@ def aggregate_curve(table: OptionTable, m: int, budget: float) -> _AggCurve:
     return acc
 
 
+def _merge_classes(groups: Sequence[GroupedOptions]) -> list[list]:
+    """Merge interchangeable groups (equal table content) into classes.
+
+    Returns ``[table, members, digest]`` triples sorted by min member name —
+    the deterministic class order every grouped/hierarchical solver shares.
+    """
+    merged: dict[tuple, list] = {}
+    for g in groups:
+        d = table_digest(g.table)
+        slot = merged.get(d)
+        if slot is None:
+            merged[d] = [g.table, list(g.members), d]
+        else:
+            slot[1].extend(g.members)
+    return sorted(merged.values(), key=lambda s: min(s[1]))
+
+
+def _class_curves(
+    classes: Sequence[list],
+    budget: float,
+    curve_cache: MutableMapping | None,
+) -> list[_AggCurve]:
+    """m-fold aggregate curve per class, memoized by (digest, m, budget)."""
+    curves_: list[_AggCurve] = []
+    for table, members, d in classes:
+        key = (d, len(members), _qkey(budget))
+        curve = curve_cache.get(key) if curve_cache is not None else None
+        if curve is None:
+            curve = aggregate_curve(table, len(members), budget)
+            if curve_cache is not None:
+                curve_cache[key] = curve  # type: ignore[index]
+        curves_.append(curve)
+    return curves_
+
+
+def _superstage_dp(
+    stage_curves: Sequence[tuple[np.ndarray, np.ndarray]], budget: float
+) -> tuple[np.ndarray, np.ndarray, list]:
+    """Sparse DP over (keys, vals) super-stages under ``budget``.
+
+    Each stage is one vectorized outer (max,+) product over
+    [states x stage spends].  Stages may be class aggregate curves (grouped
+    solve) or whole domain frontiers (hierarchical solve).  Returns the
+    final ``(dp_keys, dp_vals, stages)`` where each backtracking stage is a
+    (keys, parent spend, stage spend) triple.
+    """
+    dp_keys = np.zeros(1, dtype=np.float64)
+    dp_vals = np.zeros(1, dtype=np.float64)
+    stages: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+    for c_keys, c_vals in stage_curves:
+        raw = (dp_keys[:, None] + c_keys[None, :]).ravel()
+        scores = (dp_vals[:, None] + c_vals[None, :]).ravel()
+        feas = np.flatnonzero(raw <= budget + 1e-9)
+        keys, sel = _dedupe_first_max(_qkey_np(raw[feas]), scores[feas])
+        sel = feas[sel]
+        # keys come back ascending from the stable lexsort dedupe, so the
+        # stage arrays are searchsorted-ready as-is
+        nc = len(c_keys)
+        stages.append((keys, dp_keys[sel // nc], c_keys[sel % nc]))
+        dp_keys = keys
+        dp_vals = scores[sel]
+    return dp_keys, dp_vals, stages
+
+
+def _backtrack_superstages(stages: Sequence[tuple], u: float) -> list[float]:
+    """Walk the super-stage DP backwards from end state ``u``: the per-stage
+    spends realizing it (stage order)."""
+    spends: list[float] = [0.0] * len(stages)
+    for i in range(len(stages) - 1, -1, -1):
+        keys, parents, spends_stage = stages[i]
+        pos = int(np.searchsorted(keys, u))
+        spends[i] = float(spends_stage[pos])
+        u = float(parents[pos])
+    return spends
+
+
+def _unwind_classes(
+    classes: Sequence[list],
+    curves_: Sequence[_AggCurve],
+    spends: Sequence[float],
+    choice_of: dict[str, tuple[OptionTable, int]],
+) -> None:
+    """Unwind each class spend to its option multiset; ascending picks over
+    name-sorted members == solve_sparse's canonical assignment."""
+    for (table, members, _), curve, spend in zip(classes, curves_, spends):
+        js: list[int] = []
+        curve.unwind(spend, js)
+        for name, j in zip(sorted(members), sorted(js)):
+            choice_of[name] = (table, j)
+
+
+def _assemble_choices(
+    choice_of: dict[str, tuple[OptionTable, int]],
+) -> MCKPSolution:
+    """Canonical stage-order accumulation (bit-for-bit the ungrouped form)."""
+    picks: dict[str, tuple[float, float, tuple[float, float]]] = {}
+    total = 0.0
+    spent = 0.0
+    for name in sorted(choice_of):
+        table, j = choice_of[name]
+        picks[name] = (
+            float(table.costs[j]),
+            float(table.values[j]),
+            (float(table.caps[j, 0]), float(table.caps[j, 1])),
+        )
+        total += float(table.values[j])
+        spent += float(table.costs[j])
+    return MCKPSolution(total_value=total, spent=spent, picks=picks)
+
+
 def solve_sparse_grouped(
     groups: Sequence[GroupedOptions],
     budget: float,
@@ -383,77 +502,169 @@ def solve_sparse_grouped(
     ``curve_cache`` (a mutable mapping, e.g. a controller's warm dict)
     memoizes aggregate curves keyed by (digest, m, quantized budget).
     """
-    # merge interchangeable groups (equal table content)
-    merged: dict[tuple, list] = {}
-    for g in groups:
-        d = table_digest(g.table)
-        slot = merged.get(d)
-        if slot is None:
-            merged[d] = [g.table, list(g.members), d]
-        else:
-            slot[1].extend(g.members)
-    classes = sorted(merged.values(), key=lambda s: min(s[1]))
-
-    # aggregate curve + sorted (cost, value) super-options per class
-    curves_: list[_AggCurve] = []
-    for table, members, d in classes:
-        key = (d, len(members), _qkey(budget))
-        curve = curve_cache.get(key) if curve_cache is not None else None
-        if curve is None:
-            curve = aggregate_curve(table, len(members), budget)
-            if curve_cache is not None:
-                curve_cache[key] = curve  # type: ignore[index]
-        curves_.append(curve)
-
-    # top-level sparse DP over the class super-stages (vectorized: each
-    # stage is one outer (max,+) product over [states x class spends])
-    dp_keys = np.zeros(1, dtype=np.float64)
-    dp_vals = np.zeros(1, dtype=np.float64)
-    stages: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
-    for curve in curves_:
-        raw = (dp_keys[:, None] + curve.keys[None, :]).ravel()
-        scores = (dp_vals[:, None] + curve.vals[None, :]).ravel()
-        feas = np.flatnonzero(raw <= budget + 1e-9)
-        keys, sel = _dedupe_first_max(_qkey_np(raw[feas]), scores[feas])
-        sel = feas[sel]
-        # keys come back ascending from the stable lexsort dedupe, so the
-        # stage arrays are searchsorted-ready as-is
-        nc = len(curve.keys)
-        stages.append((keys, dp_keys[sel // nc], curve.keys[sel % nc]))
-        dp_keys = keys
-        dp_vals = scores[sel]
-
+    classes = _merge_classes(groups)
+    curves_ = _class_curves(classes, budget, curve_cache)
+    dp_keys, dp_vals, stages = _superstage_dp(
+        [(c.keys, c.vals) for c in curves_], budget
+    )
     u = float(dp_keys[int(np.argmax(dp_vals))])
-    spends: list[float] = [0.0] * len(classes)
-    for i in range(len(classes) - 1, -1, -1):
-        keys, parents, spends_stage = stages[i]
-        pos = int(np.searchsorted(keys, u))
-        spends[i] = float(spends_stage[pos])
-        u = float(parents[pos])
-
-    # unwind each class to its option multiset; ascending picks over
-    # name-sorted members == solve_sparse's canonical assignment
+    spends = _backtrack_superstages(stages, u)
     choice_of: dict[str, tuple[OptionTable, int]] = {}
-    for (table, members, _), curve, spend in zip(classes, curves_, spends):
-        js: list[int] = []
-        curve.unwind(spend, js)
-        for name, j in zip(sorted(members), sorted(js)):
-            choice_of[name] = (table, j)
+    _unwind_classes(classes, curves_, spends, choice_of)
+    return _assemble_choices(choice_of)
 
-    # canonical stage-order accumulation (bit-for-bit the ungrouped form)
-    picks: dict[str, tuple[float, float, tuple[float, float]]] = {}
-    total = 0.0
-    spent = 0.0
-    for name in sorted(choice_of):
-        table, j = choice_of[name]
-        picks[name] = (
-            float(table.costs[j]),
-            float(table.values[j]),
-            (float(table.caps[j, 0]), float(table.caps[j, 1])),
+
+# ---------------------------------------------------------------------------
+# Hierarchical (two-level) solve over a power-domain tree (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DomainGroups:
+    """One power domain's slice of an allocation round.
+
+    ``cap`` is the domain's *extra-power headroom* in watts — its physical
+    cap net of the draw already committed under it (baselines of member
+    receivers, natural draw of member donors; the engine does that
+    accounting).  A leaf carries the behaviour-class ``groups`` of its
+    member receivers (possibly empty); an internal domain carries
+    ``children``.
+    """
+
+    name: str
+    cap: float
+    groups: tuple[GroupedOptions, ...] = ()
+    children: tuple["DomainGroups", ...] = ()
+
+    def __post_init__(self):
+        if self.groups and self.children:
+            raise ValueError(
+                f"domain {self.name!r}: groups and children are exclusive"
+            )
+
+
+class _SparseFrontier:
+    """A domain's value-vs-spend frontier with backtracking state.
+
+    ``keys``/``vals`` are the capped frontier (ascending quantized spends,
+    best value at each — exactly a super-stage DP's final state).  Leaves
+    keep their classes/curves for unwinding; internal domains keep child
+    frontiers.  ``stages`` backtracks the domain's own DP.
+    """
+
+    __slots__ = ("dom", "keys", "vals", "stages", "classes", "curves", "children")
+
+    def __init__(self, dom, keys, vals, stages, classes=None, curves=None,
+                 children=None):
+        self.dom: DomainGroups = dom
+        self.keys: np.ndarray = keys
+        self.vals: np.ndarray = vals
+        self.stages: list = stages
+        self.classes = classes
+        self.curves = curves
+        self.children: list["_SparseFrontier"] | None = children
+
+
+def _sparse_frontier(
+    dom: DomainGroups,
+    budget: float,
+    curve_cache: MutableMapping | None,
+    frontier_cache: MutableMapping | None,
+) -> _SparseFrontier:
+    """Capped frontier of one domain: its best-value-per-spend staircase,
+    restricted to spends <= min(domain cap, parent budget).
+
+    A leaf's frontier is the class super-stage DP of its groups — the same
+    arrays ``solve_sparse_grouped`` ends on, so a single root domain with
+    cap >= budget reproduces the flat grouped solve bit-for-bit.  An
+    internal domain convolves its children's frontiers under its own cap
+    (the "upper-level DP").  ``frontier_cache`` memoizes leaf DPs by
+    (per-class digest+multiplicity layout, quantized budget) — the
+    hierarchical analogue of the aggregate-curve cache.
+    """
+    eff = min(float(dom.cap), float(budget))
+    if eff < 0.0:
+        eff = 0.0
+    if dom.children:
+        subs = [
+            _sparse_frontier(c, eff, curve_cache, frontier_cache)
+            for c in dom.children
+        ]
+        dp_keys, dp_vals, stages = _superstage_dp(
+            [(f.keys, f.vals) for f in subs], eff
         )
-        total += float(table.values[j])
-        spent += float(table.costs[j])
-    return MCKPSolution(total_value=total, spent=spent, picks=picks)
+        return _SparseFrontier(dom, dp_keys, dp_vals, stages, children=subs)
+    classes = _merge_classes(dom.groups)
+    key = (
+        tuple((d, len(members)) for _, members, d in classes),
+        _qkey(eff),
+    )
+    hit = frontier_cache.get(key) if frontier_cache is not None else None
+    if hit is None:
+        curves_ = _class_curves(classes, eff, curve_cache)
+        dp_keys, dp_vals, stages = _superstage_dp(
+            [(c.keys, c.vals) for c in curves_], eff
+        )
+        hit = (curves_, dp_keys, dp_vals, stages)
+        if frontier_cache is not None:
+            frontier_cache[key] = hit  # type: ignore[index]
+    curves_, dp_keys, dp_vals, stages = hit
+    return _SparseFrontier(
+        dom, dp_keys, dp_vals, stages, classes=classes, curves=curves_
+    )
+
+
+def _backtrack_frontier(
+    f: _SparseFrontier,
+    u: float,
+    choice_of: dict[str, tuple[OptionTable, int]],
+    domain_spent: dict[str, float],
+) -> None:
+    """Walk a chosen spend ``u`` down the frontier tree to receiver picks."""
+    domain_spent[f.dom.name] = u
+    spends = _backtrack_superstages(f.stages, u)
+    if f.children is not None:
+        for child, s in zip(f.children, spends):
+            _backtrack_frontier(child, s, choice_of, domain_spent)
+    else:
+        _unwind_classes(f.classes, f.curves, spends, choice_of)
+
+
+def solve_hierarchical(
+    root: DomainGroups,
+    budget: float,
+    *,
+    solver: str = "sparse",
+    unit: float = 1.0,
+    curve_cache: MutableMapping | None = None,
+    frontier_cache: MutableMapping | None = None,
+) -> MCKPSolution:
+    """Two-level topology-aware MCKP over a power-domain tree.
+
+    Per-domain group-collapsed aggregate tables become capped value-vs-spend
+    frontiers; an upper-level DP convolves sibling frontiers to split each
+    parent's budget subject to every domain's local cap, then backtracks
+    down to the per-receiver picks.  Every domain's spend is <= its cap by
+    construction, and with a single root domain whose cap >= the cluster
+    budget the result is **bit-for-bit** ``solve_sparse_grouped``
+    (``solver='sparse'``) / ``solve_dense_jax_grouped`` (``solver='jax'`` /
+    ``'pallas'``) — certified by tests/test_hier_alloc.py.
+
+    Returns a solution whose ``domain_spent`` maps each domain name to the
+    watts spent inside it.
+    """
+    if solver == "sparse":
+        f = _sparse_frontier(root, float(budget), curve_cache, frontier_cache)
+        u = float(f.keys[int(np.argmax(f.vals))])
+        choice_of: dict[str, tuple[OptionTable, int]] = {}
+        domain_spent: dict[str, float] = {}
+        _backtrack_frontier(f, u, choice_of, domain_spent)
+        sol = _assemble_choices(choice_of)
+        sol.domain_spent = domain_spent
+        return sol
+    if solver in ("jax", "pallas"):
+        return _solve_hier_dense(root, float(budget), unit=unit, backend=solver)
+    raise ValueError(f"unknown hierarchical solver {solver!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -462,21 +673,38 @@ def solve_sparse_grouped(
 
 
 def _stage_maxplus(
-    dp: np.ndarray, costs_u: np.ndarray, values: np.ndarray
+    dp: np.ndarray,
+    costs_u: np.ndarray,
+    values: np.ndarray,
+    chunk: int | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """One (max,+) stage restricted to option costs.
 
     dp' [b] = max_j dp[b - cost_j] + value_j   (invalid b-cost_j masked)
-    Returns (dp', argmax_j).
+    Returns (dp', argmax_j) with first-max tie-breaking.  ``chunk`` bounds
+    the [k, chunk] candidate tile for stages with many costs (the full
+    (max,+) convolution of the hierarchical dense path, where costs_u is
+    the whole budget grid); columns are independent, so chunking is
+    bitwise-neutral.
     """
     nb = dp.shape[0]
-    # cand[j, b] = dp[b - c_j] + v_j
-    idx = np.arange(nb)[None, :] - costs_u[:, None]  # [k, nb]
-    valid = idx >= 0
-    cand = np.where(valid, dp[np.clip(idx, 0, nb - 1)], -np.inf) + values[:, None]
-    arg = np.argmax(cand, axis=0)  # [nb]
-    out = cand[arg, np.arange(nb)]
-    return out, arg.astype(np.int32)
+    if chunk is None:
+        chunk = nb
+    out = np.empty(nb, dtype=np.float64)
+    arg = np.empty(nb, dtype=np.int32)
+    for b0 in range(0, nb, chunk):
+        b = np.arange(b0, min(b0 + chunk, nb))
+        # cand[j, b] = dp[b - c_j] + v_j
+        idx = b[None, :] - costs_u[:, None]  # [k, chunk]
+        valid = idx >= 0
+        cand = (
+            np.where(valid, dp[np.clip(idx, 0, nb - 1)], -np.inf)
+            + values[:, None]
+        )
+        a = np.argmax(cand, axis=0)
+        out[b] = cand[a, np.arange(len(b))]
+        arg[b] = a
+    return out, arg
 
 
 def solve_dense(
@@ -524,18 +752,10 @@ def _grouped_dense_layout(
     per-class tables / dense curves — densified once per class instead of
     once per receiver.
     """
-    merged: dict[tuple, list] = {}
-    for g in groups:
-        d = table_digest(g.table)
-        slot = merged.get(d)
-        if slot is None:
-            merged[d] = [g.table, list(g.members)]
-        else:
-            slot[1].extend(g.members)
-    classes = sorted(merged.values(), key=lambda s: min(s[1]))
+    classes = _merge_classes(groups)
     pairs = sorted(
         (name, cid)
-        for cid, (_, members) in enumerate(classes)
+        for cid, (_, members, _) in enumerate(classes)
         for name in members
     )
     names = [p[0] for p in pairs]
@@ -690,6 +910,32 @@ def _jax_dp_gather(f_groups, stage_gids, backend: str = "jax"):
     return run(f_groups, jnp.asarray(stage_gids))
 
 
+def _gather_backtrack(
+    layout,
+    args: np.ndarray,
+    b: int,
+    picks: dict[str, tuple[float, float, tuple[float, float]]],
+) -> float:
+    """Walk a gather scan's argmaxes from ``b`` granted units down to
+    per-receiver picks (reverse stage order, the dense solvers' shared
+    backtrack); returns the watts actually spent."""
+    names, stage_gids, tables, _, ch_groups = layout
+    spent = 0.0
+    for i in range(len(names) - 1, -1, -1):
+        gid = stage_gids[i]
+        table = tables[gid]
+        k = int(args[i, b])  # units granted to receiver i
+        j = int(ch_groups[gid][k])  # option index realizing F(k)
+        picks[names[i]] = (
+            float(table.costs[j]),
+            float(table.values[j]),
+            (float(table.caps[j, 0]), float(table.caps[j, 1])),
+        )
+        spent += float(table.costs[j])
+        b -= k
+    return spent
+
+
 def solve_dense_jax_grouped(
     groups: Sequence[GroupedOptions],
     budget: float,
@@ -701,9 +947,8 @@ def solve_dense_jax_grouped(
     Bitwise identical to ``solve_dense_jax`` on the name-sorted ungrouped
     expansion; curves are densified once per behaviour class and the scan
     gathers its stage row by class id (jax or Pallas (max,+) kernel)."""
-    names, stage_gids, tables, f_groups, ch_groups = _grouped_dense_layout(
-        groups, budget, unit
-    )
+    layout = _grouped_dense_layout(groups, budget, unit)
+    _, stage_gids, _, f_groups, _ = layout
     dp_final, args = _jax_dp_gather(f_groups, stage_gids, backend=backend)
     dp_final = np.asarray(dp_final)
     args = np.asarray(args)
@@ -711,19 +956,114 @@ def solve_dense_jax_grouped(
     b = int(np.argmax(dp_final))
     total = float(dp_final[b])
     picks: dict[str, tuple[float, float, tuple[float, float]]] = {}
-    for i in range(len(names) - 1, -1, -1):
-        gid = stage_gids[i]
-        table = tables[gid]
-        k = int(args[i, b])  # units granted to receiver i
-        j = int(ch_groups[gid][k])  # option index realizing F(k)
-        picks[names[i]] = (
-            float(table.costs[j]),
-            float(table.values[j]),
-            (float(table.caps[j, 0]), float(table.caps[j, 1])),
-        )
-        b -= k
-    spent = sum(c for c, _, _ in picks.values())
+    spent = _gather_backtrack(layout, args, b, picks)
     return MCKPSolution(total_value=total, spent=spent, picks=picks)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical dense-grid solve (domain frontiers on the unit budget grid)
+# ---------------------------------------------------------------------------
+
+
+class _DenseFrontier:
+    """Dense analogue of :class:`_SparseFrontier`: ``f[k]`` is the domain's
+    best value at spend ``k`` units (length min(cap, budget)//unit + 1 — the
+    cap restriction is the truncation).  Leaves keep their grouped dense
+    layout for backtracking; internal domains keep per-child conv argmaxes.
+    """
+
+    __slots__ = ("dom", "f", "args", "layout", "children")
+
+    def __init__(self, dom, f, args, layout=None, children=None):
+        self.dom: DomainGroups = dom
+        self.f: np.ndarray = f
+        self.args = args
+        self.layout = layout
+        self.children: list["_DenseFrontier"] | None = children
+
+
+def _conv_full(dp: np.ndarray, f: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Full (max,+) convolution: out[b] = max_k dp[b-k] + f[k].
+
+    ``f`` may be shorter than ``dp`` (a capped child frontier).  One
+    :func:`_stage_maxplus` stage whose "options" are every grid spend,
+    b-chunked so the candidate tile stays bounded."""
+    return _stage_maxplus(dp, np.arange(len(f)), f, chunk=512)
+
+
+def _dense_frontier(
+    dom: DomainGroups, budget: float, unit: float, backend: str
+) -> _DenseFrontier:
+    """Capped dense frontier of one domain on the ``unit``-watt grid.
+
+    A leaf runs the repeated-stage gather scan of its groups (the same
+    convolutions as ``solve_dense_jax_grouped``, so a single root with
+    cap >= budget is bitwise identical to the flat solve); an internal
+    domain convolves its children's truncated frontiers in numpy.
+    """
+    eff = min(float(dom.cap), float(budget))
+    if eff < 0.0:
+        eff = 0.0
+    nb = int(np.floor(eff / unit + 1e-9)) + 1
+    if dom.children:
+        subs = [_dense_frontier(c, eff, unit, backend) for c in dom.children]
+        dp = np.zeros(nb, dtype=np.float64)
+        args: list[np.ndarray] = []
+        for sub in subs:
+            dp, arg = _conv_full(dp, sub.f)
+            args.append(arg)
+        return _DenseFrontier(dom, dp, args, children=subs)
+    if not dom.groups:
+        # no receivers under this leaf: zero spend or nothing
+        f = np.full(nb, -np.inf)
+        f[0] = 0.0
+        return _DenseFrontier(dom, f, None, layout=None)
+    layout = _grouped_dense_layout(dom.groups, eff, unit)
+    _, stage_gids, _, f_groups, _ = layout
+    dp_final, args = _jax_dp_gather(f_groups, stage_gids, backend=backend)
+    return _DenseFrontier(
+        dom, np.asarray(dp_final), np.asarray(args), layout=layout
+    )
+
+
+def _backtrack_dense(
+    fr: _DenseFrontier,
+    b: int,
+    picks: dict[str, tuple[float, float, tuple[float, float]]],
+    domain_spent: dict[str, float],
+) -> float:
+    """Walk ``b`` granted units down the frontier tree into picks; returns
+    the watts actually spent inside this domain."""
+    spent = 0.0
+    if fr.children is not None:
+        for i in range(len(fr.children) - 1, -1, -1):
+            k = int(fr.args[i][b])
+            spent += _backtrack_dense(fr.children[i], k, picks, domain_spent)
+            b -= k
+    elif fr.layout is not None:
+        spent = _gather_backtrack(fr.layout, fr.args, b, picks)
+    domain_spent[fr.dom.name] = spent
+    return spent
+
+
+def _solve_hier_dense(
+    root: DomainGroups,
+    budget: float,
+    *,
+    unit: float = 1.0,
+    backend: str = "jax",
+) -> MCKPSolution:
+    """Dense-grid hierarchical solve (see :func:`solve_hierarchical`)."""
+    fr = _dense_frontier(root, budget, unit, backend)
+    b = int(np.argmax(fr.f))
+    total = float(fr.f[b])
+    picks: dict[str, tuple[float, float, tuple[float, float]]] = {}
+    domain_spent: dict[str, float] = {}
+    _backtrack_dense(fr, b, picks, domain_spent)
+    spent = sum(c for c, _, _ in picks.values())
+    return MCKPSolution(
+        total_value=total, spent=spent, picks=picks, domain_spent=domain_spent
+    )
 
 
 def _jax_dp_batch(f_mats, backend: str = "jax"):

@@ -1,0 +1,240 @@
+"""Hierarchical power domains: the facility's cap topology (DESIGN.md §12).
+
+Real power-constrained facilities cascade limits down a tree — site → row →
+rack/PDU → node — and a flat allocator can reclaim power into a rack that
+physically cannot draw it.  A :class:`PowerTopology` makes that tree
+first-class:
+
+ * every :class:`PowerDomain` carries a **cap trace** (scalar, per-round
+   sequence, or callable — the same trace forms as scenario budgets) giving
+   its max total draw in watts per round;
+ * **leaves own node-id ranges** (half-open ``[lo, hi)`` intervals); internal
+   domains own the union of their children;
+ * node → domain interning is one vectorized ``searchsorted`` over the
+   sorted leaf range bounds, so a 10k-node cluster maps its whole id column
+   in one pass.
+
+Domains are indexed in deterministic DFS preorder (the root is id 0); the
+``parent`` array lets per-leaf sums aggregate to every ancestor in one
+reverse sweep.  The allocation math lives in ``repro.core.mckp``
+(``solve_hierarchical``); the per-round draw accounting in
+``repro.cluster.sim``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator, Sequence, Union
+
+import numpy as np
+
+#: cap trace: scalar (constant), sequence (holds last value), or callable
+CapTrace = Union[float, Sequence, Callable[[int], float]]
+
+
+def cap_trace_at(trace: CapTrace, r: int) -> float:
+    """Resolve a cap trace at round ``r`` (same forms as scenario budgets)."""
+    if isinstance(trace, (int, float)):
+        return float(trace)
+    if callable(trace):
+        return float(trace(r))
+    if len(trace) == 0:
+        raise ValueError("empty cap trace")
+    return float(trace[min(r, len(trace) - 1)])
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerDomain:
+    """One named domain in the facility tree.
+
+    Exactly one of ``children`` / ``nodes`` is non-empty: an *internal*
+    domain caps the union of its children, a *leaf* domain owns node-id
+    ranges directly.  ``cap`` is the domain's max total draw (watts) — a
+    trace resolved per round via :func:`cap_trace_at`.
+    """
+
+    name: str
+    cap: CapTrace
+    children: tuple["PowerDomain", ...] = ()
+    #: half-open [lo, hi) node-id ranges (leaves only)
+    nodes: tuple[tuple[int, int], ...] = ()
+
+    def __post_init__(self):
+        if bool(self.children) == bool(self.nodes):
+            raise ValueError(
+                f"domain {self.name!r} must have children xor node ranges"
+            )
+        for lo, hi in self.nodes:
+            if not 0 <= lo < hi:
+                raise ValueError(
+                    f"domain {self.name!r}: bad node range [{lo}, {hi})"
+                )
+        if isinstance(self.cap, (int, float)) and self.cap <= 0:
+            raise ValueError(f"domain {self.name!r}: cap must be positive")
+
+    @property
+    def is_leaf(self) -> bool:
+        return not self.children
+
+    def cap_at(self, r: int) -> float:
+        return cap_trace_at(self.cap, r)
+
+
+class PowerTopology:
+    """Validated domain tree with vectorized node → leaf interning.
+
+    ``domains`` lists every domain in DFS preorder; ``index`` maps name →
+    preorder id, ``parent[i]`` is the id of ``domains[i]``'s parent (-1 for
+    the root), and ``leaf_ids`` the ids of the leaves.  Construction
+    validates name uniqueness and leaf-range disjointness.
+    """
+
+    def __init__(self, root: PowerDomain):
+        self.root = root
+        self.domains: list[PowerDomain] = []
+        self.parent: np.ndarray
+        self.index: dict[str, int] = {}
+        parents: list[int] = []
+
+        def visit(d: PowerDomain, parent_id: int) -> None:
+            if d.name in self.index:
+                raise ValueError(f"duplicate domain name {d.name!r}")
+            my_id = len(self.domains)
+            self.index[d.name] = my_id
+            self.domains.append(d)
+            parents.append(parent_id)
+            for c in d.children:
+                visit(c, my_id)
+
+        visit(root, -1)
+        self.parent = np.asarray(parents, dtype=np.int32)
+        self.leaf_ids = np.array(
+            [i for i, d in enumerate(self.domains) if d.is_leaf],
+            dtype=np.int32,
+        )
+
+        # flatten leaf ranges, sorted by lo, and check disjointness
+        spans = [
+            (lo, hi, i)
+            for i in self.leaf_ids
+            for lo, hi in self.domains[i].nodes
+        ]
+        spans.sort()
+        for (lo0, hi0, i0), (lo1, hi1, i1) in zip(spans, spans[1:]):
+            if lo1 < hi0:
+                raise ValueError(
+                    f"node ranges overlap: [{lo0}, {hi0}) of "
+                    f"{self.domains[i0].name!r} and [{lo1}, {hi1}) of "
+                    f"{self.domains[i1].name!r}"
+                )
+        self._span_lo = np.array([s[0] for s in spans], dtype=np.int64)
+        self._span_hi = np.array([s[1] for s in spans], dtype=np.int64)
+        self._span_leaf = np.array([s[2] for s in spans], dtype=np.int32)
+
+    def __len__(self) -> int:
+        return len(self.domains)
+
+    def __iter__(self) -> Iterator[PowerDomain]:
+        return iter(self.domains)
+
+    @property
+    def names(self) -> list[str]:
+        return [d.name for d in self.domains]
+
+    def leaf_of(self, node_ids) -> np.ndarray:
+        """Vectorized node id → owning-leaf domain id.
+
+        One ``searchsorted`` over the sorted range bounds; raises on any id
+        no leaf owns.
+        """
+        ids = np.asarray(node_ids, dtype=np.int64)
+        pos = np.searchsorted(self._span_lo, ids, side="right") - 1
+        bad = (pos < 0) | (ids >= self._span_hi[np.clip(pos, 0, None)])
+        if bad.any():
+            orphan = ids[bad][:5].tolist()
+            raise ValueError(f"node ids {orphan} outside every leaf domain")
+        return self._span_leaf[pos]
+
+    def owns(self, node_id: int) -> bool:
+        try:
+            self.leaf_of([node_id])
+            return True
+        except ValueError:
+            return False
+
+    def require_leaf(self, name: str) -> int:
+        """Domain id of leaf ``name``; raises on unknown or non-leaf names.
+        The one arrival-placement validator shared by scenario build-time
+        checks and the engine's event application."""
+        i = self.index.get(name)
+        if i is None or not self.domains[i].is_leaf:
+            raise ValueError(f"unknown or non-leaf domain {name!r}")
+        return i
+
+    def cap_at(self, r: int, overrides: dict | None = None) -> np.ndarray:
+        """Per-domain caps at round ``r`` (preorder), with id-keyed
+        ``overrides`` (e.g. persisted ``DomainCapChange`` events) applied."""
+        caps = np.array(
+            [d.cap_at(r) for d in self.domains], dtype=np.float64
+        )
+        for i, cap in (overrides or {}).items():
+            caps[i] = cap
+        return caps
+
+    def aggregate_leaves(self, leaf_values: np.ndarray) -> np.ndarray:
+        """Sum per-leaf values up the tree → per-domain totals (preorder).
+
+        ``leaf_values`` is indexed by domain id (non-leaf slots ignored);
+        one reverse-preorder sweep accumulates children into parents.
+        """
+        out = np.zeros(len(self.domains), dtype=np.float64)
+        out[self.leaf_ids] = np.asarray(leaf_values, dtype=np.float64)[
+            self.leaf_ids
+        ]
+        for i in range(len(self.domains) - 1, 0, -1):
+            out[self.parent[i]] += out[i]
+        return out
+
+    # -- builders ------------------------------------------------------------
+
+    @staticmethod
+    def single_root(
+        n_nodes: int, cap: CapTrace, name: str = "cluster"
+    ) -> "PowerTopology":
+        """Degenerate topology: one domain owning every node — the parity
+        anchor (hierarchical solve == flat grouped solve, bit-for-bit)."""
+        return PowerTopology(
+            PowerDomain(name=name, cap=cap, nodes=((0, n_nodes),))
+        )
+
+    @staticmethod
+    def uniform_racks(
+        n_nodes: int,
+        n_racks: int,
+        rack_cap: CapTrace,
+        site_cap: CapTrace | None = None,
+        name: str = "site",
+    ) -> "PowerTopology":
+        """Two-level site → rack tree with contiguous equal node ranges.
+
+        ``site_cap`` defaults to unconstrained at the root (1e18 W), i.e.
+        only the rack/PDU caps bind.
+        """
+        if not 1 <= n_racks <= n_nodes:
+            raise ValueError(f"need 1 <= n_racks={n_racks} <= n_nodes={n_nodes}")
+        bounds = np.linspace(0, n_nodes, n_racks + 1).astype(int)
+        racks = tuple(
+            PowerDomain(
+                name=f"rack{k}",
+                cap=rack_cap,
+                nodes=((int(bounds[k]), int(bounds[k + 1])),),
+            )
+            for k in range(n_racks)
+        )
+        return PowerTopology(
+            PowerDomain(
+                name=name,
+                cap=1e18 if site_cap is None else site_cap,
+                children=racks,
+            )
+        )

@@ -183,6 +183,9 @@ class ReceiverBatch:
     surface_ids: Sequence[str]
     baselines: np.ndarray  # [n, 2] float64
     surfaces: Sequence  # PowerSurface per receiver, identity-groupable
+    #: per-receiver owning-leaf power-domain id (preorder index into the
+    #: sim's PowerTopology); None when the cluster has no topology
+    domain_ids: np.ndarray | None = None
 
     def __len__(self) -> int:
         return len(self.names)

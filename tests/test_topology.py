@@ -1,0 +1,233 @@
+"""PowerTopology domain-tree contracts (DESIGN.md §12).
+
+Construction validation (names, ranges, leaf-xor-internal), vectorized
+node → leaf interning, cap-trace resolution with overrides, tree
+aggregation, and the scenario/engine build-time fail-fast checks.
+"""
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterSim, Scenario
+from repro.core import surfaces, types
+from repro.core.topology import PowerDomain, PowerTopology
+
+
+def _two_racks() -> PowerTopology:
+    return PowerTopology(
+        PowerDomain(
+            name="site",
+            cap=1000.0,
+            children=(
+                PowerDomain(name="rack0", cap=400.0, nodes=((0, 4),)),
+                PowerDomain(name="rack1", cap=400.0, nodes=((4, 8),)),
+            ),
+        )
+    )
+
+
+class TestConstruction:
+    def test_preorder_index_and_parents(self):
+        topo = _two_racks()
+        assert topo.names == ["site", "rack0", "rack1"]
+        assert topo.index == {"site": 0, "rack0": 1, "rack1": 2}
+        np.testing.assert_array_equal(topo.parent, [-1, 0, 0])
+        np.testing.assert_array_equal(topo.leaf_ids, [1, 2])
+
+    def test_duplicate_name_raises(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            PowerTopology(
+                PowerDomain(
+                    name="a",
+                    cap=10.0,
+                    children=(
+                        PowerDomain(name="a", cap=5.0, nodes=((0, 1),)),
+                    ),
+                )
+            )
+
+    def test_overlapping_ranges_raise(self):
+        with pytest.raises(ValueError, match="overlap"):
+            PowerTopology(
+                PowerDomain(
+                    name="site",
+                    cap=10.0,
+                    children=(
+                        PowerDomain(name="r0", cap=5.0, nodes=((0, 4),)),
+                        PowerDomain(name="r1", cap=5.0, nodes=((3, 6),)),
+                    ),
+                )
+            )
+
+    def test_leaf_xor_internal(self):
+        with pytest.raises(ValueError, match="children xor node"):
+            PowerDomain(name="bad", cap=10.0)
+        with pytest.raises(ValueError, match="children xor node"):
+            PowerDomain(
+                name="bad",
+                cap=10.0,
+                nodes=((0, 1),),
+                children=(PowerDomain(name="c", cap=1.0, nodes=((1, 2),)),),
+            )
+
+    def test_bad_range_and_cap(self):
+        with pytest.raises(ValueError, match="bad node range"):
+            PowerDomain(name="x", cap=10.0, nodes=((3, 3),))
+        with pytest.raises(ValueError, match="positive"):
+            PowerDomain(name="x", cap=0.0, nodes=((0, 1),))
+
+
+class TestInterning:
+    def test_leaf_of_vectorized(self):
+        topo = _two_racks()
+        np.testing.assert_array_equal(
+            topo.leaf_of([0, 3, 4, 7]), [1, 1, 2, 2]
+        )
+
+    def test_leaf_of_orphan_raises(self):
+        topo = _two_racks()
+        with pytest.raises(ValueError, match="outside every leaf"):
+            topo.leaf_of([0, 8])
+        assert topo.owns(7) and not topo.owns(8)
+
+    def test_disjoint_multi_range_leaf(self):
+        topo = PowerTopology(
+            PowerDomain(name="l", cap=10.0, nodes=((0, 2), (5, 7)))
+        )
+        np.testing.assert_array_equal(topo.leaf_of([1, 5, 6]), [0, 0, 0])
+        assert not topo.owns(3)
+
+
+class TestCapsAndAggregation:
+    def test_cap_traces(self):
+        topo = PowerTopology(
+            PowerDomain(
+                name="site",
+                cap=[100.0, 80.0],
+                children=(
+                    PowerDomain(
+                        name="r0", cap=lambda r: 50.0 - r, nodes=((0, 2),)
+                    ),
+                    PowerDomain(name="r1", cap=60.0, nodes=((2, 4),)),
+                ),
+            )
+        )
+        np.testing.assert_allclose(topo.cap_at(0), [100.0, 50.0, 60.0])
+        # sequences hold their last value; overrides win
+        np.testing.assert_allclose(
+            topo.cap_at(5, {2: 30.0}), [80.0, 45.0, 30.0]
+        )
+
+    def test_aggregate_leaves(self):
+        topo = _two_racks()
+        leaf = np.zeros(3)
+        leaf[1], leaf[2] = 10.0, 20.0
+        np.testing.assert_allclose(
+            topo.aggregate_leaves(leaf), [30.0, 10.0, 20.0]
+        )
+
+    def test_uniform_racks_builder(self):
+        topo = PowerTopology.uniform_racks(10, 3, rack_cap=100.0)
+        assert len(topo.leaf_ids) == 3
+        # every node owned exactly once, ranges contiguous
+        np.testing.assert_array_equal(
+            np.sort(np.unique(topo.leaf_of(np.arange(10)))), [1, 2, 3]
+        )
+        with pytest.raises(ValueError):
+            PowerTopology.uniform_racks(4, 5, rack_cap=100.0)
+
+
+class TestScenarioFailFast:
+    """Satellite: out-of-topology node ids raise at build, not mid-sim."""
+
+    def test_failure_outside_topology_raises(self):
+        topo = _two_racks()
+        scen = Scenario.constant(4).with_topology(topo)
+        with pytest.raises(ValueError, match="outside every leaf"):
+            scen.with_failure(1, 3, 99)
+
+    def test_straggler_and_phase_change_fail_fast(self):
+        topo = _two_racks()
+        scen = Scenario.constant(4).with_topology(topo)
+        with pytest.raises(ValueError, match="outside every leaf"):
+            scen.with_straggler(1, 42, 1.5)
+        with pytest.raises(ValueError, match="outside every leaf"):
+            scen.with_phase_change(1, 42, "whatever")
+
+    def test_with_topology_validates_existing_events(self):
+        scen = Scenario.constant(4).with_failure(1, 99)
+        with pytest.raises(ValueError, match="outside every leaf"):
+            scen.with_topology(_two_racks())
+
+    def test_domain_cap_change_validation(self):
+        topo = _two_racks()
+        scen = Scenario.constant(4).with_topology(topo)
+        scen = scen.with_domain_cap(2, "rack1", 300.0)  # ok
+        with pytest.raises(ValueError, match="unknown"):
+            scen.with_domain_cap(2, "rack9", 300.0)
+        with pytest.raises(ValueError, match="positive"):
+            scen.with_domain_cap(2, "rack0", 0.0)
+
+    def test_arrival_domain_validation(self):
+        topo = _two_racks()
+        scen = Scenario.constant(4).with_topology(topo)
+        app = types.AppSpec(name="a", sclass="B", surface_id="a")
+        with pytest.raises(ValueError, match="unknown or non-leaf"):
+            scen.with_arrival(1, app, domain="site")
+        scen.with_arrival(1, app, domain="rack0")  # leaf: fine
+
+    def test_valid_events_still_build(self):
+        topo = _two_racks()
+        scen = (
+            Scenario.constant(4)
+            .with_topology(topo)
+            .with_failure(1, 0, 7)
+            .with_straggler(2, 4, 1.5)
+        )
+        assert len(scen.events) == 2
+
+
+class TestEngineAttachment:
+    def test_attach_interns_domain_ids(self):
+        system = types.SYSTEM_1
+        apps, surfs = surfaces.build_paper_suite(system)
+        topo = PowerTopology.uniform_racks(12, 3, rack_cap=8000.0)
+        sim = ClusterSim.build(
+            system, apps, surfs, n_nodes=12, seed=0, topology=topo
+        )
+        np.testing.assert_array_equal(
+            sim.table.domain_id, topo.leaf_of(sim.table.node_ids)
+        )
+        # arrivals outside every leaf range need an explicit domain
+        scen = Scenario.constant(2).with_topology(topo).with_arrival(
+            1, apps[0]
+        )
+        with pytest.raises(ValueError, match="pass NodeArrival"):
+            sim.run(scen, "ecoshift_hier")
+
+    def test_arrival_with_domain_lands_in_leaf(self):
+        system = types.SYSTEM_1
+        apps, surfs = surfaces.build_paper_suite(system)
+        topo = PowerTopology.uniform_racks(8, 2, rack_cap=8000.0)
+        sim = ClusterSim.build(
+            system, apps, surfs, n_nodes=8, seed=0, topology=topo
+        )
+        scen = (
+            Scenario.constant(3)
+            .with_topology(topo)
+            .with_arrival(1, apps[0], domain="rack1")
+        )
+        trace = sim.run(scen, "ecoshift_hier")
+        assert trace.records[1].n_alive == 9
+        assert int(sim.table.domain_id[-1]) == topo.index["rack1"]
+
+    def test_mismatched_topologies_raise(self):
+        system = types.SYSTEM_1
+        apps, surfs = surfaces.build_paper_suite(system)
+        topo = PowerTopology.uniform_racks(8, 2, rack_cap=8000.0)
+        sim = ClusterSim.build(
+            system, apps, surfs, n_nodes=8, seed=0, topology=topo
+        )
+        other = PowerTopology.uniform_racks(8, 2, rack_cap=8000.0)
+        with pytest.raises(ValueError, match="differs"):
+            sim.run(Scenario.constant(2).with_topology(other), "ecoshift_hier")

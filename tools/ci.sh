@@ -17,8 +17,13 @@ fi
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
-echo "== cluster.sim smoke scenario (CPU interpret mode, incl. online prediction + 1k scaling tier) =="
+echo "== cluster.sim smoke scenario (CPU interpret mode, incl. online prediction + 1k scaling + 4-rack hier tiers) =="
 python tools/smoke_scenario.py
 
-echo "== cluster scaling bench (fast tiers; emits BENCH_cluster_scaling.json) =="
-python -m benchmarks.cluster_scaling --fast --out BENCH_cluster_scaling.json
+echo "== cluster scaling bench (fast tiers; regression guard vs committed JSON) =="
+python -m benchmarks.cluster_scaling --fast \
+  --check BENCH_cluster_scaling.json --out BENCH_cluster_scaling.json
+
+echo "== hierarchical allocation bench (fast tiers; regression guard vs committed JSON) =="
+python -m benchmarks.hier_alloc --fast \
+  --check BENCH_hier_alloc.json --out BENCH_hier_alloc.json

@@ -6,8 +6,10 @@ the jax-solver round).  Also reports the vectorized-vs-loop measurement
 speedup at 100 nodes, runs the **1k-node scaling tier** (group-collapsed
 columnar engine: a 6-round scenario with failure/straggler/arrival under
 its own wall-clock guard, plus a grouped-vs-legacy allocation parity spot
-check), and exercises the online-prediction path: a cold-start arrival
-(no pretrained surface) converging under the ``ecoshift_online``
+check), the **4-rack hierarchical tier** (1k nodes under binding rack/PDU
+caps with a mid-run ``DomainCapChange`` derating; every round must respect
+every domain cap), and exercises the online-prediction path: a cold-start
+arrival (no pretrained surface) converging under the ``ecoshift_online``
 controller within a handful of telemetry rounds.  Exits nonzero on any
 regression; hard wall-clock budget < 60 s.
 
@@ -24,6 +26,7 @@ from repro.cluster import (
     ClusterSim,
     OnlinePredictor,
     OnlinePredictorConfig,
+    PowerTopology,
     Scenario,
 )
 from repro.cluster.controller import make_controller
@@ -35,6 +38,9 @@ BUDGET_S = 60.0
 
 #: wall-clock guard for the 1k-node scaling tier alone
 SCALING_BUDGET_S = 15.0
+
+#: wall-clock guard for the 4-rack hierarchical tier alone
+HIER_BUDGET_S = 15.0
 
 
 def scaling_smoke(system, apps, surfs) -> None:
@@ -83,6 +89,53 @@ def scaling_smoke(system, apps, surfs) -> None:
     )
     assert res_g.improvements == res_l.improvements
     print("scaling   grouped == legacy per-instance at 200 nodes (bit-for-bit)")
+
+
+def hier_smoke(system, apps, surfs) -> None:
+    """4-rack 1k-node tier through the hierarchical allocator, with a
+    mid-run rack-PDU derating (DomainCapChange) that must visibly bind."""
+    n, n_racks = 1000, 4
+    t0 = time.perf_counter()
+    # probe committed draw, then set binding rack caps (+150 W headroom)
+    probe = ClusterSim.build(
+        system, apps, surfs, n_nodes=n, seed=0, initial_caps=(150.0, 150.0),
+        topology=PowerTopology.uniform_racks(n, n_racks, rack_cap=1e15),
+    )
+    _, committed, _ = probe.domain_headroom(0)
+    rack_cap = float(committed[1:].max()) + 150.0
+    derated = float(committed[1:].max()) + 50.0
+    topo = PowerTopology.uniform_racks(n, n_racks, rack_cap=rack_cap)
+    scen = (
+        Scenario.constant(6, budget=2000.0)
+        .with_topology(topo)
+        .with_failure(1, *range(10))
+        .with_straggler(2, 500, 1.7)
+        .with_domain_cap(3, "rack2", derated)
+    )
+    sim = ClusterSim.build(
+        system, apps, surfs, n_nodes=n, seed=0,
+        initial_caps=(150.0, 150.0), topology=topo,
+    )
+    trace = sim.run(scen, make_controller("ecoshift_hier", system))
+    elapsed = time.perf_counter() - t0
+    imp = trace.improvement_trace
+    assert trace.n_rounds == 6
+    assert np.isfinite(imp).all() and (imp > 0).all(), imp
+    for rec in trace.records:
+        for name, draw in rec.domain_draw.items():
+            assert draw <= rec.domain_caps[name] + 1e-6, (
+                f"round {rec.round}: {name} over cap"
+            )
+    assert trace.records[3].domain_caps["rack2"] == derated, "derate missing"
+    assert elapsed < HIER_BUDGET_S, (
+        f"hier tier took {elapsed:.1f} s (guard {HIER_BUDGET_S} s)"
+    )
+    print(
+        f"hier      {n} nodes x {n_racks} racks x {trace.n_rounds} rounds "
+        f"in {elapsed:.1f} s, caps respected every round "
+        f"(rack2 derated to {derated:.0f} W at round 3), "
+        f"avg_improvement={imp.mean() * 100:.1f}%"
+    )
 
 
 def online_prediction_smoke(system, apps, surfs) -> None:
@@ -187,6 +240,8 @@ def main() -> None:
     assert speedup >= 2.0, f"vectorized speedup regressed to {speedup:.1f}x"
 
     scaling_smoke(system, apps, surfs)
+
+    hier_smoke(system, apps, surfs)
 
     online_prediction_smoke(system, apps, surfs)
 
