@@ -1,0 +1,325 @@
+"""Delta-driven incremental allocation benchmark (DESIGN.md §13).
+
+Measures the *steady-state* cost of a redistribution round — the case the
+production control loop lives in: the cluster barely changed since the
+last round, so the round should cost O(churn), not O(cluster).
+
+For n ∈ {1k, 10k} nodes, flat and 16-rack hierarchical, and per-round
+churn ∈ {0%, 1%, 10%}, a scenario of warm rounds runs twice through
+identical sims:
+
+ * **incremental** — the default controller: batch-delta grouping, warm
+   content-keyed curve/pick/plan/frontier caches, the frontier
+   aggregation tree, batched dirty-leaf DPs and whole-solution reuse;
+ * **from_scratch** — ``incremental=False``: the PR-4-shaped control flow
+   that re-collapses and re-solves every round (it still shares this PR's
+   faster (max,+) primitives and engine-side delta caches, so it is a
+   *conservative* baseline — the true PR-4 code is slower; see
+   ``pr4_reference`` in the committed JSON, measured from a PR-4 git
+   worktree on the same machine with ``--pr4-ref``).
+
+Per-round **allocations are asserted bit-for-bit equal** between the two
+controllers before any timing is trusted.
+
+Churn is a representative event mix per round (on ``churn * n`` nodes):
+60% straggler slowdown toggles, 25% phase changes, 10% failures, 5%
+arrivals (arrivals replace failed capacity so the cluster stays in steady
+state).  Stragglers are digest-invariant (free for the warm caches),
+phase changes move nodes between behaviour classes, failures/arrivals
+shift class multiplicities and membership.
+
+Run as a module to emit ``BENCH_incremental_alloc.json``:
+
+    PYTHONPATH=src python -m benchmarks.incremental_alloc [--fast]
+
+``--check BENCH_incremental_alloc.json`` guards against regressions like
+the other cluster benches (fresh medians must stay within a generous
+factor of the committed reference).  ``--pr4-ref SECONDS`` records an
+externally measured PR-4 warm-round time (git worktree at the PR-4
+commit, same machine/scenario) into the JSON for the vs-PR-4 speedups.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_line, get_suite
+from repro.cluster import ClusterSim, scenario as sc
+from repro.cluster.controller import make_controller
+
+#: acceptance bar (ISSUE 5): the steady-state (no-event) warm round at the
+#: top tier must be >= this factor faster than the from-scratch round
+MIN_STEADY_SPEEDUP = 5.0
+
+#: churn event mix: fractions of the per-round churn budget
+MIX = (("straggler", 0.60), ("phase", 0.25), ("failure", 0.10), ("arrival", 0.05))
+
+N_ROUNDS = 10
+WARMUP_ROUNDS = 2
+
+
+def _budget(n: int) -> float:
+    return float(min(2.0 * n, 8000.0))
+
+
+def _sim(system, apps, surfs, n: int, topology=None) -> ClusterSim:
+    return ClusterSim.build(
+        system, apps, surfs, n_nodes=n, seed=0,
+        initial_caps=(150.0, 150.0), topology=topology,
+    )
+
+
+def _topology(system, apps, surfs, n: int, n_racks: int, budget: float):
+    """Binding site -> rack tree (committed draw + 60% of the even budget
+    share per rack), mirroring benchmarks.hier_alloc."""
+    from benchmarks.hier_alloc import _topology as hier_topology
+
+    return hier_topology(system, apps, surfs, n, n_racks, budget)
+
+
+def _churn_events(sim, rng, r: int, k: int, recv_apps, app_by_name, racks):
+    """One round's churn: k nodes hit by the MIX of event types."""
+    alive = sim.table.node_ids[sim.table.alive]
+    victims = rng.choice(alive, size=min(k, len(alive)), replace=False)
+    counts = [max(0, int(round(k * frac))) for _, frac in MIX]
+    ev: list = []
+    i = 0
+    for (kind, _), cnt in zip(MIX, counts):
+        for _ in range(cnt):
+            if i >= len(victims):
+                break
+            v = int(victims[i])
+            i += 1
+            if kind == "straggler":
+                ev.append(sc.StragglerOnset(
+                    round=r, node_id=v,
+                    slowdown=float(rng.choice([1.0, 1.3, 1.7])),
+                ))
+            elif kind == "phase":
+                ev.append(sc.PhaseChange(
+                    round=r, node_id=v,
+                    surface_id=recv_apps[int(rng.integers(len(recv_apps)))],
+                ))
+            elif kind == "failure":
+                ev.append(sc.NodeFailure(round=r, node_ids=(v,)))
+                if racks is not None:
+                    # steady state: an arrival replaces the failed node
+                    app = app_by_name[
+                        recv_apps[int(rng.integers(len(recv_apps)))]
+                    ]
+                    ev.append(sc.NodeArrival(
+                        round=r, app=app,
+                        domain=racks[v % len(racks)], caps=(150.0, 150.0),
+                    ))
+            else:  # arrival
+                app = app_by_name[recv_apps[int(rng.integers(len(recv_apps)))]]
+                ev.append(sc.NodeArrival(
+                    round=r, app=app,
+                    domain=racks[v % len(racks)] if racks is not None else None,
+                    caps=(150.0, 150.0),
+                ))
+    return ev
+
+
+def _measure_case(
+    system, apps, surfs, n: int, churn: float, *, topology, policy: str,
+) -> dict:
+    """Run the incremental and from-scratch controllers through identical
+    churn scenarios; assert bit-for-bit allocation parity every round."""
+    budget = _budget(n)
+    rng = np.random.default_rng(11)
+    pair = []
+    for inc in (True, False):
+        sim = _sim(system, apps, surfs, n, topology=topology)
+        ctrl = make_controller(policy, system, incremental=inc)
+        pair.append((sim, ctrl))
+    sim0 = pair[0][0]
+    _, recv, _ = sim0.partition_rows()
+    recv_apps = sorted(
+        {sim0.table.strings[g] for g in sim0.table.base_gid[recv]}
+    )
+    app_by_name = {a.name: a for a in apps}
+    racks = (
+        [d.name for d in topology.domains if d.is_leaf]
+        if topology is not None
+        else None
+    )
+    times: dict[bool, list[float]] = {True: [], False: []}
+    for r in range(N_ROUNDS):
+        events = []
+        if churn > 0 and r >= 1:
+            events = _churn_events(
+                sim0, rng, r, int(n * churn), recv_apps, app_by_name, racks
+            )
+        results = []
+        for sim, ctrl in pair:
+            if events:
+                touched = sim.apply_events(events)
+                ctrl.invalidate(touched)
+            t0 = time.perf_counter()
+            res = sim.run_round(ctrl, budget=budget, round_index=r)
+            times[ctrl.incremental].append(time.perf_counter() - t0)
+            results.append(res)
+        a, b = results
+        assert dict(a.allocation.caps) == dict(b.allocation.caps), (
+            f"{policy} n={n} churn={churn}: incremental diverged from "
+            f"from-scratch at round {r}"
+        )
+        assert a.allocation.spent == b.allocation.spent
+    inc_med = float(np.median(times[True][WARMUP_ROUNDS:]))
+    base_med = float(np.median(times[False][WARMUP_ROUNDS:]))
+    return {
+        "churn": churn,
+        "incremental_round_s": inc_med,
+        "from_scratch_round_s": base_med,
+        "speedup_vs_from_scratch": base_med / inc_med,
+        "incremental_rounds_s": [round(t, 5) for t in times[True]],
+    }
+
+
+def run(lines: list[str], *, fast: bool = False, results: list | None = None):
+    system, apps, surfs = get_suite("system1-a100")
+    tiers = [1000] if fast else [1000, 10000]
+    churns = [0.0, 0.01, 0.10]
+    for n in tiers:
+        budget = _budget(n)
+        for mode in ("flat", "hier16"):
+            if mode == "flat":
+                topo, policy = None, "ecoshift"
+            else:
+                topo = _topology(system, apps, surfs, n, 16, budget)
+                policy = "ecoshift_hier"
+            entry = {"n_nodes": n, "mode": mode, "budget_w": budget,
+                     "churn_levels": []}
+            for churn in churns:
+                case = _measure_case(
+                    system, apps, surfs, n, churn,
+                    topology=topo, policy=policy,
+                )
+                entry["churn_levels"].append(case)
+                lines.append(csv_line(
+                    f"incremental_alloc.n{n}.{mode}.churn{int(churn * 100)}",
+                    case["incremental_round_s"] * 1e6,
+                    f"incr_s={case['incremental_round_s']:.4f};"
+                    f"scratch_s={case['from_scratch_round_s']:.4f};"
+                    f"speedup={case['speedup_vs_from_scratch']:.1f}x",
+                ))
+            steady = entry["churn_levels"][0]
+            if n >= (1000 if fast else 10000):
+                assert steady["speedup_vs_from_scratch"] >= (
+                    2.0 if fast else MIN_STEADY_SPEEDUP
+                ), (
+                    f"{mode} n={n}: steady-state incremental round only "
+                    f"{steady['speedup_vs_from_scratch']:.1f}x faster than "
+                    f"from-scratch"
+                )
+            if results is not None:
+                results.append(entry)
+
+
+#: regression-guard tolerance vs a committed reference (benchmarks.*
+#: convention: generous for shared-runner noise)
+CHECK_FACTOR = 5.0
+CHECK_SLACK_S = 0.25
+
+
+def check_against(reference: dict, results: list) -> list[str]:
+    """Fresh incremental medians vs the committed reference run."""
+    ref_by_key = {
+        (t["n_nodes"], t["mode"], c["churn"]): c
+        for t in reference.get("tiers", [])
+        for c in t["churn_levels"]
+    }
+    problems = []
+    for tier in results:
+        for c in tier["churn_levels"]:
+            ref = ref_by_key.get((tier["n_nodes"], tier["mode"], c["churn"]))
+            if ref is None:
+                continue
+            fresh = c["incremental_round_s"]
+            allowed = CHECK_FACTOR * ref["incremental_round_s"] + CHECK_SLACK_S
+            if fresh > allowed:
+                problems.append(
+                    f"n={tier['n_nodes']} {tier['mode']} churn={c['churn']}: "
+                    f"incremental round {fresh:.3f}s exceeds {allowed:.3f}s "
+                    f"({CHECK_FACTOR}x ref {ref['incremental_round_s']:.3f}s "
+                    f"+ {CHECK_SLACK_S}s)"
+                )
+    return problems
+
+
+def main() -> None:
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="skip the 10k tier")
+    ap.add_argument(
+        "--out", default="BENCH_incremental_alloc.json", help="JSON output"
+    )
+    ap.add_argument(
+        "--check",
+        default=None,
+        metavar="REF_JSON",
+        help="compare fresh incremental medians against a committed "
+        "reference (loaded before --out overwrites it); exit 1 on regression",
+    )
+    ap.add_argument(
+        "--pr4-ref",
+        default=None,
+        type=float,
+        metavar="SECONDS",
+        help="externally measured PR-4 warm-round time at the top hier tier "
+        "(git worktree at the PR-4 commit, same machine) — recorded into "
+        "the JSON so vs-PR-4 speedups are explicit",
+    )
+    args = ap.parse_args()
+
+    reference = None
+    if args.check:
+        with open(args.check) as f:
+            reference = json.load(f)
+
+    lines: list[str] = ["name,us_per_call,derived"]
+    results: list = []
+    t0 = time.time()
+    run(lines, fast=args.fast, results=results)
+    payload = {
+        "benchmark": "incremental_alloc",
+        "fast": args.fast,
+        "elapsed_s": time.time() - t0,
+        "churn_mix": dict(MIX),
+        "tiers": results,
+    }
+    pr4 = args.pr4_ref
+    if pr4 is None and reference is not None:
+        pr4 = reference.get("pr4_reference", {}).get("warm_round_s")
+    if pr4 is not None:
+        payload["pr4_reference"] = {
+            "warm_round_s": pr4,
+            "note": "PR-4 code (git worktree at the PR-4 commit), same "
+            "machine, 10k nodes / 16 racks, event-free warm round",
+        }
+        for t in results:
+            if t["n_nodes"] >= 10000 and t["mode"] == "hier16":
+                for c in t["churn_levels"]:
+                    c["speedup_vs_pr4"] = pr4 / c["incremental_round_s"]
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print("\n".join(lines))
+    print(f"# wrote {args.out} in {payload['elapsed_s']:.1f}s")
+
+    if reference is not None:
+        problems = check_against(reference, results)
+        for p in problems:
+            print(f"# REGRESSION: {p}", file=sys.stderr)
+        if problems:
+            sys.exit(1)
+        print(f"# regression guard OK vs {args.check}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ def main() -> None:
         cluster_scaling,
         dp_scaling,
         hier_alloc,
+        incremental_alloc,
         fig1_heatmaps,
         fig2_marginal_gain,
         fig5_budget_sweep,
@@ -49,6 +50,7 @@ def main() -> None:
         ("dp_scaling", dp_scaling.run, True),
         ("cluster_scaling", cluster_scaling.run, True),
         ("hier_alloc", hier_alloc.run, True),
+        ("incremental_alloc", incremental_alloc.run, True),
         ("roofline", roofline_report.run, False),
         ("pod_power", pod_power_allocation.run, True),
         ("straggler", straggler_response.run, True),

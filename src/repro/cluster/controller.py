@@ -33,6 +33,7 @@ counterpart in ``POLICIES`` — the online phase is inherently stateful.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Mapping, Sequence
 
@@ -113,6 +114,161 @@ class MixedAdaptiveController(_StatelessController):
     policy = "mixed_adaptive"
 
 
+def _served_replace(batch: ReceiverBatch, served) -> ReceiverBatch:
+    """Swap in predictor-served surfaces and strip the delta sequence.
+
+    Served surfaces move on telemetry, outside the engine's delta bound,
+    so the batch must not claim delta continuity (seq=0 routes grouping
+    down the from-scratch path).  The one helper both online paths share.
+    """
+    return dataclasses.replace(
+        batch, surfaces=served, seq=0, prev_seq=None, delta=None, removed=()
+    )
+
+
+class _ClassRec:
+    """One live behaviour class inside a :class:`_GroupingState` scope."""
+
+    __slots__ = ("surf", "members", "table", "group")
+
+    def __init__(self, surf, table):
+        self.surf = surf
+        #: name-sorted member list, maintained incrementally
+        self.members: list[str] = []
+        self.table = table
+        #: lazily rebuilt frozen GroupedOptions (None = members moved)
+        self.group = None
+
+
+class _GroupingState:
+    """Persistent behaviour-class grouping, updated by batch deltas.
+
+    Mirrors ``mckp.collapse_receivers`` — receivers sharing (surface
+    identity, baseline) form one class — but *across rounds*: the engine's
+    :class:`~repro.core.types.ReceiverBatch` delta contract names exactly
+    the positions whose surface/baseline moved and the receivers that
+    left, so a steady-state round updates O(churn) classes instead of
+    re-collapsing the whole cluster.  ``scope`` partitions classes (leaf
+    power-domain id on the hierarchical path, 0 on the flat path).
+    Unchanged scopes keep their frozen ``GroupedOptions`` tuples — object
+    identity downstream caches (plans, leaf solutions) key on.
+    """
+
+    __slots__ = ("seq", "scopes", "of_name", "_groups_cache")
+
+    def __init__(self):
+        #: batch seq this state mirrors (None = never built)
+        self.seq: int | None = None
+        self.scopes: dict[int, dict[tuple, _ClassRec]] = {}
+        self.of_name: dict[str, tuple[int, tuple]] = {}
+        self._groups_cache: dict[int, tuple] = {}
+
+    def reset(self) -> None:
+        self.seq = None
+        self.scopes.clear()
+        self.of_name.clear()
+        self._groups_cache.clear()
+
+    def sync(self, batch, leaf_ids, table_for) -> None:
+        """Bring the grouping in line with ``batch`` (delta or rebuild)."""
+        if batch.seq == self.seq and self.seq is not None:
+            return
+        if (
+            batch.prev_seq is not None
+            and batch.prev_seq == self.seq
+            and batch.delta is not None
+        ):
+            for name in batch.removed:
+                self._remove(name)
+            for pos in batch.delta:
+                self._place(batch, pos, leaf_ids, table_for)
+            self.seq = batch.seq
+            return
+        self._rebuild(batch, leaf_ids, table_for)
+        self.seq = batch.seq
+
+    def _rebuild(self, batch, leaf_ids, table_for) -> None:
+        self.scopes.clear()
+        self.of_name.clear()
+        self._groups_cache.clear()
+        scopes = (
+            leaf_ids.tolist() if leaf_ids is not None else [0] * len(batch)
+        )
+        bl = batch.baselines.tolist()
+        for name, surf, base, scope in zip(
+            batch.names, batch.surfaces, bl, scopes
+        ):
+            base = (base[0], base[1])
+            ckey = (id(surf), base)
+            recs = self.scopes.setdefault(scope, {})
+            rec = recs.get(ckey)
+            if rec is None or rec.surf is not surf:
+                rec = _ClassRec(surf, table_for(surf, base))
+                recs[ckey] = rec
+            rec.members.append(name)
+            self.of_name[name] = (scope, ckey)
+        for recs in self.scopes.values():
+            for rec in recs.values():
+                rec.members.sort()
+
+    def _place(self, batch, pos, leaf_ids, table_for) -> None:
+        name = batch.names[pos]
+        surf = batch.surfaces[pos]
+        b = batch.baselines[pos]
+        base = (float(b[0]), float(b[1]))
+        scope = int(leaf_ids[pos]) if leaf_ids is not None else 0
+        ckey = (id(surf), base)
+        old = self.of_name.get(name)
+        if old is not None:
+            oscope, ockey = old
+            if oscope == scope and ockey == ckey:
+                rec = self.scopes[scope][ckey]
+                if rec.surf is surf:
+                    return  # nothing actually moved
+            self._remove(name)
+        recs = self.scopes.setdefault(scope, {})
+        rec = recs.get(ckey)
+        if rec is None or rec.surf is not surf:
+            rec = _ClassRec(surf, table_for(surf, base))
+            recs[ckey] = rec
+        bisect.insort(rec.members, name)
+        rec.group = None
+        self.of_name[name] = (scope, ckey)
+        self._groups_cache.pop(scope, None)
+
+    def _remove(self, name: str) -> None:
+        loc = self.of_name.pop(name, None)
+        if loc is None:
+            return
+        scope, ckey = loc
+        rec = self.scopes[scope][ckey]
+        i = bisect.bisect_left(rec.members, name)
+        if i < len(rec.members) and rec.members[i] == name:
+            del rec.members[i]
+        rec.group = None
+        if not rec.members:
+            del self.scopes[scope][ckey]
+        self._groups_cache.pop(scope, None)
+
+    def groups(self, scope: int) -> tuple:
+        """Frozen GroupedOptions of one scope (tuple reused while clean)."""
+        g = self._groups_cache.get(scope)
+        if g is None:
+            out = []
+            for rec in self.scopes.get(scope, {}).values():
+                if rec.group is None:
+                    rec.group = mckp.GroupedOptions(
+                        table=rec.table, members=tuple(rec.members)
+                    )
+                out.append(rec.group)
+            g = tuple(out)
+            self._groups_cache[scope] = g
+        return g
+
+    def by_scope(self) -> dict[int, tuple]:
+        return {scope: self.groups(scope) for scope in self.scopes}
+
+
 class _OptionCachingController(Controller):
     """Shared warm ``OptionTable`` caches for the DP-based policies.
 
@@ -133,6 +289,14 @@ class _OptionCachingController(Controller):
     needs.
     """
 
+    #: LRU bounds of the warm caches (DESIGN.md §13: warm state must stay
+    #: capped over long scenarios with drifting budgets/digests)
+    MAX_GROUP_TABLES = 512
+    MAX_AGG_CURVES = 8192
+    MAX_PICKS = 16384
+    MAX_PLANS = 256
+    MAX_ALLOCATIONS = 8
+
     def __init__(self, system: SystemSpec):
         super().__init__(system)
         #: name -> (baseline, surface, table); surface compared by identity
@@ -140,15 +304,30 @@ class _OptionCachingController(Controller):
             str, tuple[tuple[float, float], PowerSurface, OptionTable]
         ] = {}
         #: (id(surface), baseline) -> (surface, table)
-        self._group_tables: dict[tuple, tuple[PowerSurface, OptionTable]] = {}
+        self._group_tables: mckp.LRUCache = mckp.LRUCache(self.MAX_GROUP_TABLES)
         #: (table digest, multiplicity, budget) -> aggregate sparse curve
-        self._agg_curves: dict[tuple, object] = {}
+        self._agg_curves: mckp.LRUCache = mckp.LRUCache(self.MAX_AGG_CURVES)
+        #: (digest, budget) -> doubling chain (shielded from (d, m) churn)
+        self._chain_cache: mckp.LRUCache = mckp.LRUCache(512)
+        #: (curve key, spend) -> unwound pick multiset
+        self._pick_cache: mckp.LRUCache = mckp.LRUCache(self.MAX_PICKS)
+        #: group-token tuple -> merged-class plan
+        self._plan_cache: mckp.LRUCache = mckp.LRUCache(self.MAX_PLANS)
+        #: (group tokens, budget[, headroom]) -> warm Allocation
+        self._alloc_cache: mckp.LRUCache = mckp.LRUCache(self.MAX_ALLOCATIONS)
+        #: delta-maintained behaviour-class grouping (DESIGN.md §13)
+        self._grouping = _GroupingState()
 
     def invalidate(self, names: Sequence[str] | None = None) -> None:
         if names is None:
             self._options.clear()
             self._group_tables.clear()
             self._agg_curves.clear()
+            self._chain_cache.clear()
+            self._pick_cache.clear()
+            self._plan_cache.clear()
+            self._alloc_cache.clear()
+            self._grouping.reset()
         else:
             for n in names:
                 self._options.pop(n, None)
@@ -191,16 +370,6 @@ class _OptionCachingController(Controller):
         self._group_tables[key] = (surf, table)
         return table
 
-    def _prune_group_caches(self, touched: dict, n_groups: int) -> None:
-        """Opportunistic prune: identity-keyed entries whose surface was
-        swapped (online refresh, phase change) can never match again."""
-        if len(self._group_tables) > max(64, 4 * n_groups):
-            self._group_tables = {
-                k: v for k, v in self._group_tables.items() if k in touched
-            }
-        if len(self._agg_curves) > 512:
-            self._agg_curves.clear()
-
     def _grouped_options_for(
         self, batch: ReceiverBatch
     ) -> list[mckp.GroupedOptions]:
@@ -208,18 +377,11 @@ class _OptionCachingController(Controller):
 
         Group key is (surface identity, baseline): all members share one
         warm option table, built once per class instead of once per node.
+        (Stale identity-keyed table entries age out of the LRU caches.)
         """
-        touched: dict[tuple, None] = {}
-
-        def table_for(surf, base):
-            touched[(id(surf), base)] = None
-            return self._group_table(surf, base)
-
-        groups = mckp.collapse_receivers(
-            batch.names, batch.surfaces, batch.baselines, table_for
+        return mckp.collapse_receivers(
+            batch.names, batch.surfaces, batch.baselines, self._group_table
         )
-        self._prune_group_caches(touched, len(groups))
-        return groups
 
 
 @policies_mod.register_controller("ecoshift")
@@ -240,6 +402,7 @@ class EcoShiftController(_OptionCachingController):
         unit: float = 1.0,
         allocator=None,
         grouped: bool = True,
+        incremental: bool = True,
     ):
         super().__init__(system)
         self.solver = solver
@@ -249,6 +412,11 @@ class EcoShiftController(_OptionCachingController):
         #: group-collapsed allocation (one DP super-stage per behaviour
         #: class); False forces the legacy per-instance path
         self.grouped = grouped
+        #: delta-driven steady-state rounds (DESIGN.md §13): consume batch
+        #: deltas into persistent grouping state, reuse cached solutions;
+        #: False re-collapses and re-solves from scratch every round (the
+        #: PR-4-style baseline the incremental_alloc bench compares against)
+        self.incremental = incremental
 
     @property
     def supports_grouped(self) -> bool:  # type: ignore[override]
@@ -272,21 +440,55 @@ class EcoShiftController(_OptionCachingController):
             sol, baselines, budget, self.system.grid
         )
 
+    def _incremental_groups(self, batch: ReceiverBatch, leaf_ids=None):
+        """Sync the persistent grouping with a batch (delta or rebuild)."""
+        self._grouping.sync(batch, leaf_ids, self._group_table)
+
     def allocate_grouped(self, batch: ReceiverBatch, budget: float) -> Allocation:
         """Group-collapsed round: receivers sharing (surface identity,
         baseline) solve as one multiplicity-m DP super-stage — parity with
-        :meth:`allocate` is certified by tests/test_grouped_alloc.py."""
-        groups = self._grouped_options_for(batch)
+        :meth:`allocate` is certified by tests/test_grouped_alloc.py.
+
+        On the incremental path (default, sparse solver, engine-sequenced
+        batches) the behaviour-class grouping is delta-maintained across
+        rounds, the solve reuses content-keyed curve/pick/plan caches, and
+        a round whose classes and budget are unchanged returns the cached
+        Allocation outright — bit-for-bit what a from-scratch solve
+        produces (tests/test_incremental_alloc.py)."""
+        incremental = (
+            self.incremental
+            and self.solver == "sparse"
+            and getattr(batch, "seq", 0) != 0
+        )
+        if incremental:
+            self._incremental_groups(batch)
+            groups = self._grouping.groups(0)
+            key = (
+                tuple(sorted(mckp._group_token(g) for g in groups)),
+                mckp._qkey(budget),
+            )
+            hit = self._alloc_cache.get(key)
+            if hit is not None:
+                return hit
+        else:
+            groups = self._grouped_options_for(batch)
+            key = None
         sol = mckp.solve_grouped(
             groups,
             budget,
             solver=self.solver,
             unit=self.unit,
             curve_cache=self._agg_curves,
+            pick_cache=self._pick_cache if incremental else None,
+            plan_cache=self._plan_cache if incremental else None,
+            chain_cache=self._chain_cache if incremental else None,
         )
-        return policies_mod.allocation_from_solution(
+        alloc = policies_mod.allocation_from_solution(
             sol, batch.baselines_map(), budget, self.system.grid
         )
+        if key is not None:
+            self._alloc_cache[key] = alloc
+        return alloc
 
     def allocate_batch(
         self,
@@ -344,6 +546,9 @@ class EcoShiftHierController(EcoShiftController):
     policy = "ecoshift_hier"
     supports_hierarchical = True
 
+    #: LRU bound of the leaf-frontier cache (satellite of DESIGN.md §13)
+    MAX_FRONTIERS = 512
+
     def __init__(
         self,
         system: SystemSpec,
@@ -353,14 +558,29 @@ class EcoShiftHierController(EcoShiftController):
         unit: float = 1.0,
         predictor=None,
         allocator=None,
+        incremental: bool = True,
     ):
-        super().__init__(system, solver=solver, unit=unit, allocator=allocator)
+        super().__init__(
+            system, solver=solver, unit=unit, allocator=allocator,
+            incremental=incremental,
+        )
         #: repro.core.topology.PowerTopology (bound here or by the engine)
         self.topology = topology
         #: optional OnlinePredictor: serve predicted surfaces + ingest telemetry
         self.predictor = predictor
         #: (class layout, quantized budget) -> leaf frontier DP arrays
-        self._frontiers: dict = {}
+        self._frontiers: mckp.LRUCache = mckp.LRUCache(self.MAX_FRONTIERS)
+        #: persistent hierarchical warm state: frontier aggregation tree
+        #: combines, pick multisets, leaf solutions, merged-class plans —
+        #: all content-keyed and LRU-bounded (mckp.HierState)
+        self._hier_state = mckp.HierState(
+            curve_cache=self._agg_curves,
+            frontier_cache=self._frontiers,
+            chain_cache=self._chain_cache,
+            pick_cache=self._pick_cache,
+            plan_cache=self._plan_cache,
+            max_leaf_solutions=128,
+        )
         #: per-domain watts spent by the latest hierarchical solve
         self.last_domain_spent: dict[str, float] | None = None
 
@@ -381,7 +601,7 @@ class EcoShiftHierController(EcoShiftController):
             self.predictor.surface_for(name, sid)
             for name, sid in zip(batch.names, batch.surface_ids)
         ]
-        return dataclasses.replace(batch, surfaces=served)
+        return _served_replace(batch, served)
 
     _NO_TOPOLOGY = (
         "ecoshift_hier allocates per power domain — attach a PowerTopology "
@@ -400,33 +620,22 @@ class EcoShiftHierController(EcoShiftController):
         super().invalidate(names)
         if names is None:
             self._frontiers.clear()
+            self._hier_state.clear()
 
     def _grouped_options_by_leaf(
         self, batch: ReceiverBatch
     ) -> dict[int, list[mckp.GroupedOptions]]:
         """Per-leaf-domain behaviour-class collapse over the warm tables."""
-        touched: dict[tuple, None] = {}
-
-        def table_for(surf, base):
-            touched[(id(surf), base)] = None
-            return self._group_table(surf, base)
-
         by_leaf: dict[int, list[mckp.GroupedOptions]] = {}
         leaf_ids = np.asarray(batch.domain_ids)
-        n_groups = 0
         for leaf in np.unique(leaf_ids):
             ii = np.flatnonzero(leaf_ids == leaf)
-            groups = mckp.collapse_receivers(
+            by_leaf[int(leaf)] = mckp.collapse_receivers(
                 [batch.names[i] for i in ii],
                 [batch.surfaces[i] for i in ii],
                 batch.baselines[ii],
-                table_for,
+                self._group_table,
             )
-            by_leaf[int(leaf)] = groups
-            n_groups += len(groups)
-        self._prune_group_caches(touched, n_groups)
-        if len(self._frontiers) > 512:
-            self._frontiers.clear()
         return by_leaf
 
     def allocate_hierarchical(
@@ -436,14 +645,48 @@ class EcoShiftHierController(EcoShiftController):
         domain_extra: np.ndarray,
     ) -> Allocation:
         """One topology-aware round: per-domain capped frontiers + the
-        upper-level budget-split DP.  ``domain_extra`` is the per-domain
-        extra-power headroom (preorder ids, caps net of committed draw)."""
+        upper-level budget-split DP through the frontier aggregation tree.
+        ``domain_extra`` is the per-domain extra-power headroom (preorder
+        ids, caps net of committed draw).
+
+        Incremental path (default, sparse solver): the per-leaf grouping is
+        delta-maintained from the batch, unchanged leaves reuse their
+        frontier DPs / assembled solutions, dirty leaves re-aggregate
+        through O(log n_leaves) tree combines, and a round whose classes,
+        budget and headroom are all unchanged returns the cached
+        Allocation — always bit-for-bit the from-scratch solve."""
         if self.topology is None:
             raise ValueError("ecoshift_hier needs a bound PowerTopology")
         if batch.domain_ids is None:
             raise ValueError("receiver batch carries no domain ids")
         batch = self._served_batch(batch)
-        by_leaf = self._grouped_options_by_leaf(batch)
+        incremental = (
+            self.incremental
+            and self.solver == "sparse"
+            and getattr(batch, "seq", 0) != 0
+        )
+        state = None
+        key = None
+        if incremental:
+            self._incremental_groups(
+                batch, leaf_ids=np.asarray(batch.domain_ids)
+            )
+            by_leaf = self._grouping.by_scope()
+            key = (
+                tuple(
+                    (leaf, tuple(sorted(mckp._group_token(g) for g in groups)))
+                    for leaf, groups in sorted(by_leaf.items())
+                ),
+                mckp._qkey(budget),
+                np.asarray(domain_extra).tobytes(),
+            )
+            hit = self._alloc_cache.get(key)
+            if hit is not None:
+                self.last_domain_spent = hit[1]
+                return hit[0]
+            state = self._hier_state
+        else:
+            by_leaf = self._grouped_options_by_leaf(batch)
         root = policies_mod.domain_tree(self.topology, domain_extra, by_leaf)
         sol = mckp.solve_hierarchical(
             root,
@@ -452,11 +695,15 @@ class EcoShiftHierController(EcoShiftController):
             unit=self.unit,
             curve_cache=self._agg_curves,
             frontier_cache=self._frontiers,
+            state=state,
         )
         self.last_domain_spent = sol.domain_spent
-        return policies_mod.allocation_from_solution(
+        alloc = policies_mod.allocation_from_solution(
             sol, batch.baselines_map(), budget, self.system.grid
         )
+        if key is not None:
+            self._alloc_cache[key] = (alloc, sol.domain_spent)
+        return alloc
 
     def ingest_telemetry(self, records) -> None:
         if self.predictor is not None:
@@ -510,9 +757,7 @@ class EcoShiftOnlineController(EcoShiftController):
             self.predictor.surface_for(name, sid)
             for name, sid in zip(batch.names, batch.surface_ids)
         ]
-        return super().allocate_grouped(
-            dataclasses.replace(batch, surfaces=served), budget
-        )
+        return super().allocate_grouped(_served_replace(batch, served), budget)
 
     def ingest_telemetry(self, records) -> None:
         self.predictor.observe(records)

@@ -48,6 +48,8 @@ cap — including mid-scenario ``DomainCapChange`` deratings.
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import time as _time
 import zlib
 from typing import Callable, Mapping, Sequence
 
@@ -68,6 +70,11 @@ from repro.core.types import (
 #: per-round offset into the measurement RNG stream (round 0 == the legacy
 #: single-round stream, so migrated paths reproduce run_round exactly)
 _ROUND_STRIDE = 1000003
+
+#: process-global batch sequence: seq values are unique across *all* sims,
+#: so a controller reused by two sims can never mistake one sim's batch
+#: chain for the other's (the delta contract keys on seq continuity)
+_BATCH_SEQ = itertools.count(1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +97,14 @@ class _SlowedSurface(PowerSurface):
 
     def power_draw(self, c, g):
         return self.base.power_draw(c, g)
+
+    def improvement(self, base, c, g):
+        # relative improvement is *exactly* invariant under a constant
+        # slowdown: delegate so a straggler's option table digests
+        # bit-identical to its healthy peers' (the class-merge invariant
+        # the grouped solvers rely on; computing (s*t0 - s*t1)/(s*t0)
+        # instead would drift in the last float bit and split the class)
+        return self.base.improvement(base, c, g)
 
 
 # ---------------------------------------------------------------------------
@@ -118,6 +133,11 @@ class _Interner:
         return self.strings[i]
 
 
+#: dirty-row log horizon: consumers lagging more than this many bumps
+#: behind fall back to a full rebuild
+_DIRTY_HORIZON = 64
+
+
 class NodeTable:
     """Struct-of-arrays cluster node state.
 
@@ -125,8 +145,16 @@ class NodeTable:
     ``node_ids [n]`` plus interned-id columns ``base_gid`` (true-surface /
     base-app name), ``sid_gid`` (the instance AppSpec's surface id),
     ``name_gid`` (instance name) and ``sclass_gid``, all indexing the shared
-    :class:`_Interner`.  Rows are append-only (failures flip ``alive``), and
-    ``version`` bumps on every mutation so view caches invalidate.
+    :class:`_Interner`.  Rows are append-only (failures flip ``alive``).
+
+    **Delta tracking** (DESIGN.md §13): every mutation bumps ``version``
+    and logs the *dirty rows* it touched.  Consumers remember the version
+    they last materialized against and ask :meth:`dirty_since` for exactly
+    the rows that moved — natural-draw caching, partitioning, receiver
+    batches and the per-domain draw accounting all update O(churn) state
+    instead of rebuilding whole-cluster arrays each round.  A coarse
+    ``bump()`` (no rows) marks everything dirty, so legacy callers stay
+    correct by falling back to full rebuilds.
     """
 
     def __init__(self):
@@ -144,6 +172,8 @@ class NodeTable:
         self.names: list[str] = []
         self.version = 0
         self._row_of: dict[int, int] | None = None
+        #: (version, dirty row array | None-for-everything) ring
+        self._dirty_log: list[tuple[int, np.ndarray | None]] = []
 
     def __len__(self) -> int:
         return len(self.node_ids)
@@ -152,8 +182,37 @@ class NodeTable:
     def strings(self) -> list[str]:
         return self.interner.strings
 
-    def bump(self) -> None:
+    def bump(self, rows: Sequence[int] | np.ndarray | None = None) -> None:
+        """Advance ``version``; ``rows`` are the row indices this mutation
+        touched (``None`` marks the whole table dirty)."""
         self.version += 1
+        if rows is not None:
+            rows = np.asarray(rows, dtype=np.int64)
+        self._dirty_log.append((self.version, rows))
+        if len(self._dirty_log) > _DIRTY_HORIZON:
+            del self._dirty_log[: len(self._dirty_log) - _DIRTY_HORIZON]
+
+    def dirty_since(self, version: int) -> np.ndarray | None:
+        """Rows dirtied in ``(version, self.version]``, or None when the
+        log can't prove a bound (horizon exceeded, unbounded bump, or a
+        ``version`` this table never issued)."""
+        if version == self.version:
+            return np.empty(0, dtype=np.int64)
+        if version > self.version:
+            return None
+        log = self._dirty_log
+        if not log or log[0][0] > version + 1:
+            return None
+        parts = []
+        for v, rows in log:
+            if v <= version:
+                continue
+            if rows is None:
+                return None
+            parts.append(rows)
+        if not parts:
+            return None
+        return np.unique(np.concatenate(parts))
 
     @staticmethod
     def from_nodes(nodes: Sequence[NodeState]) -> "NodeTable":
@@ -211,7 +270,8 @@ class NodeTable:
             self.sclass_gid, np.int32(self.interner.intern(sclass))
         )
         self.domain_id = np.append(self.domain_id, np.int32(domain_id))
-        self._row_of = None
+        if self._row_of is not None:
+            self._row_of[int(node_id)] = len(self.node_ids) - 1
 
     def next_node_id(self) -> int:
         return 1 + int(self.node_ids.max()) if len(self) else 0
@@ -355,8 +415,25 @@ class ClusterSim:
         #: natural-draw cache per base-app gid (identity-checked)
         self._naturals: dict[int, tuple[PowerSurface, float, float]] = {}
         #: whole-cluster natural-draw array, keyed by table version (the
-        #: partition and the per-domain accounting both read it each round)
+        #: partition and the per-domain accounting both read it each round);
+        #: delta-patched via the table's dirty-row log
         self._nat_cache: tuple[int, np.ndarray, np.ndarray] | None = None
+        #: memoized partition per (version, nat identity): stable row-array
+        #: objects double as identity tokens for downstream caches
+        self._part_cache: tuple | None = None
+        #: cached deterministic baseline runtimes (version, rows, t_base,
+        #: per-(gid, slowdown) surface identities)
+        self._tbase_cache: tuple | None = None
+        #: memoized (base surface, slowdown) grouping per (version, rows)
+        self._measure_groups_cache: tuple | None = None
+        #: receiver-batch cache: (mode, version, rows, batch)
+        self._batch_cache: tuple | None = None
+        #: (alloc, names list, [n,2] caps array) of the latest round — the
+        #: conservation check and measurement share one gather, and a
+        #: cache-hit allocation skips it entirely
+        self._alloc_caps_cache: tuple | None = None
+        #: per-phase wall-clock of the latest run_round (tools/profile_round)
+        self.last_round_profile: dict[str, float] = {}
         #: telemetry emitted by the latest vectorized-measurement round
         self.last_telemetry: object = ()
         self._views_cache: tuple[int, list[NodeState]] | None = None
@@ -488,6 +565,10 @@ class ClusterSim:
         self._views_cache = None
         self._naturals.clear()
         self._nat_cache = None
+        self._part_cache = None
+        self._batch_cache = None
+        self._tbase_cache = None
+        self._measure_groups_cache = None
 
     def _surface(self, node: NodeState) -> PowerSurface:
         return self._surface_of(node.base_app, node.slowdown)
@@ -506,36 +587,61 @@ class ClusterSim:
     def alive_nodes(self) -> list[NodeState]:
         return [n for n in self.nodes if n.alive]
 
+    def _nat_of_gid(self, gid: int) -> tuple[float, float]:
+        """Cached natural draw of one base-app gid (identity-validated)."""
+        t = self.table
+        surf = self.surfaces[t.strings[gid]]
+        hit = self._naturals.get(gid)
+        if hit is None or hit[0] is not surf:
+            c, g = surf.power_draw(1e9, 1e9)
+            hit = (surf, float(c), float(g))
+            self._naturals[gid] = hit
+        return hit[1:]
+
+    def _nat_gids_fresh(self, gids: np.ndarray) -> bool:
+        t = self.table
+        for gid in gids:
+            hit = self._naturals.get(int(gid))
+            if hit is None or hit[0] is not self.surfaces[t.strings[gid]]:
+                return False
+        return True
+
     def _natural_draws(self) -> np.ndarray:
         """[n, 2] natural (uncapped) component draws, one surface query per
         distinct base app (draws are cap- and slowdown-independent).
 
         The assembled array is cached per table version (validated against
-        per-gid surface identity, so online surface swaps still refresh) —
-        partitioning and the per-domain draw accounting share one pass.
+        per-gid surface identity, so online surface swaps still refresh).
+        When the table's dirty-row log bounds what moved since the cached
+        version, only the dirty rows are refilled — the steady-state round
+        never rebuilds the whole-cluster array (DESIGN.md §13).
         """
         t = self.table
         cache = self._nat_cache
         if cache is not None and cache[0] == t.version:
-            fresh = True
-            for gid in cache[2]:
-                hit = self._naturals.get(int(gid))
-                if hit is None or hit[0] is not self.surfaces[t.strings[gid]]:
-                    fresh = False
-                    break
-            if fresh:
+            if self._nat_gids_fresh(cache[2]):
                 return cache[1]
+            cache = None
+        if cache is not None:
+            dirty = t.dirty_since(cache[0])
+            if dirty is not None and self._nat_gids_fresh(cache[2]):
+                nat = cache[1]
+                if len(nat) < len(t):
+                    nat = np.concatenate(
+                        [nat, np.empty((len(t) - len(nat), 2), np.float64)]
+                    )
+                gids = cache[2]
+                if len(dirty):
+                    d_gids = t.base_gid[dirty]
+                    for gid in np.unique(d_gids):
+                        nat[dirty[d_gids == gid]] = self._nat_of_gid(int(gid))
+                    gids = np.union1d(gids, np.unique(d_gids))
+                self._nat_cache = (t.version, nat, gids)
+                return nat
         nat = np.empty((len(t), 2), dtype=np.float64)
         gids = np.unique(t.base_gid)
         for gid in gids:
-            name = t.strings[gid]
-            surf = self.surfaces[name]
-            hit = self._naturals.get(int(gid))
-            if hit is None or hit[0] is not surf:
-                c, g = surf.power_draw(1e9, 1e9)
-                hit = (surf, float(c), float(g))
-                self._naturals[int(gid)] = hit
-            nat[t.base_gid == gid] = hit[1:]
+            nat[t.base_gid == gid] = self._nat_of_gid(int(gid))
         self._nat_cache = (t.version, nat, gids)
         return nat
 
@@ -555,19 +661,28 @@ class ClusterSim:
 
         A node donates iff its natural draw sits below its caps on both
         components (margin 1 W); a dead node donates its entire cap
-        allotment.  One vectorized pass — no per-node Python.
+        allotment.  The result is memoized per (table version, natural-draw
+        array): steady-state rounds return the *same* row-array objects,
+        which downstream caches (receiver batches, measurement groups) use
+        as identity tokens.
         """
         t = self.table
         if not len(t):
             z = np.empty(0, dtype=np.int64)
             return z, z, 0.0
-        nat, donor = self._donor_mask()
+        nat = self._natural_draws()
+        c = self._part_cache
+        if c is not None and c[0] == t.version and c[1] is nat:
+            return c[2], c[3], c[4]
+        _, donor = self._donor_mask()
         recv = t.alive & ~donor
         dead = ~t.alive
         pool = float(
             t.caps[dead].sum() + (t.caps - nat)[donor].sum()
         )
-        return np.flatnonzero(donor), np.flatnonzero(recv), pool
+        out = (np.flatnonzero(donor), np.flatnonzero(recv), pool)
+        self._part_cache = (t.version, nat, *out)
+        return out
 
     def partition(self) -> tuple[list[NodeState], list[NodeState], float]:
         """(donors, receivers, reclaimed_pool) as NodeState views."""
@@ -585,6 +700,7 @@ class ClusterSim:
         """
         t = self.table
         touched: list[str] = []
+        dirty: list[np.ndarray] = []
         for event in events:
             if isinstance(event, scenario_mod.NodeFailure):
                 rows = np.flatnonzero(
@@ -592,10 +708,12 @@ class ClusterSim:
                 )
                 touched.extend(t.names[r] for r in rows)
                 t.alive[rows] = False
+                dirty.append(rows)
             elif isinstance(event, scenario_mod.StragglerOnset):
                 rows = np.flatnonzero(t.node_ids == event.node_id)
                 t.slowdown[rows] = event.slowdown
                 touched.extend(t.names[r] for r in rows)
+                dirty.append(rows)
             elif isinstance(event, scenario_mod.PhaseChange):
                 if event.surface_id not in self.surfaces:
                     raise KeyError(f"unknown surface {event.surface_id!r}")
@@ -606,6 +724,7 @@ class ClusterSim:
                 t.base_gid[rows] = gid
                 t.sid_gid[rows] = gid
                 touched.extend(t.names[r] for r in rows)
+                dirty.append(rows)
             elif isinstance(event, scenario_mod.NodeArrival):
                 if event.surface is not None:
                     # a genuinely new app: register its ground-truth surface
@@ -642,6 +761,7 @@ class ClusterSim:
                     caps=caps,
                     domain_id=domain_id,
                 )
+                dirty.append(np.array([len(t) - 1], dtype=np.int64))
             elif isinstance(event, scenario_mod.DomainCapChange):
                 if self.topology is None:
                     raise ValueError(
@@ -654,7 +774,12 @@ class ClusterSim:
                 ] = float(event.cap)
             else:
                 raise TypeError(f"unknown event {event!r}")
-        t.bump()
+        rows = (
+            np.unique(np.concatenate(dirty))
+            if dirty
+            else np.empty(0, dtype=np.int64)
+        )
+        t.bump(rows)
         return touched
 
     def apply_event(self, event) -> list[str]:
@@ -665,18 +790,33 @@ class ClusterSim:
 
     def _measure_groups(self, rows: np.ndarray):
         """Distinct (base surface, slowdown) classes among ``rows`` as
-        (gid, slowdown, member positions into ``rows``) triples."""
+        (gid, slowdown, member positions into ``rows``) triples.
+
+        Keys pack (gid, interned slowdown rank) into one int64 so the
+        grouping is a cheap integer sort instead of a structured-array
+        argsort; the (gid asc, slowdown asc) group order and ascending
+        member positions match the structured form exactly.  Memoized per
+        (table version, rows object) — the batch freshness probe, the
+        surface fill and the measurement all share one grouping per round.
+        """
         t = self.table
-        key = np.empty(
-            len(rows), dtype=[("g", np.int32), ("s", np.float64)]
-        )
-        key["g"] = t.base_gid[rows]
-        key["s"] = t.slowdown[rows]
+        c = self._measure_groups_cache
+        if c is not None and c[0] == t.version and c[1] is rows:
+            return c[2]
+        sl = t.slowdown[rows]
+        uniq_s, s_rank = np.unique(sl, return_inverse=True)
+        key = t.base_gid[rows].astype(np.int64) * len(uniq_s) + s_rank
         uniq, inv = np.unique(key, return_inverse=True)
-        return [
-            (int(uniq[k]["g"]), float(uniq[k]["s"]), np.flatnonzero(inv == k))
+        order = np.argsort(inv, kind="stable")
+        counts = np.bincount(inv, minlength=len(uniq))
+        splits = np.split(order, np.cumsum(counts)[:-1])
+        ns = len(uniq_s)
+        groups = [
+            (int(uniq[k] // ns), float(uniq_s[uniq[k] % ns]), splits[k])
             for k in range(len(uniq))
         ]
+        self._measure_groups_cache = (t.version, rows, groups)
+        return groups
 
     def _measure_rows(
         self,
@@ -688,19 +828,62 @@ class ClusterSim:
         """Vectorized measurement core: per-receiver mean measured runtimes
         at (baseline, allocated) caps plus relative improvements — the same
         arrays back both the engine's reported improvements and the
-        telemetry batch, so the two are bit-identical by construction."""
+        telemetry batch, so the two are bit-identical by construction.
+
+        Baseline runtimes are deterministic per (surface, slowdown, caps)
+        row, so they are cached across rounds and re-evaluated only for
+        groups touching dirty rows or swapped surfaces — allocated-caps
+        runtimes (and the per-round noise) are always fresh.
+        """
         n = len(rows)
         if n == 0:
             z = np.zeros(0, dtype=np.float64)
             return z, z, z
-        t_base = np.empty(n, dtype=np.float64)
+        t = self.table
+        strings = t.strings
+        groups = self._measure_groups(rows)
+        t_base: np.ndarray | None = None
+        dirty_mask: np.ndarray | None = None
+        csurfs: dict = {}
+        c = self._tbase_cache
+        if c is not None:
+            cv, crows, ctb, cs = c
+            if cv == t.version and crows is rows:
+                t_base = ctb.copy()
+                csurfs = dict(cs)
+                dirty_mask = np.zeros(n, dtype=bool)
+            else:
+                d = t.dirty_since(cv)
+                if (
+                    d is not None
+                    and len(crows) == n
+                    and self._rows_ascending(rows)
+                    and np.array_equal(crows, rows)
+                ):
+                    t_base = ctb.copy()
+                    csurfs = dict(cs)
+                    dirty_mask = np.zeros(n, dtype=bool)
+                    dirty_mask[
+                        np.searchsorted(rows, np.intersect1d(d, rows))
+                    ] = True
+        if t_base is None:
+            t_base = np.empty(n, dtype=np.float64)
         t_new = np.empty(n, dtype=np.float64)
-        for gid, slowdown, ii in self._measure_groups(rows):
-            surf = self.surfaces[self.table.strings[gid]]
-            tb = np.asarray(surf.runtime(base[ii, 0], base[ii, 1]), np.float64)
+        for gid, slowdown, ii in groups:
+            surf = self.surfaces[strings[gid]]
             tn = np.asarray(surf.runtime(new[ii, 0], new[ii, 1]), np.float64)
-            t_base[ii] = tb * slowdown
             t_new[ii] = tn * slowdown
+            if (
+                dirty_mask is None
+                or csurfs.get((gid, slowdown)) is not surf
+                or dirty_mask[ii].any()
+            ):
+                tb = np.asarray(
+                    surf.runtime(base[ii, 0], base[ii, 1]), np.float64
+                )
+                t_base[ii] = tb * slowdown
+            csurfs[(gid, slowdown)] = surf
+        self._tbase_cache = (t.version, rows, t_base, csurfs)
 
         sigma = self.system.noise_sigma
         if sigma > 0:
@@ -776,6 +959,130 @@ class ClusterSim:
             + round_index * _ROUND_STRIDE
         )
 
+    def _fill_true_surfaces(
+        self, rows: np.ndarray, surfaces: list
+    ) -> None:
+        strings = self.table.strings
+        for gid, slowdown, ii in self._measure_groups(rows):
+            surf = self._surface_of(strings[gid], slowdown)
+            for i in ii:
+                surfaces[i] = surf
+
+    @staticmethod
+    def _rows_ascending(rows: np.ndarray) -> bool:
+        """The delta-patch caches position-match via searchsorted/setdiff1d,
+        which require ascending (partition-ordered) row arrays; explicit
+        ``run_round(receivers=...)`` callers may pass any order and must
+        fall back to full rebuilds."""
+        return len(rows) < 2 or bool(np.all(rows[1:] > rows[:-1]))
+
+    def _batch_surfaces_fresh(self, rows: np.ndarray, batch) -> bool:
+        """One identity probe per (surface, slowdown) class: catches true
+        surfaces swapped without a table bump (direct reassignment)."""
+        strings = self.table.strings
+        for gid, slowdown, ii in self._measure_groups(rows):
+            if batch.surfaces[ii[0]] is not self._surface_of(
+                strings[gid], slowdown
+            ):
+                return False
+        return True
+
+    def _patch_batch(
+        self, mode: str, c: tuple, rows: np.ndarray
+    ) -> ReceiverBatch | None:
+        """Derive this round's batch from the cached one, or None to force
+        a full rebuild.
+
+        Three outcomes, in order: the cached batch is returned unchanged
+        when nothing moved (same version, same rows, surfaces still
+        identity-fresh); a copy-on-write *patched* batch carrying the
+        delta contract is returned when the dirty-row log bounds what
+        changed and the patched surfaces probe fresh; otherwise None —
+        unbounded change, non-partition row order (searchsorted/setdiff
+        need ascending rows), or a surface swapped without dirtying its
+        rows (e.g. NodeArrival re-registering an app's ground truth).
+        """
+        t = self.table
+        _, c_version, c_rows, c_batch = c
+        if c_version == t.version and c_rows is rows:
+            if mode != "true" or self._batch_surfaces_fresh(rows, c_batch):
+                return c_batch
+            return None  # surfaces swapped underneath: rebuild
+        dirty = t.dirty_since(c_version)
+        if (
+            dirty is None
+            or not self._rows_ascending(rows)
+            or not self._rows_ascending(c_rows)
+        ):
+            return None
+        joined = np.setdiff1d(rows, c_rows, assume_unique=True)
+        left = np.setdiff1d(c_rows, rows, assume_unique=True)
+        changed = np.union1d(
+            np.intersect1d(dirty, rows, assume_unique=False), joined
+        )
+        pos = np.searchsorted(rows, changed)
+        strings = t.strings
+        if mode == "skip":
+            surfaces: list = [None] * len(rows)
+        else:
+            surfaces = list(c_batch.surfaces)
+        if len(joined) or len(left):
+            # membership moved: carry surviving surfaces over by row id
+            # (vectorized), rebuild the positional columns
+            names = [t.names[r] for r in rows]
+            surface_ids = [strings[t.sid_gid[r]] for r in rows]
+            if mode == "true":
+                common = np.setdiff1d(rows, joined, assume_unique=True)
+                sarr = np.empty(len(rows), dtype=object)
+                old = np.array(c_batch.surfaces, dtype=object)
+                sarr[np.searchsorted(rows, common)] = old[
+                    np.searchsorted(c_rows, common)
+                ]
+                surfaces = sarr.tolist()
+        else:
+            names = list(c_batch.names)
+            surface_ids = list(c_batch.surface_ids)
+            for p in pos:
+                surface_ids[p] = strings[t.sid_gid[rows[p]]]
+        if mode == "true":
+            for p in pos:
+                r = rows[p]
+                surfaces[p] = self._surface_of(
+                    strings[t.base_gid[r]], float(t.slowdown[r])
+                )
+        batch = ReceiverBatch(
+            names=names,
+            surface_ids=surface_ids,
+            baselines=t.caps[rows],
+            surfaces=surfaces,
+            domain_ids=(
+                t.domain_id[rows] if self.topology is not None else None
+            ),
+            seq=next(_BATCH_SEQ),
+            prev_seq=c_batch.seq,
+            delta=tuple(int(p) for p in pos),
+            removed=tuple(t.names[r] for r in left),
+        )
+        if mode == "true" and not self._batch_surfaces_fresh(rows, batch):
+            return None
+        # carry the name -> baseline map across patched batches: row
+        # baselines are immutable, so only joins/leaves/changes need
+        # touching (the map is read-only by convention)
+        prev_map = c_batch.__dict__.get("_baselines_map")
+        if prev_map is not None:
+            if len(joined) or len(left):
+                m = dict(prev_map)
+                for nm in batch.removed:
+                    m.pop(nm, None)
+                bl = batch.baselines
+                for p in batch.delta:
+                    m[names[p]] = (float(bl[p, 0]), float(bl[p, 1]))
+                object.__setattr__(batch, "_baselines_map", m)
+            else:
+                object.__setattr__(batch, "_baselines_map", prev_map)
+        self._batch_cache = (mode, t.version, rows, batch)
+        return batch
+
     def _receiver_batch(
         self,
         rows: np.ndarray,
@@ -790,28 +1097,57 @@ class ClusterSim:
         controllers that serve their own surfaces (``ecoshift_online``) —
         ground truth must never even transit their inputs (DESIGN.md §10
         information discipline).
+
+        Batches are cached per (mode, table version, receiver rows): an
+        event-free round returns the previous batch object unchanged
+        (``delta == ()``), and a round whose dirty rows are bounded by the
+        table's delta log ships a patched copy with the changed positions
+        in ``delta`` — the O(churn) contract incremental controllers key
+        their warm grouping state on (DESIGN.md §13).
         """
         t = self.table
+        mode = (
+            "skip" if skip_surfaces
+            else "true" if (policy_surfaces is None or sees_truth)
+            else None
+        )
+        c = self._batch_cache
+        if mode is not None and c is not None and c[0] == mode:
+            batch = self._patch_batch(mode, c, rows)
+            if batch is not None:
+                return batch
         names = [t.names[r] for r in rows]
         strings = t.strings
         surface_ids = [strings[t.sid_gid[r]] for r in rows]
-        surfaces: list[PowerSurface] = [None] * len(rows)  # type: ignore[list-item]
+        surfaces = [None] * len(rows)  # type: ignore[list-item]
         if skip_surfaces:
             pass
         elif policy_surfaces is not None and not sees_truth:
             surfaces = [policy_surfaces[nm] for nm in names]
         else:
-            for gid, slowdown, ii in self._measure_groups(rows):
-                surf = self._surface_of(strings[gid], slowdown)
-                for i in ii:
-                    surfaces[i] = surf
-        return ReceiverBatch(
+            self._fill_true_surfaces(rows, surfaces)
+        batch = ReceiverBatch(
             names=names,
             surface_ids=surface_ids,
             baselines=t.caps[rows],
             surfaces=surfaces,
             domain_ids=t.domain_id[rows] if self.topology is not None else None,
+            seq=next(_BATCH_SEQ),
         )
+        if mode is not None:
+            self._batch_cache = (mode, t.version, rows, batch)
+        return batch
+
+    def _alloc_caps_array(self, alloc: Allocation, names) -> np.ndarray:
+        """[n, 2] allocated caps aligned with ``names`` — one gather shared
+        by the conservation check and the measurement, memoized while both
+        the allocation and the names list are the reused warm objects."""
+        c = self._alloc_caps_cache
+        if c is not None and c[0] is alloc and c[1] is names:
+            return c[2]
+        new = np.array([alloc.caps[nm] for nm in names], dtype=np.float64)
+        self._alloc_caps_cache = (alloc, names, new)
+        return new
 
     def _check_domain_conservation(
         self,
@@ -835,7 +1171,7 @@ class ClusterSim:
         """
         topo = self.topology
         t = self.table
-        new = np.array([alloc.caps[nm] for nm in names], dtype=np.float64)
+        new = self._alloc_caps_array(alloc, names)
         extra_node = new.sum(axis=1) - base.sum(axis=1) if len(names) else []
         leaf = np.zeros(len(topo), dtype=np.float64)
         if len(names):
@@ -883,7 +1219,9 @@ class ClusterSim:
         ``supports_grouped`` allocate from a columnar ``ReceiverBatch``
         (group-collapsed DP); everyone else gets the per-instance view.
         """
+        prof = self.last_round_profile = {}
         t = self.table
+        tp = _time.perf_counter()
         if receivers is not None:
             _recv_rows = self._rows_for_nodes(receivers)
         if _recv_rows is not None and budget is not None:
@@ -894,7 +1232,6 @@ class ClusterSim:
                 np.asarray(_recv_rows) if _recv_rows is not None else part_rows
             )
         b = float(pool if budget is None else budget)
-        names = [t.names[r] for r in recv_rows]
         base = t.caps[recv_rows]
 
         hierarchical = self.topology is not None and getattr(
@@ -905,25 +1242,30 @@ class ClusterSim:
             if self.topology is not None
             else None
         )
+        prof["partition_s"] = _time.perf_counter() - tp
+
+        tp = _time.perf_counter()
+        names: Sequence[str] | None = None
+        batch = None
+        if hierarchical or getattr(controller, "supports_grouped", False):
+            batch = self._receiver_batch(
+                recv_rows,
+                policy_surfaces,
+                controller.sees_truth,
+                skip_surfaces=getattr(controller, "serves_own_surfaces", False),
+            )
+            names = batch.names
+        prof["batch_s"] = _time.perf_counter() - tp
+
+        tp = _time.perf_counter()
         if hierarchical:
             controller.bind_topology(self.topology)
-            batch = self._receiver_batch(
-                recv_rows,
-                policy_surfaces,
-                controller.sees_truth,
-                skip_surfaces=getattr(controller, "serves_own_surfaces", False),
-            )
             alloc = controller.allocate_hierarchical(batch, b, headroom[0])
-        elif getattr(controller, "supports_grouped", False):
-            batch = self._receiver_batch(
-                recv_rows,
-                policy_surfaces,
-                controller.sees_truth,
-                skip_surfaces=getattr(controller, "serves_own_surfaces", False),
-            )
+        elif batch is not None:
             alloc = controller.allocate_grouped(batch, b)
         else:
             recv_nodes = t.views(recv_rows)
+            names = [n.app.name for n in recv_nodes]
             recv_apps = [n.app for n in recv_nodes]
             baselines = {n.app.name: n.caps for n in recv_nodes}
             true_by_inst = {n.app.name: self._surface(n) for n in recv_nodes}
@@ -933,22 +1275,26 @@ class ClusterSim:
             if controller.sees_truth:
                 seen = true_by_inst
             alloc = controller.allocate(recv_apps, baselines, b, seen)
+        prof["allocate_s"] = _time.perf_counter() - tp
 
+        tp = _time.perf_counter()
         if self.topology is not None:
             self._check_domain_conservation(
                 recv_rows, names, base, alloc, round_index, headroom,
                 enforce=hierarchical,
             )
+        prof["conserve_s"] = _time.perf_counter() - tp
 
+        tp = _time.perf_counter()
         rng = self.round_rng(controller.policy, round_index)
         if use_loop_measurement:
             recv_nodes = t.views(recv_rows)
             improvements = self.measure_improvements_loop(recv_nodes, alloc, rng)
             self.last_telemetry = ()
         else:
-            new = np.array([alloc.caps[nm] for nm in names], dtype=np.float64)
+            new = self._alloc_caps_array(alloc, names)
             t0, t1, imp = self._measure_rows(recv_rows, base, new, rng)
-            improvements = {nm: float(imp[i]) for i, nm in enumerate(names)}
+            improvements = dict(zip(names, imp.tolist()))
             self.last_telemetry = TelemetryBatch(
                 round=round_index,
                 inst_gids=t.name_gid[recv_rows],
@@ -960,6 +1306,7 @@ class ClusterSim:
                 t_allocated=t1,
                 improvement=imp,
             )
+        prof["measure_s"] = _time.perf_counter() - tp
         return EmulationResult(
             policy=controller.policy,
             improvements=improvements,

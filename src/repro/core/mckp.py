@@ -56,12 +56,60 @@ above the 1e-6 W state-merge tolerance; true for watt-granular cap grids.)
 from __future__ import annotations
 
 import dataclasses
+import functools
+import itertools
 import math
+from collections import OrderedDict
 from typing import MutableMapping, Sequence
 
 import numpy as np
 
 from repro.core.curves import OptionTable, dense_curve, dense_curves_matrix
+
+
+class LRUCache(MutableMapping):
+    """Bounded mapping with least-recently-used eviction.
+
+    Drop-in for the plain-dict warm caches (aggregate curves, frontiers,
+    pick multisets): ``get``/``[]`` refresh recency, inserts beyond
+    ``maxsize`` evict the coldest entry.  Keeps long scenarios from growing
+    warm state without bound across distinct budgets/digests.
+    """
+
+    def __init__(self, maxsize: int = 512):
+        if maxsize < 1:
+            raise ValueError("maxsize must be >= 1")
+        self.maxsize = maxsize
+        self._d: OrderedDict = OrderedDict()
+
+    def __getitem__(self, key):
+        val = self._d[key]
+        self._d.move_to_end(key)
+        return val
+
+    def get(self, key, default=None):
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+    def __setitem__(self, key, val):
+        self._d[key] = val
+        self._d.move_to_end(key)
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
+    def __delitem__(self, key):
+        del self._d[key]
+
+    def __iter__(self):
+        return iter(self._d)
+
+    def __len__(self):
+        return len(self._d)
+
+    def clear(self):
+        self._d.clear()
 
 
 @dataclasses.dataclass
@@ -111,8 +159,45 @@ def table_digest(opt: OptionTable) -> tuple:
     which ``solve_sparse`` canonicalizes its assignment.  Note a
     multiplicatively-slowed straggler digests equally to its healthy peers:
     relative improvements are invariant under constant slowdown.
+
+    Memoized on the (frozen, content-immutable) table instance so warm
+    controllers pay the bytes conversion once per table, not once per round.
     """
-    return (opt.costs.tobytes(), opt.values.tobytes(), opt.caps.tobytes())
+    d = opt.__dict__.get("_digest")
+    if d is None:
+        d = (opt.costs.tobytes(), opt.values.tobytes(), opt.caps.tobytes())
+        object.__setattr__(opt, "_digest", d)
+    return d
+
+
+def _pick_tuples(opt: OptionTable) -> list:
+    """Per-option ``(cost, value, (c, g))`` pick tuples, memoized on the
+    table — the one representation every solver's ``picks`` dict uses."""
+    pt = opt.__dict__.get("_pick_tuples")
+    if pt is None:
+        pt = [
+            (float(c), float(v), (float(cc[0]), float(cc[1])))
+            for c, v, cc in zip(opt.costs, opt.values, opt.caps)
+        ]
+        object.__setattr__(opt, "_pick_tuples", pt)
+    return pt
+
+
+_group_counter = itertools.count(1)
+
+
+def _group_token(g: "GroupedOptions") -> int:
+    """Process-unique identity token of one (immutable) GroupedOptions.
+
+    Incremental controllers reuse group objects across rounds while their
+    membership is unchanged, so token tuples are cheap round-over-round
+    cache keys for merged-class plans (unlike ``id()``, tokens are never
+    reused after garbage collection)."""
+    t = g.__dict__.get("_token")
+    if t is None:
+        t = next(_group_counter)
+        object.__setattr__(g, "_token", t)
+    return t
 
 
 def _canonical_solution(
@@ -257,10 +342,20 @@ def solve_grouped(
     solver: str = "sparse",
     unit: float = 1.0,
     curve_cache: MutableMapping | None = None,
+    pick_cache: MutableMapping | None = None,
+    plan_cache: MutableMapping | None = None,
+    chain_cache: MutableMapping | None = None,
 ) -> MCKPSolution:
     """Solver dispatch for the group-collapsed paths (see ``solve_*_grouped``)."""
     if solver == "sparse":
-        return solve_sparse_grouped(groups, budget, curve_cache=curve_cache)
+        return solve_sparse_grouped(
+            groups,
+            budget,
+            curve_cache=curve_cache,
+            pick_cache=pick_cache,
+            plan_cache=plan_cache,
+            chain_cache=chain_cache,
+        )
     if solver == "dense":
         return solve_dense_grouped(groups, budget, unit=unit)
     if solver in ("jax", "pallas"):
@@ -283,6 +378,148 @@ def _dedupe_first_max(
     first[1:] = k_sorted[1:] != k_sorted[:-1]
     sel = order[first]
     return keys[sel], sel
+
+
+def _micro_int(keys: np.ndarray) -> np.ndarray | None:
+    """Exact micro-watt integers of quantized spend keys, or None.
+
+    Every spend key in the sparse solvers is a :func:`_qkey` multiple of
+    1e-6, i.e. ``float64(n) * 1e-6`` for an integer ``n`` — so ``n`` is
+    recoverable exactly and ``float64(n) * 1e-6`` reproduces the key
+    *bitwise*.  Returns None when any key fails the round-trip (non-qkey
+    floats), which routes the caller to the generic lexsort path.
+    """
+    ints = np.round(keys * 1e6).astype(np.int64)
+    recon = ints.astype(np.float64) * 1e-6
+    if recon.tobytes() != keys.tobytes():
+        return None
+    return ints
+
+
+#: int-lattice fast path bound: skip when the dense spend grid would exceed
+#: this many states (degenerate tiny-gcd key sets fall back to lexsort)
+_INT_LATTICE_MAX_STATES = 1 << 21
+
+#: spend-grid chunk for the [K, chunk] candidate tile of the int path
+_INT_LATTICE_CHUNK = 1 << 14
+
+
+def _maxplus_pair(
+    a_keys: np.ndarray,
+    a_vals: np.ndarray,
+    b_keys: np.ndarray,
+    b_vals: np.ndarray,
+    budget: float,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """(max,+)-convolve two sparse value-vs-spend curves under ``budget``.
+
+    Returns ``(keys, vals, left_keys, right_keys)``: the deduped combined
+    curve (ascending quantized spends, best value each) plus, per state,
+    the (a, b) spend split realizing it.  Tie-breaking is the scalar dict
+    DP's: among equal (key, value) candidates the smallest a-spend wins
+    (first occurrence in (a index, b index) order).
+
+    This is the one convolution primitive behind ``_AggCurve.combine``,
+    the super-stage DP and the hierarchical frontier tree.  When both key
+    sets sit on a common integer watt lattice (grid-aligned costs — the
+    production case) the outer-product + lexsort dedupe collapses to a
+    dense gather + argmax over the integer spend grid, bitwise identical
+    and ~10x faster; otherwise the generic lexsort path runs.
+    """
+    if len(a_keys) * len(b_keys) > 2048:
+        # the int-lattice setup only pays off past a few thousand candidates
+        ia = _micro_int(a_keys)
+        ib = _micro_int(b_keys) if ia is not None else None
+        if ib is not None and len(ia) and len(ib):
+            out = _maxplus_pair_int(
+                ia, a_keys, a_vals, ib, b_keys, b_vals, budget
+            )
+            if out is not None:
+                return out
+    # generic path: full outer product, feasibility prune, first-max dedupe
+    raw = (a_keys[:, None] + b_keys[None, :]).ravel()
+    vals = (a_vals[:, None] + b_vals[None, :]).ravel()
+    feas = np.flatnonzero(raw <= budget + 1e-9)
+    keys, sel = _dedupe_first_max(_qkey_np(raw[feas]), vals[feas])
+    sel = feas[sel]
+    nb = len(b_keys)
+    return keys, vals[sel], a_keys[sel // nb], b_keys[sel % nb]
+
+
+def _maxplus_pair_int(
+    ia: np.ndarray,
+    a_keys: np.ndarray,
+    a_vals: np.ndarray,
+    ib: np.ndarray,
+    b_keys: np.ndarray,
+    b_vals: np.ndarray,
+    budget: float,
+) -> tuple | None:
+    """Integer-lattice (max,+) pair convolution (see :func:`_maxplus_pair`).
+
+    Spends become indices on the gcd-pitch grid; each output state gathers
+    its candidates as ``a_dense[t - b] + b_val`` and an argmax with
+    last-maximizer tie-breaking reproduces the dict DP's first-max over
+    (a asc, b asc) candidate order (for a fixed sum, ascending a-spend is
+    descending b-spend).  Returns None when the grid would be too large.
+    """
+    g = int(np.gcd(np.gcd.reduce(ia), np.gcd.reduce(ib)))
+    if g <= 0:
+        # all spends are zero: single state (0, best value pair)
+        g = 1
+    # largest feasible grid index (micro-watt bound mirrors `<= budget+1e-9`)
+    bound = np.floor((budget + 1e-9) * 1e6 / g)
+    if not np.isfinite(bound):
+        return None
+    tmax = min(int(bound), int(ia.max() // g + ib.max() // g))
+    if tmax < 0:
+        # no feasible state at all (negative budget cannot happen upstream,
+        # but keep the generic path authoritative for it)
+        return None
+    if tmax + 1 > _INT_LATTICE_MAX_STATES:
+        return None
+    nb = tmax + 1
+    iag = ia // g
+    ibg = ib // g
+    keep_a = np.flatnonzero(iag <= tmax)
+    keep_b = np.flatnonzero(ibg <= tmax)
+    if not len(keep_a) or not len(keep_b):
+        return None
+    kmax = int(ibg[keep_b].max())
+    # a side densified on the grid, left-padded by kmax so every gather
+    # index t - kb + kmax is in-bounds (holes and padding are -inf)
+    a_pad = np.full(nb + kmax, -np.inf)
+    a_pos = np.zeros(nb, dtype=np.int64)
+    a_pad[iag[keep_a] + kmax] = a_vals[keep_a]
+    a_pos[iag[keep_a]] = keep_a
+    # b options in descending-spend order: a plain row argmax then picks,
+    # among ties, the largest b spend == the smallest a spend — the dict
+    # DP's first max in (a asc, b asc) candidate order
+    kbr = ibg[keep_b][::-1].copy()
+    vbr = b_vals[keep_b][::-1].copy()
+    k = len(kbr)
+
+    out_vals = np.empty(nb, dtype=np.float64)
+    out_jr = np.empty(nb, dtype=np.int64)
+    for t0 in range(0, nb, _INT_LATTICE_CHUNK):
+        t = np.arange(t0, min(t0 + _INT_LATTICE_CHUNK, nb))
+        idx = t[:, None] - kbr[None, :] + kmax  # [chunk, K], all in-bounds
+        cand = a_pad[idx]
+        cand += vbr[None, :]
+        jr = np.argmax(cand, axis=1)
+        out_jr[t] = jr
+        out_vals[t] = cand[np.arange(len(t)), jr]
+
+    feas = np.flatnonzero(out_vals > -np.inf)
+    jr = out_jr[feas]
+    ta = feas - kbr[jr]
+    keys = ((feas * g).astype(np.float64)) * 1e-6
+    return (
+        keys,
+        out_vals[feas],
+        a_keys[a_pos[ta]],
+        b_keys[keep_b[k - 1 - jr]],
+    )
 
 
 class _AggCurve:
@@ -321,17 +558,14 @@ class _AggCurve:
 
     @staticmethod
     def combine(a: "_AggCurve", b: "_AggCurve", budget: float) -> "_AggCurve":
-        raw = (a.keys[:, None] + b.keys[None, :]).ravel()
-        vals = (a.vals[:, None] + b.vals[None, :]).ravel()
-        feas = np.flatnonzero(raw <= budget + 1e-9)
-        keys, sel = _dedupe_first_max(_qkey_np(raw[feas]), vals[feas])
-        sel = feas[sel]
-        nb = len(b.keys)
+        keys, vals, left, right = _maxplus_pair(
+            a.keys, a.vals, b.keys, b.vals, budget
+        )
         return _AggCurve(
             keys=keys,
-            vals=vals[sel],
-            back_left=a.keys[sel // nb],
-            back_right=b.keys[sel % nb],
+            vals=vals,
+            back_left=left,
+            back_right=right,
             left=a,
             right=b,
         )
@@ -352,24 +586,39 @@ class _AggCurve:
             self.right.unwind(float(self.back_right[i]), out)
 
 
-def aggregate_curve(table: OptionTable, m: int, budget: float) -> _AggCurve:
+def aggregate_curve(
+    table: OptionTable, m: int, budget: float,
+    chain: list[_AggCurve] | None = None,
+) -> _AggCurve:
     """m-fold (max,+) self-convolution of a table's sparse staircase.
 
     Binary split: O(log m) pairwise convolutions build the doubling chain
     P_1, P_2, P_4, ... and the set bits of ``m`` combine into the final
     curve.  State count stays bounded by the distinct achievable sums
     <= budget, so each convolution is one small vectorized outer product.
+
+    ``chain`` optionally persists the doubling chain across calls (keyed by
+    (digest, budget) in ``_class_curves``): the powers are multiplicity-
+    independent, so when membership churn shifts a class from m to m', only
+    the popcount(m') set-bit combines rerun — not the whole chain.
     """
-    base = _AggCurve.leaf(table, budget)
+    if chain is None:
+        chain = []
+    if not chain:
+        chain.append(_AggCurve.leaf(table, budget))
     acc: _AggCurve | None = None
-    power = base
     bit = m
+    i = 0
     while bit:
+        if i >= len(chain):
+            chain.append(_AggCurve.combine(chain[-1], chain[-1], budget))
         if bit & 1:
-            acc = power if acc is None else _AggCurve.combine(acc, power, budget)
+            acc = (
+                chain[i] if acc is None
+                else _AggCurve.combine(acc, chain[i], budget)
+            )
         bit >>= 1
-        if bit:
-            power = _AggCurve.combine(power, power, budget)
+        i += 1
     assert acc is not None
     return acc
 
@@ -391,22 +640,121 @@ def _merge_classes(groups: Sequence[GroupedOptions]) -> list[list]:
     return sorted(merged.values(), key=lambda s: min(s[1]))
 
 
+class _LeafPlan:
+    """Merged-class layout of one behaviour-class set.
+
+    Precomputes everything about the *stage structure* that is independent
+    of budget and spends: the digest-merged classes in canonical order
+    (sorted by min member name, members name-sorted within each class), the
+    ``layout`` content key of the frontier caches, and the permutation
+    taking class-concatenated members to the globally name-sorted order the
+    canonical assembly uses.  Plans are cached by the group-token tuple so
+    incremental controllers reusing unchanged ``GroupedOptions`` objects
+    skip the per-round merge + sorts entirely.
+    """
+
+    __slots__ = ("classes", "layout", "names_sorted", "order", "key")
+
+    def __init__(self, classes, layout, names_sorted, order, key):
+        self.classes: list[list] = classes
+        self.layout: tuple = layout
+        self.names_sorted: list[str] = names_sorted
+        self.order: np.ndarray = order
+        #: group-token tuple when plan-cached (None on ephemeral plans)
+        self.key: tuple | None = key
+
+
+def _leaf_plan(
+    groups: Sequence[GroupedOptions],
+    plan_cache: MutableMapping | None = None,
+) -> _LeafPlan:
+    """Build (or fetch) the :class:`_LeafPlan` of a behaviour-class set."""
+    key = None
+    if plan_cache is not None:
+        key = tuple(sorted(_group_token(g) for g in groups))
+        hit = plan_cache.get(key)
+        if hit is not None:
+            return hit
+    classes = _merge_classes(groups)
+    for slot in classes:
+        slot[1].sort()
+    concat = [nm for _, members, _ in classes for nm in members]
+    if concat:
+        arr = np.asarray(concat)
+        order = np.argsort(arr, kind="stable")
+        names_sorted = arr[order].tolist()
+    else:
+        order = np.empty(0, dtype=np.int64)
+        names_sorted = []
+    plan = _LeafPlan(
+        classes=classes,
+        layout=tuple((d, len(m)) for _, m, d in classes),
+        names_sorted=names_sorted,
+        order=order,
+        key=key,
+    )
+    if plan_cache is not None:
+        plan_cache[key] = plan
+    return plan
+
+
+def _curve_cutoff(budget: float) -> float:
+    """Canonical aggregate-curve cutoff: the smallest power-of-two multiple
+    of 64 W at or above ``budget``.
+
+    Aggregate curves truncated to any cutoff >= the DP budget produce the
+    *same* feasible states, values and backtracked multisets (costs are
+    non-negative, so an over-cutoff state can never parent a feasible one,
+    and dropping it changes no candidate order among survivors).  Keying
+    curves and chains by this quantized cutoff instead of the raw budget
+    keeps them warm while per-domain headroom drifts watt-by-watt under
+    failures and deratings — the curve caches then miss only on genuine
+    class changes, not on accounting noise.
+    """
+    b = 64.0
+    while b < budget:
+        b *= 2.0
+    return b
+
+
 def _class_curves(
     classes: Sequence[list],
     budget: float,
     curve_cache: MutableMapping | None,
-) -> list[_AggCurve]:
-    """m-fold aggregate curve per class, memoized by (digest, m, budget)."""
+    chain_cache: MutableMapping | None = None,
+) -> tuple[list[_AggCurve], list[tuple]]:
+    """m-fold aggregate curve per class, memoized by (digest, m, budget).
+
+    ``chain_cache`` persists the multiplicity-independent doubling chains
+    by (digest, budget) — kept apart from ``curve_cache`` because churny
+    (digest, m) keys would otherwise evict the far-more-valuable chains.
+    Returns the curves plus their content cache keys (the pick-multiset
+    cache reuses them)."""
+    if chain_cache is None:
+        chain_cache = curve_cache
+    cutoff = _curve_cutoff(budget)
+    qc = _qkey(cutoff)
     curves_: list[_AggCurve] = []
+    keys: list[tuple] = []
     for table, members, d in classes:
-        key = (d, len(members), _qkey(budget))
+        key = (d, len(members), qc)
         curve = curve_cache.get(key) if curve_cache is not None else None
         if curve is None:
-            curve = aggregate_curve(table, len(members), budget)
+            chain = None
+            if chain_cache is not None:
+                # membership churn (m -> m') then reruns only the set-bit
+                # combines, never the whole chain
+                ckey = (d, "powers", qc)
+                chain = chain_cache.get(ckey)
+                if chain is None:
+                    chain = []
+                    chain_cache[ckey] = chain  # type: ignore[index]
+            curve = aggregate_curve(table, len(members), cutoff, chain=chain)
             if curve_cache is not None:
                 curve_cache[key] = curve  # type: ignore[index]
         curves_.append(curve)
-    return curves_
+        keys.append(key)
+    return curves_, keys
 
 
 def _superstage_dp(
@@ -424,23 +772,51 @@ def _superstage_dp(
     dp_vals = np.zeros(1, dtype=np.float64)
     stages: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
     for c_keys, c_vals in stage_curves:
-        raw = (dp_keys[:, None] + c_keys[None, :]).ravel()
-        scores = (dp_vals[:, None] + c_vals[None, :]).ravel()
-        feas = np.flatnonzero(raw <= budget + 1e-9)
-        keys, sel = _dedupe_first_max(_qkey_np(raw[feas]), scores[feas])
-        sel = feas[sel]
-        # keys come back ascending from the stable lexsort dedupe, so the
-        # stage arrays are searchsorted-ready as-is
-        nc = len(c_keys)
-        stages.append((keys, dp_keys[sel // nc], c_keys[sel % nc]))
+        # keys come back ascending from the dedupe, so the stage arrays
+        # are searchsorted-ready as-is
+        keys, vals, parents, spends = _maxplus_pair(
+            dp_keys, dp_vals, c_keys, c_vals, budget
+        )
+        stages.append((keys, parents, spends))
         dp_keys = keys
-        dp_vals = scores[sel]
+        dp_vals = vals
     return dp_keys, dp_vals, stages
 
 
-def _backtrack_superstages(stages: Sequence[tuple], u: float) -> list[float]:
+class _IntStages:
+    """Backtracking record of one leaf solved by the *batched* integer-
+    lattice super-stage DP (:func:`_superstage_dp_batch`).
+
+    Holds, per stage, the dense winner table over the leaf's spend grid
+    plus the descending-spend stage key arrays; :meth:`backtrack` walks
+    them exactly like :func:`_backtrack_superstages` walks sparse stage
+    tuples — same states, same spends, bitwise.
+    """
+
+    __slots__ = ("g", "win", "kb_desc", "keys_desc", "nstages")
+
+    def __init__(self, g, win, kb_desc, keys_desc, nstages):
+        self.g = g
+        self.win = win
+        self.kb_desc = kb_desc
+        self.keys_desc = keys_desc
+        self.nstages = nstages
+
+    def backtrack(self, u: float) -> list[float]:
+        t = int(round(u * 1e6)) // self.g
+        spends = [0.0] * self.nstages
+        for s in range(self.nstages - 1, -1, -1):
+            j = int(self.win[s][t])
+            spends[s] = float(self.keys_desc[s][j])
+            t -= int(self.kb_desc[s][j])
+        return spends
+
+
+def _backtrack_superstages(stages, u: float) -> list[float]:
     """Walk the super-stage DP backwards from end state ``u``: the per-stage
     spends realizing it (stage order)."""
+    if isinstance(stages, _IntStages):
+        return stages.backtrack(u)
     spends: list[float] = [0.0] * len(stages)
     for i in range(len(stages) - 1, -1, -1):
         keys, parents, spends_stage = stages[i]
@@ -450,38 +826,172 @@ def _backtrack_superstages(stages: Sequence[tuple], u: float) -> list[float]:
     return spends
 
 
-def _unwind_classes(
-    classes: Sequence[list],
-    curves_: Sequence[_AggCurve],
-    spends: Sequence[float],
-    choice_of: dict[str, tuple[OptionTable, int]],
-) -> None:
-    """Unwind each class spend to its option multiset; ascending picks over
-    name-sorted members == solve_sparse's canonical assignment."""
-    for (table, members, _), curve, spend in zip(classes, curves_, spends):
+def _superstage_dp_batch(
+    jobs: Sequence[tuple[Sequence[tuple[np.ndarray, np.ndarray]], float]],
+) -> list[tuple[np.ndarray, np.ndarray, _IntStages]] | None:
+    """Solve many leaves' super-stage DPs in one vectorized pass.
+
+    ``jobs`` is a list of (stage curves, eff budget) pairs — one per dirty
+    leaf.  All leaves advance through their stages *together*: stage ``s``
+    of every leaf is a single [L, K, NB] gather + argmax on the per-leaf
+    integer spend lattice, replacing L x S per-leaf convolution calls with
+    S batched numpy ops (the sparse-path analogue of the Pallas
+    ``maxplus_conv_batched`` dispatch).  Per-leaf results — frontier keys,
+    values and backtracking stages — are **bitwise identical** to running
+    :func:`_superstage_dp` on each leaf alone: the candidate sets, float64
+    adds and (value desc, a-spend asc) tie-breaking are data-parallel
+    across leaves, padding rows are exact identities (+0.0), and per-leaf
+    feasibility masks mirror the per-stage pruning.  Returns None when any
+    leaf's keys leave the integer lattice or the padded grid would be
+    degenerate — callers then fall back to the per-leaf path.
+    """
+    L = len(jobs)
+    per_leaf = []
+    nb_max = 1
+    s_max = 1
+    k_max = 1
+    for stage_curves, eff in jobs:
+        ints = []
+        g = 0
+        for ck, cv in stage_curves:
+            ia = _micro_int(ck)
+            if ia is None or not len(ia):
+                return None
+            ints.append(ia)
+            g = int(np.gcd(g, np.gcd.reduce(ia)))
+        if g <= 0:
+            g = 1
+        bound = np.floor((eff + 1e-9) * 1e6 / g)
+        if not np.isfinite(bound) or bound < 0:
+            return None
+        tmax = int(bound)
+        if tmax + 1 > _INT_LATTICE_MAX_STATES // max(1, L):
+            return None
+        nb_max = max(nb_max, tmax + 1)
+        s_max = max(s_max, len(stage_curves))
+        stages_desc = []
+        for ia, (ck, cv) in zip(ints, stage_curves):
+            keep = np.flatnonzero(ia // g <= tmax)
+            if not len(keep):
+                return None
+            kb = (ia[keep] // g)[::-1].copy()
+            stages_desc.append(
+                (kb, cv[keep][::-1].copy(), ck[keep][::-1].copy())
+            )
+            k_max = max(k_max, len(kb))
+        per_leaf.append((g, tmax, stages_desc))
+
+    kmax_glob = 0
+    for g, tmax, stages_desc in per_leaf:
+        for kb, _, _ in stages_desc:
+            kmax_glob = max(kmax_glob, int(kb[0]) if len(kb) else 0)
+    if L * nb_max * k_max > _INT_LATTICE_MAX_STATES * 8:
+        # the per-stage [L, NB, K] candidate tile would be huge; the
+        # per-leaf path (chunked _maxplus_pair_int) handles such grids
+        return None
+
+    dp = np.full((L, kmax_glob + nb_max), -np.inf)
+    dp[:, kmax_glob] = 0.0
+    t_grid = np.arange(nb_max)
+    leaf_idx = np.arange(L)[:, None, None]
+    results_win: list[np.ndarray] = []
+    for s in range(s_max):
+        kbr = np.zeros((L, k_max), dtype=np.int64)
+        vbr = np.full((L, k_max), -np.inf)
+        for li, (g, tmax, stages_desc) in enumerate(per_leaf):
+            if s < len(stages_desc):
+                kb, vb, _ = stages_desc[s]
+                kbr[li, : len(kb)] = kb
+                vbr[li, : len(vb)] = vb
+            else:
+                vbr[li, 0] = 0.0  # identity stage: spend 0, value +0.0
+        # [L, NB, K] layout: the options axis is contiguous, so the
+        # tie-breaking argmax (first max over descending spends) is a
+        # cache-friendly row reduction
+        idx = t_grid[None, :, None] - kbr[:, None, :] + kmax_glob
+        cand = dp[leaf_idx, idx]
+        cand += vbr[:, None, :]
+        jr = np.argmax(cand, axis=2)
+        out = np.take_along_axis(cand, jr[:, :, None], axis=2)[:, :, 0]
+        for li, (g, tmax, _) in enumerate(per_leaf):
+            if tmax + 1 < nb_max:
+                out[li, tmax + 1 :] = -np.inf
+        dp[:, kmax_glob:] = out
+        results_win.append(jr.astype(np.int32))
+
+    out_final = dp[:, kmax_glob:]
+    results = []
+    for li, (g, tmax, stages_desc) in enumerate(per_leaf):
+        feas = np.flatnonzero(out_final[li, : tmax + 1] > -np.inf)
+        dp_keys = (feas * g).astype(np.float64) * 1e-6
+        dp_vals = out_final[li, feas].copy()
+        stages = _IntStages(
+            g=g,
+            win=[results_win[s][li] for s in range(len(stages_desc))],
+            kb_desc=[kb for kb, _, _ in stages_desc],
+            keys_desc=[ks for _, _, ks in stages_desc],
+            nstages=len(stages_desc),
+        )
+        results.append((dp_keys, dp_vals, stages))
+    return results
+
+
+def _class_picks(
+    table: OptionTable,
+    curve: _AggCurve,
+    curve_key: tuple,
+    spend: float,
+    pick_cache: MutableMapping | None,
+) -> tuple[list, np.ndarray, np.ndarray]:
+    """One class's canonical pick column at ``spend``: name-sorted members
+    get the option multiset in ascending-cost order.  Returns (pick tuples,
+    costs, values) aligned with the class's sorted members — memoized by
+    (curve content key, quantized spend) so unchanged classes skip the
+    binary-split unwind entirely on warm rounds."""
+    pkey = (curve_key, _qkey(spend))
+    hit = pick_cache.get(pkey) if pick_cache is not None else None
+    if hit is None:
         js: list[int] = []
         curve.unwind(spend, js)
-        for name, j in zip(sorted(members), sorted(js)):
-            choice_of[name] = (table, j)
+        js.sort()
+        pt = _pick_tuples(table)
+        hit = ([pt[j] for j in js], table.costs[js], table.values[js])
+        if pick_cache is not None:
+            pick_cache[pkey] = hit
+    return hit
 
 
-def _assemble_choices(
-    choice_of: dict[str, tuple[OptionTable, int]],
-) -> MCKPSolution:
-    """Canonical stage-order accumulation (bit-for-bit the ungrouped form)."""
-    picks: dict[str, tuple[float, float, tuple[float, float]]] = {}
-    total = 0.0
-    spent = 0.0
-    for name in sorted(choice_of):
-        table, j = choice_of[name]
-        picks[name] = (
-            float(table.costs[j]),
-            float(table.values[j]),
-            (float(table.caps[j, 0]), float(table.caps[j, 1])),
-        )
-        total += float(table.values[j])
-        spent += float(table.costs[j])
-    return MCKPSolution(total_value=total, spent=spent, picks=picks)
+def _assemble_plan(
+    plan: _LeafPlan,
+    curve_keys: Sequence[tuple],
+    curves_: Sequence[_AggCurve],
+    spends: Sequence[float],
+    pick_cache: MutableMapping | None,
+) -> tuple[dict, float, float]:
+    """Canonical assembly of one plan's solution: picks dict over the
+    name-sorted members plus (total_value, spent) accumulated in that same
+    order — bit-for-bit the ungrouped ``solve_sparse`` form (sequential
+    float64 adds via cumsum == the scalar left fold)."""
+    if not plan.names_sorted:
+        return {}, 0.0, 0.0
+    tuples_parts: list[list] = []
+    costs_parts: list[np.ndarray] = []
+    vals_parts: list[np.ndarray] = []
+    for (table, _, _), ckey, curve, spend in zip(
+        plan.classes, curve_keys, curves_, spends
+    ):
+        tups, costs, vals = _class_picks(table, curve, ckey, spend, pick_cache)
+        tuples_parts.append(tups)
+        costs_parts.append(costs)
+        vals_parts.append(vals)
+    flat_tuples = [t for part in tuples_parts for t in part]
+    order = plan.order
+    picks = dict(zip(plan.names_sorted, (flat_tuples[i] for i in order)))
+    costs = np.concatenate(costs_parts)[order]
+    vals = np.concatenate(vals_parts)[order]
+    total = float(np.cumsum(vals)[-1])
+    spent = float(np.cumsum(costs)[-1])
+    return picks, total, spent
 
 
 def solve_sparse_grouped(
@@ -489,6 +999,9 @@ def solve_sparse_grouped(
     budget: float,
     *,
     curve_cache: MutableMapping | None = None,
+    pick_cache: MutableMapping | None = None,
+    plan_cache: MutableMapping | None = None,
+    chain_cache: MutableMapping | None = None,
 ) -> MCKPSolution:
     """Group-collapsed Algorithm 1: one DP super-stage per behaviour class.
 
@@ -499,19 +1012,26 @@ def solve_sparse_grouped(
     per-group spends unwind into option multisets assigned to name-sorted
     members in ascending-cost order (the sparse solver's canonical form).
 
-    ``curve_cache`` (a mutable mapping, e.g. a controller's warm dict)
-    memoizes aggregate curves keyed by (digest, m, quantized budget).
+    All three caches are optional warm state (mutable mappings, e.g. a
+    controller's LRU dicts): ``curve_cache`` memoizes aggregate curves by
+    (digest, m, quantized budget), ``pick_cache`` memoizes unwound pick
+    multisets by (curve key, quantized spend), and ``plan_cache`` memoizes
+    merged-class layouts by group-token tuple — together they make a
+    steady-state re-solve cost O(changed classes), not O(cluster).
     """
-    classes = _merge_classes(groups)
-    curves_ = _class_curves(classes, budget, curve_cache)
+    plan = _leaf_plan(groups, plan_cache)
+    curves_, curve_keys = _class_curves(
+        plan.classes, budget, curve_cache, chain_cache
+    )
     dp_keys, dp_vals, stages = _superstage_dp(
         [(c.keys, c.vals) for c in curves_], budget
     )
     u = float(dp_keys[int(np.argmax(dp_vals))])
     spends = _backtrack_superstages(stages, u)
-    choice_of: dict[str, tuple[OptionTable, int]] = {}
-    _unwind_classes(classes, curves_, spends, choice_of)
-    return _assemble_choices(choice_of)
+    picks, total, spent = _assemble_plan(
+        plan, curve_keys, curves_, spends, pick_cache
+    )
+    return MCKPSolution(total_value=total, spent=spent, picks=picks)
 
 
 # ---------------------------------------------------------------------------
@@ -543,33 +1063,269 @@ class DomainGroups:
             )
 
 
+class HierState:
+    """Persistent warm state for (incremental) hierarchical sparse solving.
+
+    Every cache is *content-keyed* — digests + multiplicities + quantized
+    budgets for curves/frontiers, content tokens for the aggregation-tree
+    combines, group-identity tokens for plans and leaf solutions — so a
+    warm re-solve is **bit-for-bit** the from-scratch solve: a cache entry
+    is only ever reused for inputs under which it would be recomputed
+    identically.  A steady-state round therefore costs O(what changed):
+
+     * an unchanged leaf reuses its frontier DP and its assembled solution;
+     * a changed leaf re-runs its class super-stages and re-aggregates
+       through the balanced frontier **aggregation tree**, recombining only
+       the O(log n_leaves) tree nodes on its root path;
+     * unchanged classes inside a dirty leaf still reuse their aggregate
+       curves and unwound pick multisets.
+
+    All caches are LRU-bounded so long scenarios with drifting budgets or
+    digests cannot grow warm state without bound.
+    """
+
+    def __init__(
+        self,
+        curve_cache: MutableMapping | None = None,
+        frontier_cache: MutableMapping | None = None,
+        *,
+        chain_cache: MutableMapping | None = None,
+        pick_cache: MutableMapping | None = None,
+        plan_cache: MutableMapping | None = None,
+        max_curves: int = 1024,
+        max_frontiers: int = 512,
+        max_picks: int = 8192,
+        max_leaf_solutions: int = 128,
+        max_plans: int = 256,
+    ):
+        self.curve_cache: MutableMapping = (
+            LRUCache(max_curves) if curve_cache is None else curve_cache
+        )
+        #: (digest, budget) -> doubling chain, shielded from (d, m) churn
+        self.chain_cache: MutableMapping = (
+            LRUCache(512) if chain_cache is None else chain_cache
+        )
+        self.frontier_cache: MutableMapping = (
+            LRUCache(max_frontiers) if frontier_cache is None else frontier_cache
+        )
+        #: (left token, right token, quantized cap) -> combined frontier
+        self.comb_cache: MutableMapping = LRUCache(max_frontiers)
+        self.pick_cache: MutableMapping = (
+            LRUCache(max_picks) if pick_cache is None else pick_cache
+        )
+        #: (leaf token, plan key, spends) -> (picks, total, spent)
+        self.leaf_sol_cache: MutableMapping = LRUCache(max_leaf_solutions)
+        self.plan_cache: MutableMapping = (
+            LRUCache(max_plans) if plan_cache is None else plan_cache
+        )
+        self._tokens: dict = {}
+        self._next_token = itertools.count(1)
+
+    def token(self, content) -> int:
+        """Intern hashable content to a small process-unique int.
+
+        Tokens are never reused (the counter outlives table resets), so a
+        stale cache entry keyed by an old token can never collide with new
+        content — it just ages out of its LRU."""
+        t = self._tokens.get(content)
+        if t is None:
+            if len(self._tokens) > (1 << 20):
+                self._tokens.clear()
+            t = next(self._next_token)
+            self._tokens[content] = t
+        return t
+
+    def cache_sizes(self) -> dict[str, int]:
+        return {
+            "curves": len(self.curve_cache),
+            "frontiers": len(self.frontier_cache),
+            "combines": len(self.comb_cache),
+            "picks": len(self.pick_cache),
+            "leaf_solutions": len(self.leaf_sol_cache),
+            "plans": len(self.plan_cache),
+        }
+
+    def clear(self) -> None:
+        for c in (
+            self.curve_cache,
+            self.chain_cache,
+            self.frontier_cache,
+            self.comb_cache,
+            self.pick_cache,
+            self.leaf_sol_cache,
+            self.plan_cache,
+        ):
+            c.clear()
+        self._tokens.clear()
+
+
+class _CombNode:
+    """One node of the balanced frontier aggregation tree.
+
+    Wrapper nodes (``leaf`` set) adapt a child domain's frontier; internal
+    nodes hold a (max,+)-combined frontier with per-state (left, right)
+    spend splits for backtracking.  The tree shape is a deterministic
+    function of the child count (adjacent pairs, odd tail carried up), so
+    content-addressed memoization of each combine makes replacing one
+    dirty child cost O(log n_children) convolutions.
+    """
+
+    __slots__ = ("keys", "vals", "back_left", "back_right", "left", "right", "leaf")
+
+    def __init__(self, keys, vals, back_left=None, back_right=None,
+                 left=None, right=None, leaf=None):
+        self.keys: np.ndarray = keys
+        self.vals: np.ndarray = vals
+        self.back_left = back_left
+        self.back_right = back_right
+        self.left: _CombNode | None = left
+        self.right: _CombNode | None = right
+        self.leaf: "_SparseFrontier | None" = leaf
+
+
 class _SparseFrontier:
     """A domain's value-vs-spend frontier with backtracking state.
 
     ``keys``/``vals`` are the capped frontier (ascending quantized spends,
-    best value at each — exactly a super-stage DP's final state).  Leaves
-    keep their classes/curves for unwinding; internal domains keep child
-    frontiers.  ``stages`` backtracks the domain's own DP.
+    best value at each).  Leaves keep their plan/curves/stages for
+    unwinding; internal domains keep their children plus the aggregation
+    tree (``comb``) that combined them.  ``token`` is the content token
+    the parent's combine cache keys on.
     """
 
-    __slots__ = ("dom", "keys", "vals", "stages", "classes", "curves", "children")
+    __slots__ = (
+        "dom", "keys", "vals", "stages", "plan", "curves", "curve_keys",
+        "token", "comb", "children",
+    )
 
-    def __init__(self, dom, keys, vals, stages, classes=None, curves=None,
+    def __init__(self, dom, keys, vals, *, stages=None, plan=None,
+                 curves=None, curve_keys=None, token=None, comb=None,
                  children=None):
         self.dom: DomainGroups = dom
         self.keys: np.ndarray = keys
         self.vals: np.ndarray = vals
-        self.stages: list = stages
-        self.classes = classes
+        self.stages: list | None = stages
+        self.plan: _LeafPlan | None = plan
         self.curves = curves
+        self.curve_keys = curve_keys
+        self.token: int | None = token
+        self.comb: _CombNode | None = comb
         self.children: list["_SparseFrontier"] | None = children
 
 
+def _combine_frontiers(
+    subs: Sequence[_SparseFrontier], eff: float, state: HierState
+) -> tuple[_CombNode, int]:
+    """Fold child frontiers through the balanced aggregation tree under
+    cap ``eff``.  Returns the root node and its content token."""
+    nodes = [
+        _CombNode(keys=f.keys, vals=f.vals, leaf=f) for f in subs
+    ]
+    tokens = [f.token for f in subs]
+    effk = _qkey(eff)
+    while len(nodes) > 1:
+        nxt: list[_CombNode] = []
+        ntok: list[int] = []
+        for i in range(0, len(nodes) - 1, 2):
+            key = (tokens[i], tokens[i + 1], effk)
+            hit = state.comb_cache.get(key)
+            if hit is None:
+                hit = _maxplus_pair(
+                    nodes[i].keys, nodes[i].vals,
+                    nodes[i + 1].keys, nodes[i + 1].vals, eff,
+                )
+                state.comb_cache[key] = hit
+            nxt.append(
+                _CombNode(
+                    keys=hit[0], vals=hit[1], back_left=hit[2],
+                    back_right=hit[3], left=nodes[i], right=nodes[i + 1],
+                )
+            )
+            ntok.append(state.token(("comb",) + key))
+        if len(nodes) % 2:
+            nxt.append(nodes[-1])
+            ntok.append(tokens[-1])
+        nodes, tokens = nxt, ntok
+    return nodes[0], tokens[0]
+
+
+def _comb_spends(
+    node: _CombNode, u: float, out: list[tuple[_SparseFrontier, float]]
+) -> None:
+    """Split a chosen spend ``u`` down the aggregation tree into per-child
+    (frontier, spend) pairs in original child order."""
+    if node.leaf is not None:
+        out.append((node.leaf, u))
+        return
+    i = int(np.searchsorted(node.keys, u))
+    _comb_spends(node.left, float(node.back_left[i]), out)
+    _comb_spends(node.right, float(node.back_right[i]), out)
+
+
+def _domain_eff(dom: DomainGroups, budget: float) -> float:
+    """Effective spend cap of a domain under its parent's budget — the one
+    clamping rule shared by the frontier builders and the batched-leaf
+    pre-walks (divergence here would silently misalign their grids)."""
+    eff = min(float(dom.cap), float(budget))
+    return eff if eff > 0.0 else 0.0
+
+
+def _prime_leaf_frontiers(
+    root: DomainGroups, budget: float, state: HierState
+) -> None:
+    """Batched single-dispatch solve of every *dirty* leaf DP.
+
+    Walks the domain tree computing each leaf's effective cap, collects
+    the leaves whose frontier isn't cached, and solves them all through
+    :func:`_superstage_dp_batch` — priming the frontier cache so the
+    subsequent recursive build is all hits.  A steady-state round with k
+    dirty leaves pays one batched dispatch instead of k per-leaf stage
+    loops.  No-op (falling back to the per-leaf path) on non-lattice
+    instances.
+    """
+    jobs: list[tuple[_LeafPlan, float, tuple]] = []
+    seen: set = set()
+
+    def walk(dom: DomainGroups, b: float) -> None:
+        eff = _domain_eff(dom, b)
+        if dom.children:
+            for c in dom.children:
+                walk(c, eff)
+            return
+        if not dom.groups:
+            return
+        plan = _leaf_plan(dom.groups, state.plan_cache)
+        key = (plan.layout, _qkey(eff))
+        if key in seen or state.frontier_cache.get(key) is not None:
+            return
+        seen.add(key)
+        jobs.append((plan, eff, key))
+
+    walk(root, float(budget))
+    if len(jobs) < 2:
+        return
+    prepared = []
+    for plan, eff, key in jobs:
+        curves_, curve_keys = _class_curves(
+            plan.classes, eff, state.curve_cache, state.chain_cache
+        )
+        prepared.append((plan, eff, key, curves_, curve_keys))
+    batch = _superstage_dp_batch(
+        [
+            ([(c.keys, c.vals) for c in curves_], eff)
+            for _, eff, _, curves_, _ in prepared
+        ]
+    )
+    if batch is None:
+        return
+    for (plan, eff, key, curves_, curve_keys), (dp_keys, dp_vals, stages) in zip(
+        prepared, batch
+    ):
+        state.frontier_cache[key] = (curves_, curve_keys, dp_keys, dp_vals, stages)
+
+
 def _sparse_frontier(
-    dom: DomainGroups,
-    budget: float,
-    curve_cache: MutableMapping | None,
-    frontier_cache: MutableMapping | None,
+    dom: DomainGroups, budget: float, state: HierState
 ) -> _SparseFrontier:
     """Capped frontier of one domain: its best-value-per-spend staircase,
     restricted to spends <= min(domain cap, parent budget).
@@ -577,57 +1333,75 @@ def _sparse_frontier(
     A leaf's frontier is the class super-stage DP of its groups — the same
     arrays ``solve_sparse_grouped`` ends on, so a single root domain with
     cap >= budget reproduces the flat grouped solve bit-for-bit.  An
-    internal domain convolves its children's frontiers under its own cap
-    (the "upper-level DP").  ``frontier_cache`` memoizes leaf DPs by
-    (per-class digest+multiplicity layout, quantized budget) — the
-    hierarchical analogue of the aggregate-curve cache.
+    internal domain folds its children's frontiers through the balanced
+    aggregation tree under its own cap (the "upper-level DP").  Leaf DPs
+    memoize by (per-class digest+multiplicity layout, quantized budget);
+    tree combines by the child content tokens — both in ``state``.
     """
-    eff = min(float(dom.cap), float(budget))
-    if eff < 0.0:
-        eff = 0.0
+    eff = _domain_eff(dom, budget)
     if dom.children:
-        subs = [
-            _sparse_frontier(c, eff, curve_cache, frontier_cache)
-            for c in dom.children
-        ]
-        dp_keys, dp_vals, stages = _superstage_dp(
-            [(f.keys, f.vals) for f in subs], eff
+        subs = [_sparse_frontier(c, eff, state) for c in dom.children]
+        comb, token = _combine_frontiers(subs, eff, state)
+        return _SparseFrontier(
+            dom, comb.keys, comb.vals, token=token, comb=comb, children=subs
         )
-        return _SparseFrontier(dom, dp_keys, dp_vals, stages, children=subs)
-    classes = _merge_classes(dom.groups)
-    key = (
-        tuple((d, len(members)) for _, members, d in classes),
-        _qkey(eff),
-    )
-    hit = frontier_cache.get(key) if frontier_cache is not None else None
+    plan = _leaf_plan(dom.groups, state.plan_cache)
+    key = (plan.layout, _qkey(eff))
+    hit = state.frontier_cache.get(key)
     if hit is None:
-        curves_ = _class_curves(classes, eff, curve_cache)
+        curves_, curve_keys = _class_curves(
+            plan.classes, eff, state.curve_cache, state.chain_cache
+        )
         dp_keys, dp_vals, stages = _superstage_dp(
             [(c.keys, c.vals) for c in curves_], eff
         )
-        hit = (curves_, dp_keys, dp_vals, stages)
-        if frontier_cache is not None:
-            frontier_cache[key] = hit  # type: ignore[index]
-    curves_, dp_keys, dp_vals, stages = hit
+        hit = (curves_, curve_keys, dp_keys, dp_vals, stages)
+        state.frontier_cache[key] = hit  # type: ignore[index]
+    curves_, curve_keys, dp_keys, dp_vals, stages = hit
     return _SparseFrontier(
-        dom, dp_keys, dp_vals, stages, classes=classes, curves=curves_
+        dom, dp_keys, dp_vals, stages=stages, plan=plan, curves=curves_,
+        curve_keys=curve_keys, token=state.token(("leaf", key)),
     )
 
 
 def _backtrack_frontier(
     f: _SparseFrontier,
     u: float,
-    choice_of: dict[str, tuple[OptionTable, int]],
+    state: HierState,
+    picks: dict[str, tuple[float, float, tuple[float, float]]],
     domain_spent: dict[str, float],
+    leaf_totals: list[tuple[float, float]],
 ) -> None:
-    """Walk a chosen spend ``u`` down the frontier tree to receiver picks."""
+    """Walk a chosen spend ``u`` down the frontier tree to receiver picks.
+
+    Leaf solutions (picks + canonically-accumulated totals) memoize by
+    (leaf content token, membership plan key, per-class spends): an
+    unchanged leaf whose budget share didn't move contributes its cached
+    dict without re-unwinding a single class.
+    """
     domain_spent[f.dom.name] = u
-    spends = _backtrack_superstages(f.stages, u)
     if f.children is not None:
-        for child, s in zip(f.children, spends):
-            _backtrack_frontier(child, s, choice_of, domain_spent)
-    else:
-        _unwind_classes(f.classes, f.curves, spends, choice_of)
+        pairs: list[tuple[_SparseFrontier, float]] = []
+        _comb_spends(f.comb, u, pairs)
+        for sub, s in pairs:
+            _backtrack_frontier(sub, s, state, picks, domain_spent, leaf_totals)
+        return
+    spends = _backtrack_superstages(f.stages, u)
+    skey = None
+    if f.plan.key is not None:
+        skey = (f.token, f.plan.key, tuple(spends))
+        hit = state.leaf_sol_cache.get(skey)
+        if hit is not None:
+            picks.update(hit[0])
+            leaf_totals.append((hit[1], hit[2]))
+            return
+    lp, lt, ls = _assemble_plan(
+        f.plan, f.curve_keys, f.curves, spends, state.pick_cache
+    )
+    if skey is not None:
+        state.leaf_sol_cache[skey] = (lp, lt, ls)
+    picks.update(lp)
+    leaf_totals.append((lt, ls))
 
 
 def solve_hierarchical(
@@ -638,30 +1412,46 @@ def solve_hierarchical(
     unit: float = 1.0,
     curve_cache: MutableMapping | None = None,
     frontier_cache: MutableMapping | None = None,
+    state: HierState | None = None,
 ) -> MCKPSolution:
     """Two-level topology-aware MCKP over a power-domain tree.
 
     Per-domain group-collapsed aggregate tables become capped value-vs-spend
-    frontiers; an upper-level DP convolves sibling frontiers to split each
-    parent's budget subject to every domain's local cap, then backtracks
-    down to the per-receiver picks.  Every domain's spend is <= its cap by
-    construction, and with a single root domain whose cap >= the cluster
-    budget the result is **bit-for-bit** ``solve_sparse_grouped``
-    (``solver='sparse'``) / ``solve_dense_jax_grouped`` (``solver='jax'`` /
-    ``'pallas'``) — certified by tests/test_hier_alloc.py.
+    frontiers; the upper-level DP folds sibling frontiers through a
+    balanced aggregation tree to split each parent's budget subject to
+    every domain's local cap, then backtracks down to the per-receiver
+    picks.  Every domain's spend is <= its cap by construction, and with a
+    single root domain whose cap >= the cluster budget the result is
+    **bit-for-bit** ``solve_sparse_grouped`` (``solver='sparse'``) /
+    ``solve_dense_jax_grouped`` (``solver='jax'`` / ``'pallas'``) —
+    certified by tests/test_hier_alloc.py.
+
+    Passing a persistent :class:`HierState` makes warm re-solves
+    incremental (O(what changed) — see the class docstring) while staying
+    bit-for-bit equal to a from-scratch call; ``curve_cache`` /
+    ``frontier_cache`` remain accepted as standalone warm mappings.
 
     Returns a solution whose ``domain_spent`` maps each domain name to the
     watts spent inside it.
     """
     if solver == "sparse":
-        f = _sparse_frontier(root, float(budget), curve_cache, frontier_cache)
+        st = state if state is not None else HierState(curve_cache, frontier_cache)
+        _prime_leaf_frontiers(root, float(budget), st)
+        f = _sparse_frontier(root, float(budget), st)
         u = float(f.keys[int(np.argmax(f.vals))])
-        choice_of: dict[str, tuple[OptionTable, int]] = {}
+        picks: dict[str, tuple[float, float, tuple[float, float]]] = {}
         domain_spent: dict[str, float] = {}
-        _backtrack_frontier(f, u, choice_of, domain_spent)
-        sol = _assemble_choices(choice_of)
-        sol.domain_spent = domain_spent
-        return sol
+        leaf_totals: list[tuple[float, float]] = []
+        _backtrack_frontier(f, u, st, picks, domain_spent, leaf_totals)
+        total = 0.0
+        spent = 0.0
+        for lt, ls in leaf_totals:
+            total += lt
+            spent += ls
+        return MCKPSolution(
+            total_value=total, spent=spent, picks=picks,
+            domain_spent=domain_spent,
+        )
     if solver in ("jax", "pallas"):
         return _solve_hier_dense(root, float(budget), unit=unit, backend=solver)
     raise ValueError(f"unknown hierarchical solver {solver!r}")
@@ -991,22 +1781,124 @@ def _conv_full(dp: np.ndarray, f: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     return _stage_maxplus(dp, np.arange(len(f)), f, chunk=512)
 
 
+#: padded-element ceiling for the single-dispatch batched leaf solve
+#: (L x N x NB argmax tables); beyond it leaves solve one by one
+_BATCH_LEAF_MAX_ELEMS = 150_000_000
+
+
+@functools.cache
+def _ref_scan_batched_fn():
+    """Jitted jax-reference batched leaf scan, built once per process —
+    re-jitting per call would retrace the whole scan every round."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ref as kref
+
+    @jax.jit
+    def run(f_banks, gids):
+        rows_idx = jnp.arange(f_banks.shape[0])
+
+        def stage(dp, gid_col):
+            rows = f_banks[rows_idx, gid_col]
+            out, arg = jax.vmap(kref.maxplus_conv)(dp, rows)
+            return out, arg
+
+        dp0 = jnp.zeros(
+            (f_banks.shape[0], f_banks.shape[2]), dtype=f_banks.dtype
+        )
+        dp_final, args = jax.lax.scan(stage, dp0, gids.T)
+        return dp_final, args.swapaxes(0, 1)
+
+    return run
+
+
+def _batch_dense_leaves(
+    root: DomainGroups, budget: float, unit: float, backend: str
+) -> dict[int, tuple]:
+    """Single-dispatch batched solve of every non-empty leaf's gather scan.
+
+    Collects each leaf's (groups, eff) pair, densifies every leaf's class
+    curves on the *widest* leaf grid, pads class banks with the identity
+    curve and stage sequences with the identity class id, and runs one
+    ``ops.maxplus_scan_batched`` (or the jax reference equivalent) for all
+    leaves.  Per-leaf slices are bitwise what the per-leaf scan returns:
+    grid positions past a leaf's own budget never influence positions
+    inside it, and identity stages are exact (+0.0) no-ops.  Returns
+    {id(dom): (layout, dp_final, args)}; empty when batching is
+    inapplicable (single leaf, or padded size beyond the ceiling).
+    """
+    leaves: list[tuple[DomainGroups, float]] = []
+
+    def walk(dom: DomainGroups, b: float) -> None:
+        eff = _domain_eff(dom, b)
+        if dom.children:
+            for c in dom.children:
+                walk(c, eff)
+        elif dom.groups:
+            leaves.append((dom, eff))
+
+    walk(root, float(budget))
+    if len(leaves) < 2:
+        return {}
+    nbs = [int(np.floor(eff / unit + 1e-9)) + 1 for _, eff in leaves]
+    nb_max = max(nbs)
+    layouts = [
+        _grouped_dense_layout(dom.groups, (nb_max - 1) * unit, unit)
+        for dom, _ in leaves
+    ]
+    g_max = max(lay[3].shape[0] for lay in layouts)
+    n_max = max(len(lay[1]) for lay in layouts)
+    if len(leaves) * n_max * nb_max > _BATCH_LEAF_MAX_ELEMS:
+        return {}
+    identity = np.full(nb_max, -np.inf)
+    identity[0] = 0.0
+    f_banks = np.empty((len(leaves), g_max + 1, nb_max), dtype=np.float64)
+    gids_pad = np.empty((len(leaves), n_max), dtype=np.int32)
+    for li, lay in enumerate(layouts):
+        _, stage_gids, _, f_groups, _ = lay
+        g_l, n_l = f_groups.shape[0], len(stage_gids)
+        f_banks[li, :g_l] = f_groups
+        f_banks[li, g_l:] = identity
+        gids_pad[li, :n_l] = stage_gids
+        gids_pad[li, n_l:] = g_l  # identity stage: dp + 0.0
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+
+        dp_all, args_all = kops.maxplus_scan_batched(f_banks, gids_pad)
+    else:
+        dp_all, args_all = _ref_scan_batched_fn()(f_banks, gids_pad)
+    dp_all = np.asarray(dp_all)
+    args_all = np.asarray(args_all)
+    out: dict[int, tuple] = {}
+    for li, ((dom, _), lay, nb) in enumerate(zip(leaves, layouts, nbs)):
+        n_l = len(lay[1])
+        out[id(dom)] = (lay, dp_all[li, :nb], args_all[li, :n_l, :nb])
+    return out
+
+
 def _dense_frontier(
-    dom: DomainGroups, budget: float, unit: float, backend: str
+    dom: DomainGroups,
+    budget: float,
+    unit: float,
+    backend: str,
+    batched: dict[int, tuple] | None = None,
 ) -> _DenseFrontier:
     """Capped dense frontier of one domain on the ``unit``-watt grid.
 
     A leaf runs the repeated-stage gather scan of its groups (the same
     convolutions as ``solve_dense_jax_grouped``, so a single root with
-    cap >= budget is bitwise identical to the flat solve); an internal
-    domain convolves its children's truncated frontiers in numpy.
+    cap >= budget is bitwise identical to the flat solve) — or picks up
+    its slice of the single-dispatch batched solve when one ran; an
+    internal domain convolves its children's truncated frontiers in numpy.
     """
-    eff = min(float(dom.cap), float(budget))
-    if eff < 0.0:
-        eff = 0.0
+    eff = _domain_eff(dom, budget)
     nb = int(np.floor(eff / unit + 1e-9)) + 1
     if dom.children:
-        subs = [_dense_frontier(c, eff, unit, backend) for c in dom.children]
+        subs = [
+            _dense_frontier(c, eff, unit, backend, batched)
+            for c in dom.children
+        ]
         dp = np.zeros(nb, dtype=np.float64)
         args: list[np.ndarray] = []
         for sub in subs:
@@ -1018,6 +1910,10 @@ def _dense_frontier(
         f = np.full(nb, -np.inf)
         f[0] = 0.0
         return _DenseFrontier(dom, f, None, layout=None)
+    hit = batched.get(id(dom)) if batched else None
+    if hit is not None:
+        layout, dp_final, args_arr = hit
+        return _DenseFrontier(dom, dp_final, args_arr, layout=layout)
     layout = _grouped_dense_layout(dom.groups, eff, unit)
     _, stage_gids, _, f_groups, _ = layout
     dp_final, args = _jax_dp_gather(f_groups, stage_gids, backend=backend)
@@ -1054,7 +1950,8 @@ def _solve_hier_dense(
     backend: str = "jax",
 ) -> MCKPSolution:
     """Dense-grid hierarchical solve (see :func:`solve_hierarchical`)."""
-    fr = _dense_frontier(root, budget, unit, backend)
+    batched = _batch_dense_leaves(root, budget, unit, backend)
+    fr = _dense_frontier(root, budget, unit, backend, batched)
     b = int(np.argmax(fr.f))
     total = float(fr.f[b])
     picks: dict[str, tuple[float, float, tuple[float, float]]] = {}

@@ -177,6 +177,15 @@ class ReceiverBatch:
     one surface *object* per receiver.  Receivers sharing a surface
     identity and baseline collapse into one option table / DP super-stage
     (DESIGN.md §11).
+
+    **Delta contract** (DESIGN.md §13): batches carry a process-globally
+    unique monotone ``seq`` (so a controller reused across sims can never
+    confuse their chains).  When the engine derived this batch by patching the previous
+    one, ``prev_seq`` names it, ``delta`` lists the positions whose
+    surface/baseline changed (new receivers included), and ``removed`` the
+    instance names no longer present — so an incremental controller whose
+    grouping state is warm at ``prev_seq`` applies O(churn) updates.
+    ``delta is None`` means "no provable bound": rebuild from scratch.
     """
 
     names: Sequence[str]
@@ -186,15 +195,26 @@ class ReceiverBatch:
     #: per-receiver owning-leaf power-domain id (preorder index into the
     #: sim's PowerTopology); None when the cluster has no topology
     domain_ids: np.ndarray | None = None
+    #: monotone batch sequence number (0 = standalone batch)
+    seq: int = 0
+    #: seq of the batch this one was delta-derived from (None = fresh)
+    prev_seq: int | None = None
+    #: positions changed vs the prev_seq batch; None = unbounded change
+    delta: tuple[int, ...] | None = None
+    #: names present at prev_seq but absent here
+    removed: tuple[str, ...] = ()
 
     def __len__(self) -> int:
         return len(self.names)
 
     def baselines_map(self) -> dict[str, tuple[float, float]]:
-        return {
-            name: (float(self.baselines[i, 0]), float(self.baselines[i, 1]))
-            for i, name in enumerate(self.names)
-        }
+        """name -> baseline caps dict, memoized on the (reused) batch."""
+        m = self.__dict__.get("_baselines_map")
+        if m is None:
+            pairs = self.baselines.tolist()
+            m = dict(zip(self.names, map(tuple, pairs)))
+            object.__setattr__(self, "_baselines_map", m)
+        return m
 
 
 def validate_allocation(
@@ -211,16 +231,30 @@ def validate_allocation(
     2. every cap is inside the feasible grid range
     3. total extra power <= budget
     """
-    extra = 0.0
-    for name, (c, g) in alloc.caps.items():
-        c0, g0 = baselines[name]
-        if c < c0 - atol or g < g0 - atol:
-            raise ValueError(f"{name}: caps ({c},{g}) below baseline ({c0},{g0})")
-        if not (grid.cpu_min - atol <= c <= grid.cpu_max + atol):
-            raise ValueError(f"{name}: cpu cap {c} outside grid")
-        if not (grid.gpu_min - atol <= g <= grid.gpu_max + atol):
-            raise ValueError(f"{name}: gpu cap {g} outside grid")
-        extra += (c - c0) + (g - g0)
+    names = list(alloc.caps.keys())
+    if not names:
+        if 0.0 > budget + atol:
+            raise ValueError(f"allocation spends 0.0 W > budget {budget} W")
+        return
+    cg = np.array([alloc.caps[nm] for nm in names], dtype=np.float64)
+    base = np.array([baselines[nm] for nm in names], dtype=np.float64)
+    below = (cg < base - atol).any(axis=1)
+    if below.any():
+        i = int(np.flatnonzero(below)[0])
+        c, g = cg[i]
+        c0, g0 = base[i]
+        raise ValueError(
+            f"{names[i]}: caps ({c},{g}) below baseline ({c0},{g0})"
+        )
+    bad_c = (cg[:, 0] < grid.cpu_min - atol) | (cg[:, 0] > grid.cpu_max + atol)
+    if bad_c.any():
+        i = int(np.flatnonzero(bad_c)[0])
+        raise ValueError(f"{names[i]}: cpu cap {cg[i, 0]} outside grid")
+    bad_g = (cg[:, 1] < grid.gpu_min - atol) | (cg[:, 1] > grid.gpu_max + atol)
+    if bad_g.any():
+        i = int(np.flatnonzero(bad_g)[0])
+        raise ValueError(f"{names[i]}: gpu cap {cg[i, 1]} outside grid")
+    extra = float(np.cumsum((cg - base).sum(axis=1))[-1])
     if extra > budget + atol:
         raise ValueError(f"allocation spends {extra} W > budget {budget} W")
 

@@ -61,6 +61,83 @@ def _maxplus_kernel(dp_pad_ref, f_ref, out_ref, arg_ref, *, block_b: int, nb: in
     arg_ref[...] = arg
 
 
+def _maxplus_kernel_batched(
+    dp_pad_ref, f_ref, out_ref, arg_ref, *, block_b: int, nb: int
+):
+    i = pl.program_id(1)
+    b0 = i * block_b
+
+    def body(k, carry):
+        acc, arg = carry
+        # per-row contiguous sliding window: dp[r, b - k] for the block
+        col = dp_pad_ref[0, pl.dslice(nb + b0 - k, block_b)]
+        fk = f_ref[0, pl.dslice(k, 1)]  # [1], broadcasts
+        cand = col + fk
+        better = cand > acc
+        acc = jnp.where(better, cand, acc)
+        arg = jnp.where(better, k, arg)
+        return acc, arg
+
+    acc0 = jnp.full((block_b,), -jnp.inf, dtype=out_ref.dtype)
+    arg0 = jnp.zeros((block_b,), dtype=jnp.int32)
+    acc, arg = jax.lax.fori_loop(0, nb, body, (acc0, arg0))
+    out_ref[0, ...] = acc
+    arg_ref[0, ...] = arg
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def maxplus_conv_pallas_batched(
+    dp: jax.Array,
+    f: jax.Array,
+    *,
+    block_b: int = 256,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Row-batched (max,+) convolution: one kernel launch for R rounds.
+
+    dp, f: [R, NB].  out[r, b] = max_{k<=b} dp[r, b-k] + f[r, k], plus the
+    per-row argmax — each row identical to :func:`maxplus_conv_pallas` on
+    that row alone.  The grid adds a leading row dimension, so R
+    independent DP stages (e.g. all dirty rack leaves of a hierarchical
+    solve) share a single dispatch instead of a vmap of R launches.
+    """
+    if dp.ndim != 2 or dp.shape != f.shape:
+        raise ValueError(f"dp/f must be equal-shape 2D, got {dp.shape} {f.shape}")
+    r, nb = dp.shape
+    dp = dp.astype(jnp.float32)
+    f = f.astype(jnp.float32)
+    nblocks = pl.cdiv(nb, block_b)
+    nb_pad = nblocks * block_b
+    neg = jnp.asarray(-jnp.inf, jnp.float32)
+    dp_pad = jnp.concatenate(
+        [
+            jnp.full((r, nb), neg),
+            dp,
+            jnp.full((r, nb_pad - nb), neg),
+        ],
+        axis=1,
+    )
+
+    out, arg = pl.pallas_call(
+        functools.partial(_maxplus_kernel_batched, block_b=block_b, nb=nb),
+        grid=(r, nblocks),
+        in_specs=[
+            pl.BlockSpec((1, dp_pad.shape[1]), lambda ri, i: (ri, 0)),
+            pl.BlockSpec((1, nb), lambda ri, i: (ri, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_b), lambda ri, i: (ri, i)),
+            pl.BlockSpec((1, block_b), lambda ri, i: (ri, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, nb_pad), jnp.float32),
+            jax.ShapeDtypeStruct((r, nb_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(dp_pad, f)
+    return out[:, :nb], arg[:, :nb]
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def maxplus_conv_pallas(
     dp: jax.Array,

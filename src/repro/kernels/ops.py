@@ -27,18 +27,18 @@ def maxplus_conv(dp: jax.Array, f: jax.Array, *, block_b: int = 256):
 
 
 def maxplus_conv_batched(dp: jax.Array, f: jax.Array, *, block_b: int = 256):
-    """Batched (max,+) stage: vmap of the Pallas kernel over a leading dim.
+    """Batched (max,+) stage: one row-batched Pallas launch.
 
-    dp, f: [R, NB].  Returns (out [R, NB], argmax_k [R, NB]).  Each stage
-    of ``repro.core.mckp.solve_dense_jax_batch`` runs through this to solve
-    many independent DP rounds (budget sweeps, scenario traces) at once.
+    dp, f: [R, NB].  Returns (out [R, NB], argmax_k [R, NB]) — each row
+    bitwise what ``maxplus_conv`` computes for it alone (the kernel body
+    is identical; the grid just grows a leading row dimension).  Each
+    stage of ``repro.core.mckp.solve_dense_jax_batch`` and of the batched
+    hierarchical leaf solve runs through this to advance many independent
+    DPs in a single dispatch.
     """
-    interpret = not _on_tpu()
-    return jax.vmap(
-        lambda d, fr: _mckp_dp.maxplus_conv_pallas(
-            d, fr, block_b=block_b, interpret=interpret
-        )
-    )(dp, f)
+    return _mckp_dp.maxplus_conv_pallas_batched(
+        dp, f, block_b=block_b, interpret=not _on_tpu()
+    )
 
 
 @functools.cache
@@ -58,6 +58,53 @@ def _maxplus_scan_fn(block_b: int, interpret: bool):
         return jax.lax.scan(stage, dp0, gids)
 
     return run
+
+
+@functools.cache
+def _maxplus_scan_batched_fn(block_b: int, interpret: bool):
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def run(f_groups, gids):
+        # f_groups: [L, G, NB]; gids: [L, N]
+        n_leaves = f_groups.shape[0]
+        rows_idx = jnp.arange(n_leaves)
+
+        def stage(dp, gid_col):  # dp: [L, NB]; gid_col: [L]
+            rows = f_groups[rows_idx, gid_col]
+            out, arg = _mckp_dp.maxplus_conv_pallas_batched(
+                dp, rows, block_b=block_b, interpret=interpret
+            )
+            return out, arg
+
+        dp0 = jnp.zeros(
+            (f_groups.shape[0], f_groups.shape[2]), dtype=f_groups.dtype
+        )
+        dp_final, args = jax.lax.scan(stage, dp0, gids.T)
+        return dp_final, args.swapaxes(0, 1)
+
+    return run
+
+
+def maxplus_scan_batched(f_groups, stage_gids, *, block_b: int = 256):
+    """Ragged batched repeated-stage (max,+) DP scan over many leaves.
+
+    f_groups: [L, G, NB] per-leaf class curve banks (leaves padded to a
+    shared class count and budget grid — pad rows must be the identity
+    curve [0, -inf, ...]); stage_gids: [L, N] int32 per-leaf stage class
+    ids (padded stages gather the identity row, which leaves the DP
+    bitwise unchanged).  Returns (dp_final [L, NB], argmax_k [L, N, NB]).
+
+    One jitted scan whose every stage is a single row-batched Pallas
+    dispatch: the per-leaf Python loop of the hierarchical dense solve
+    collapses into one accelerator call for all dirty leaves, and each
+    leaf's row is bitwise what ``maxplus_scan`` returns for it alone.
+    """
+    import jax.numpy as jnp
+
+    run = _maxplus_scan_batched_fn(block_b, not _on_tpu())
+    return run(f_groups, jnp.asarray(stage_gids))
 
 
 def maxplus_scan(f_groups, stage_gids, *, block_b: int = 256):

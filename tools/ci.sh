@@ -27,3 +27,7 @@ python -m benchmarks.cluster_scaling --fast \
 echo "== hierarchical allocation bench (fast tiers; regression guard vs committed JSON) =="
 python -m benchmarks.hier_alloc --fast \
   --check BENCH_hier_alloc.json --out BENCH_hier_alloc.json
+
+echo "== incremental allocation bench (fast tiers; parity + regression guard vs committed JSON) =="
+python -m benchmarks.incremental_alloc --fast \
+  --check BENCH_incremental_alloc.json --out BENCH_incremental_alloc.json

@@ -1,0 +1,115 @@
+"""Per-phase wall-clock breakdown of cluster redistribution rounds.
+
+Runs a short scenario at a chosen scale/topology and prints, per round,
+the engine's phase timings (``ClusterSim.last_round_profile``):
+
+    partition  donor/receiver split + per-domain headroom accounting
+    batch      receiver-batch materialization (delta-patched when warm)
+    allocate   the controller's solve (grouping + DP + assembly)
+    conserve   sim-side per-domain draw accounting / cap enforcement
+    measure    vectorized measurement + telemetry emission
+
+plus a cProfile top-N of one steady-state round, so future perf PRs can
+see exactly where round time goes before touching anything.
+
+    PYTHONPATH=src python tools/profile_round.py [--nodes 10000]
+        [--racks 16] [--churn 0.01] [--rounds 6] [--policy ecoshift_hier]
+        [--from-scratch] [--top 20]
+"""
+
+from __future__ import annotations
+
+import argparse
+import cProfile
+import io
+import os
+import pstats
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import get_suite  # noqa: E402
+from benchmarks.incremental_alloc import (  # noqa: E402
+    _budget,
+    _churn_events,
+    _sim,
+    _topology,
+)
+from repro.cluster.controller import make_controller  # noqa: E402
+
+PHASES = ("partition_s", "batch_s", "allocate_s", "conserve_s", "measure_s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=10000)
+    ap.add_argument("--racks", type=int, default=16,
+                    help="0 = flat (no topology)")
+    ap.add_argument("--churn", type=float, default=0.01,
+                    help="per-round churn fraction (0 = event-free)")
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--policy", default=None,
+                    help="controller policy (default: ecoshift_hier with "
+                    "racks, ecoshift flat)")
+    ap.add_argument("--from-scratch", action="store_true",
+                    help="profile the incremental=False baseline instead")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+
+    system, apps, surfs = get_suite("system1-a100")
+    n = args.nodes
+    budget = _budget(n)
+    topo = (
+        _topology(system, apps, surfs, n, args.racks, budget)
+        if args.racks > 0
+        else None
+    )
+    policy = args.policy or ("ecoshift_hier" if topo is not None else "ecoshift")
+    sim = _sim(system, apps, surfs, n, topology=topo)
+    ctrl = make_controller(policy, system, incremental=not args.from_scratch)
+
+    rng = np.random.default_rng(11)
+    _, recv, _ = sim.partition_rows()
+    recv_apps = sorted(
+        {sim.table.strings[g] for g in sim.table.base_gid[recv]}
+    )
+    app_by_name = {a.name: a for a in apps}
+    racks = (
+        [d.name for d in topo.domains if d.is_leaf] if topo is not None else None
+    )
+
+    def one_round(r: int) -> float:
+        if args.churn > 0 and r >= 1:
+            ev = _churn_events(
+                sim, rng, r, int(n * args.churn), recv_apps, app_by_name, racks
+            )
+            touched = sim.apply_events(ev)
+            ctrl.invalidate(touched)
+        t0 = time.perf_counter()
+        sim.run_round(ctrl, budget=budget, round_index=r)
+        return time.perf_counter() - t0
+
+    header = "round  total_ms  " + "  ".join(p[:-2] for p in PHASES)
+    print(f"{policy} n={n} racks={args.racks} churn={args.churn:.1%} "
+          f"incremental={not args.from_scratch}")
+    print(header)
+    for r in range(args.rounds):
+        total = one_round(r)
+        prof = sim.last_round_profile
+        cols = "  ".join(f"{prof.get(p, 0.0) * 1e3:9.1f}" for p in PHASES)
+        print(f"{r:5d}  {total * 1e3:8.1f}  {cols}")
+
+    pr = cProfile.Profile()
+    pr.enable()
+    one_round(args.rounds)
+    pr.disable()
+    s = io.StringIO()
+    pstats.Stats(pr, stream=s).sort_stats("cumulative").print_stats(args.top)
+    print(s.getvalue())
+
+
+if __name__ == "__main__":
+    main()

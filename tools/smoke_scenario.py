@@ -8,10 +8,14 @@ columnar engine: a 6-round scenario with failure/straggler/arrival under
 its own wall-clock guard, plus a grouped-vs-legacy allocation parity spot
 check), the **4-rack hierarchical tier** (1k nodes under binding rack/PDU
 caps with a mid-run ``DomainCapChange`` derating; every round must respect
-every domain cap), and exercises the online-prediction path: a cold-start
-arrival (no pretrained surface) converging under the ``ecoshift_online``
-controller within a handful of telemetry rounds.  Exits nonzero on any
-regression; hard wall-clock budget < 60 s.
+every domain cap), the **low-churn incremental tier** (1k nodes through a
+sparse event trickle: the delta-driven incremental controller must match
+the from-scratch controller bit-for-bit every round and beat it decisively
+on steady-state rounds, DESIGN.md §13), and exercises the
+online-prediction path: a cold-start arrival (no pretrained surface)
+converging under the ``ecoshift_online`` controller within a handful of
+telemetry rounds.  Exits nonzero on any regression; hard wall-clock
+budget < 60 s.
 
     PYTHONPATH=src python tools/smoke_scenario.py
 """
@@ -29,6 +33,7 @@ from repro.cluster import (
     PowerTopology,
     Scenario,
 )
+from repro.cluster import scenario as types_scenario
 from repro.cluster.controller import make_controller
 from repro.core import ncf, surfaces, types
 from repro.core.allocator import EcoShiftAllocator
@@ -41,6 +46,9 @@ SCALING_BUDGET_S = 15.0
 
 #: wall-clock guard for the 4-rack hierarchical tier alone
 HIER_BUDGET_S = 15.0
+
+#: wall-clock guard for the low-churn incremental tier alone
+INCR_BUDGET_S = 15.0
 
 
 def scaling_smoke(system, apps, surfs) -> None:
@@ -135,6 +143,64 @@ def hier_smoke(system, apps, surfs) -> None:
         f"in {elapsed:.1f} s, caps respected every round "
         f"(rack2 derated to {derated:.0f} W at round 3), "
         f"avg_improvement={imp.mean() * 100:.1f}%"
+    )
+
+
+def incremental_smoke(system, apps, surfs) -> None:
+    """Low-churn 1k-node steady-state tier (DESIGN.md §13): the delta-driven
+    incremental controller must (a) allocate bit-for-bit like the
+    from-scratch controller through a sparse event trickle, and (b) be
+    decisively faster on the event-free steady-state rounds."""
+    n = 1000
+    t0 = time.perf_counter()
+    times = {True: [], False: []}
+    pair = []
+    for inc in (True, False):
+        sim = ClusterSim.build(
+            system, apps, surfs, n_nodes=n, seed=0,
+            initial_caps=(150.0, 150.0),
+        )
+        ctrl = make_controller("ecoshift", system, incremental=inc)
+        pair.append((sim, ctrl))
+    scen_events = {
+        2: [types_scenario.StragglerOnset(round=2, node_id=500, slowdown=1.7)],
+        4: [types_scenario.PhaseChange(
+            round=4, node_id=123, surface_id=apps[1].name)],
+        6: [types_scenario.NodeFailure(round=6, node_ids=(7, 8))],
+    }
+    for r in range(8):
+        allocs = []
+        for sim, ctrl in pair:
+            ev = scen_events.get(r, [])
+            if ev:
+                touched = sim.apply_events(ev)
+                ctrl.invalidate(touched)
+            t1 = time.perf_counter()
+            res = sim.run_round(ctrl, budget=2000.0, round_index=r)
+            times[ctrl.incremental].append(time.perf_counter() - t1)
+            allocs.append(res)
+        a, b = allocs
+        assert dict(a.allocation.caps) == dict(b.allocation.caps), (
+            f"incremental != from-scratch at round {r}"
+        )
+        assert a.allocation.spent == b.allocation.spent
+    # steady-state rounds (no events, warm): 1, 3, 5, 7
+    steady_inc = float(np.median([times[True][r] for r in (1, 3, 5, 7)]))
+    steady_scr = float(np.median([times[False][r] for r in (1, 3, 5, 7)]))
+    elapsed = time.perf_counter() - t0
+    assert elapsed < INCR_BUDGET_S, (
+        f"incremental tier took {elapsed:.1f} s (guard {INCR_BUDGET_S} s)"
+    )
+    # generous floor for shared runners; the >=5x acceptance runs in
+    # benchmarks.incremental_alloc at the 10k tier
+    assert steady_scr / steady_inc >= 1.5, (
+        f"incremental steady-state round only "
+        f"{steady_scr / steady_inc:.1f}x faster than from-scratch"
+    )
+    print(
+        f"increment {n} nodes x 8 rounds in {elapsed:.1f} s, parity OK, "
+        f"steady-state {steady_inc * 1e3:.1f} ms vs from-scratch "
+        f"{steady_scr * 1e3:.1f} ms ({steady_scr / steady_inc:.1f}x)"
     )
 
 
@@ -242,6 +308,8 @@ def main() -> None:
     scaling_smoke(system, apps, surfs)
 
     hier_smoke(system, apps, surfs)
+
+    incremental_smoke(system, apps, surfs)
 
     online_prediction_smoke(system, apps, surfs)
 
