@@ -46,6 +46,7 @@ from repro.core.surfaces import PowerSurface
 from repro.core.types import (
     Allocation,
     AppSpec,
+    FusedRoundStats,
     ReceiverBatch,
     SystemSpec,
     as_receiver_order,
@@ -403,6 +404,7 @@ class EcoShiftController(_OptionCachingController):
         allocator=None,
         grouped: bool = True,
         incremental: bool = True,
+        fused: bool = False,
     ):
         super().__init__(system)
         self.solver = solver
@@ -417,6 +419,44 @@ class EcoShiftController(_OptionCachingController):
         #: False re-collapses and re-solves from scratch every round (the
         #: PR-4-style baseline the incremental_alloc bench compares against)
         self.incremental = incremental
+        #: device-resident fused rounds (DESIGN.md §14): keep option banks
+        #: resident on device and run the whole warm-round decision
+        #: pipeline as one jitted Pallas program, falling back to the host
+        #: sparse path on structure changes.  Requires ``incremental`` and
+        #: ``solver='sparse'`` — otherwise silently ignored.
+        self.fused = fused
+        #: resident device banks + shape signature for the fused rounds
+        self._fused_state = mckp.FusedState()
+        #: 'fused' | 'host' — which path produced the last solution
+        self.last_solver: str | None = None
+        #: device seconds spent inside the last fused pipeline call (0.0
+        #: for host rounds and alloc-cache hits)
+        self.last_device_s: float = 0.0
+
+    def invalidate(self, names: Sequence[str] | None = None) -> None:
+        super().invalidate(names)
+        if names is None:
+            self._fused_state.clear()
+
+    def fused_stats(self) -> FusedRoundStats:
+        """Snapshot of the device-resident round counters."""
+        return FusedRoundStats(**self._fused_state.stats)
+
+    def _try_fused_grouped(self, groups, budget) -> mckp.MCKPSolution | None:
+        """One fused-round attempt; returns None to use the host path."""
+        fstate = self._fused_state
+        d0 = fstate.stats["device_s"]
+        sol = mckp.solve_grouped_fused(
+            groups,
+            budget,
+            fstate=fstate,
+            curve_cache=self._agg_curves,
+            pick_cache=self._pick_cache,
+            plan_cache=self._plan_cache,
+            chain_cache=self._chain_cache,
+        )
+        self.last_device_s = fstate.stats["device_s"] - d0
+        return sol
 
     @property
     def supports_grouped(self) -> bool:  # type: ignore[override]
@@ -469,20 +509,28 @@ class EcoShiftController(_OptionCachingController):
             )
             hit = self._alloc_cache.get(key)
             if hit is not None:
+                self.last_solver = "cache"
+                self.last_device_s = 0.0
                 return hit
         else:
             groups = self._grouped_options_for(batch)
             key = None
-        sol = mckp.solve_grouped(
-            groups,
-            budget,
-            solver=self.solver,
-            unit=self.unit,
-            curve_cache=self._agg_curves,
-            pick_cache=self._pick_cache if incremental else None,
-            plan_cache=self._plan_cache if incremental else None,
-            chain_cache=self._chain_cache if incremental else None,
-        )
+        sol = None
+        self.last_device_s = 0.0
+        if incremental and self.fused:
+            sol = self._try_fused_grouped(groups, budget)
+        self.last_solver = "fused" if sol is not None else "host"
+        if sol is None:
+            sol = mckp.solve_grouped(
+                groups,
+                budget,
+                solver=self.solver,
+                unit=self.unit,
+                curve_cache=self._agg_curves,
+                pick_cache=self._pick_cache if incremental else None,
+                plan_cache=self._plan_cache if incremental else None,
+                chain_cache=self._chain_cache if incremental else None,
+            )
         alloc = policies_mod.allocation_from_solution(
             sol, batch.baselines_map(), budget, self.system.grid
         )
@@ -559,10 +607,11 @@ class EcoShiftHierController(EcoShiftController):
         predictor=None,
         allocator=None,
         incremental: bool = True,
+        fused: bool = False,
     ):
         super().__init__(
             system, solver=solver, unit=unit, allocator=allocator,
-            incremental=incremental,
+            incremental=incremental, fused=fused,
         )
         #: repro.core.topology.PowerTopology (bound here or by the engine)
         self.topology = topology
@@ -683,20 +732,33 @@ class EcoShiftHierController(EcoShiftController):
             hit = self._alloc_cache.get(key)
             if hit is not None:
                 self.last_domain_spent = hit[1]
+                self.last_solver = "cache"
+                self.last_device_s = 0.0
                 return hit[0]
             state = self._hier_state
         else:
             by_leaf = self._grouped_options_by_leaf(batch)
         root = policies_mod.domain_tree(self.topology, domain_extra, by_leaf)
-        sol = mckp.solve_hierarchical(
-            root,
-            budget,
-            solver=self.solver,
-            unit=self.unit,
-            curve_cache=self._agg_curves,
-            frontier_cache=self._frontiers,
-            state=state,
-        )
+        sol = None
+        self.last_device_s = 0.0
+        if incremental and self.fused:
+            fstate = self._fused_state
+            d0 = fstate.stats["device_s"]
+            sol = mckp.solve_hierarchical_fused(
+                root, budget, state=self._hier_state, fstate=fstate
+            )
+            self.last_device_s = fstate.stats["device_s"] - d0
+        self.last_solver = "fused" if sol is not None else "host"
+        if sol is None:
+            sol = mckp.solve_hierarchical(
+                root,
+                budget,
+                solver=self.solver,
+                unit=self.unit,
+                curve_cache=self._agg_curves,
+                frontier_cache=self._frontiers,
+                state=state,
+            )
         self.last_domain_spent = sol.domain_spent
         alloc = policies_mod.allocation_from_solution(
             sol, batch.baselines_map(), budget, self.system.grid

@@ -48,6 +48,7 @@ cap — including mid-scenario ``DomainCapChange`` deratings.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import time as _time
 import zlib
@@ -138,6 +139,78 @@ class _Interner:
 _DIRTY_HORIZON = 64
 
 
+@functools.cache
+def _device_patch_fn():
+    """Donated row scatter shared by every device-view column: the donation
+    reuses the resident buffer so a steady-state refresh uploads only the
+    dirty rows."""
+    import jax
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def patch(col, rows, vals):
+        return col.at[rows].set(vals)
+
+    return patch
+
+
+class DeviceView:
+    """Device-resident mirror of the hot :class:`NodeTable` columns.
+
+    The fused steady-state round (DESIGN.md §14) keeps its decision
+    pipeline on device; this view gives the engine the matching residency
+    for the numeric cluster state: ``caps``/``alive``/``slowdown``/
+    ``domain_id`` live as jax device arrays (float64 preserved), and
+    :meth:`refresh` syncs them against the table's dirty-row log — one
+    donated row scatter per changed column in steady state, a full
+    re-upload only on growth or an unprovable delta.  Counters
+    (``uploads_full`` / ``uploads_rows``) expose the churn boundary to
+    profiling tools.
+    """
+
+    _COLS = ("caps", "alive", "slowdown", "domain_id")
+
+    def __init__(self, table: "NodeTable"):
+        self._table = table
+        self.version = -1
+        self._n = -1
+        self.uploads_full = 0
+        self.uploads_rows = 0
+        self.caps = None
+        self.alive = None
+        self.slowdown = None
+        self.domain_id = None
+
+    def refresh(self) -> "DeviceView":
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        t = self._table
+        if t.version == self.version and self._n == len(t):
+            return self
+        dirty = (
+            t.dirty_since(self.version)
+            if self._n == len(t) and self.version >= 0
+            else None
+        )
+        with enable_x64():
+            # patching more than half the table costs more dispatches than
+            # one bulk upload; growth always re-uploads (shapes changed)
+            if dirty is None or len(dirty) > max(1, len(t) // 2):
+                for c in self._COLS:
+                    setattr(self, c, jnp.asarray(getattr(t, c)))
+                self.uploads_full += 1
+            elif len(dirty):
+                rows = jnp.asarray(dirty)
+                patch = _device_patch_fn()
+                for c in self._COLS:
+                    vals = jnp.asarray(getattr(t, c)[dirty])
+                    setattr(self, c, patch(getattr(self, c), rows, vals))
+                self.uploads_rows += int(len(dirty))
+        self.version = t.version
+        self._n = len(t)
+        return self
+
+
 class NodeTable:
     """Struct-of-arrays cluster node state.
 
@@ -174,6 +247,7 @@ class NodeTable:
         self._row_of: dict[int, int] | None = None
         #: (version, dirty row array | None-for-everything) ring
         self._dirty_log: list[tuple[int, np.ndarray | None]] = []
+        self._device_view: DeviceView | None = None
 
     def __len__(self) -> int:
         return len(self.node_ids)
@@ -213,6 +287,13 @@ class NodeTable:
         if not parts:
             return None
         return np.unique(np.concatenate(parts))
+
+    def device_view(self) -> DeviceView:
+        """Refreshed device-resident mirror of the hot numeric columns
+        (lazily created; O(churn) donated row patches in steady state)."""
+        if self._device_view is None:
+            self._device_view = DeviceView(self)
+        return self._device_view.refresh()
 
     @staticmethod
     def from_nodes(nodes: Sequence[NodeState]) -> "NodeTable":
@@ -432,8 +513,9 @@ class ClusterSim:
         #: conservation check and measurement share one gather, and a
         #: cache-hit allocation skips it entirely
         self._alloc_caps_cache: tuple | None = None
-        #: per-phase wall-clock of the latest run_round (tools/profile_round)
-        self.last_round_profile: dict[str, float] = {}
+        #: per-phase wall-clock of the latest run_round plus the fused
+        #: split: alloc_device_s / alloc_solver (tools/profile_round)
+        self.last_round_profile: dict[str, float | str] = {}
         #: telemetry emitted by the latest vectorized-measurement round
         self.last_telemetry: object = ()
         self._views_cache: tuple[int, list[NodeState]] | None = None
@@ -1276,6 +1358,12 @@ class ClusterSim:
                 seen = true_by_inst
             alloc = controller.allocate(recv_apps, baselines, b, seen)
         prof["allocate_s"] = _time.perf_counter() - tp
+        # fused-round split (DESIGN.md §14): seconds inside the jitted
+        # device pipeline and which path produced the solution
+        prof["alloc_device_s"] = float(
+            getattr(controller, "last_device_s", 0.0) or 0.0
+        )
+        prof["alloc_solver"] = getattr(controller, "last_solver", None) or ""
 
         tp = _time.perf_counter()
         if self.topology is not None:

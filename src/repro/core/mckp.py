@@ -1458,6 +1458,633 @@ def solve_hierarchical(
 
 
 # ---------------------------------------------------------------------------
+# Fused device-resident sparse solve (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+#: fused-path grid bound: fall back to host when the padded global spend
+#: grid would exceed this many states (churn storms with tiny gcd pitches)
+_FUSED_MAX_NB = 4096
+
+#: per-stage option-count bound for the padded [S, L, K] device banks
+_FUSED_MAX_OPTS = 1024
+
+
+def _pow2_at_least(n: int, floor: int) -> int:
+    p = floor
+    while p < n:
+        p *= 2
+    return p
+
+
+class FusedState:
+    """Device-resident warm state for the fused steady-state round.
+
+    Holds the padded ``[S, L, K]`` option banks (spend offsets on the
+    shared integer micro-watt lattice + float64 values) as *resident jax
+    device arrays*, the host-side per-row content signatures that drive
+    delta patching, and the reversed per-stage key arrays the host
+    assembly maps device backpointers through.  The churn-boundary
+    contract (DESIGN.md §14):
+
+     * same shape + same row signatures   -> zero upload, straight to the
+       jitted pipeline;
+     * same shape, k rows changed         -> one donated scatter of the k
+       rebuilt rows (O(churn) upload);
+     * shape/topology/layout changed      -> the caller falls back to the
+       host path for this round while the banks rebuild (fused resumes
+       next round).
+
+    ``last_key``/``last_solution`` short-circuit the host assembly when
+    the device decision vector is unchanged round-over-round.
+    """
+
+    def __init__(self):
+        self.shape: tuple | None = None  # static pipeline shape + names
+        self.row_sigs: list | None = None  # [L][S] per-row content sigs
+        self.kb_dev = None  # [S, L, K] int32 device bank (global lattice)
+        self.vb_dev = None  # [S, L, K] float64 device bank
+        self.keys_desc: list | None = None  # [L][S] host reversed key arrays
+        self.g: int = 0  # global micro-watt lattice pitch
+        self.last_key: tuple | None = None
+        self.last_solution: MCKPSolution | None = None
+        #: (curve key tuple) -> (leaf gcd pitch, per-class micro ints)
+        self._leaf_ints: dict = {}
+        #: row sig -> (kb_glob desc, vals desc, keys desc)
+        self._row_cache: dict = {}
+        self.stats: dict = {
+            "rounds": 0,
+            "fallbacks": 0,
+            "row_uploads": 0,
+            "short_circuits": 0,
+            "device_s": 0.0,
+        }
+
+    def clear(self) -> None:
+        self.shape = None
+        self.row_sigs = None
+        self.kb_dev = None
+        self.vb_dev = None
+        self.keys_desc = None
+        self.g = 0
+        self.last_key = None
+        self.last_solution = None
+        self._leaf_ints.clear()
+        self._row_cache.clear()
+
+
+@functools.cache
+def _fused_patch_fn():
+    """Donated row scatter: patch changed (stage, leaf) rows of a resident
+    bank in place (the donation reuses the device buffer, so steady-state
+    churn uploads only the dirty rows, never the whole bank)."""
+    import jax
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def patch(bank, s_idx, l_idx, rows):
+        return bank.at[s_idx, l_idx].set(rows)
+
+    return patch
+
+
+@functools.cache
+def _fused_pipeline_fn(
+    use_tree: bool, L: int, S: int, K: int, NB: int, NBT: int, block_b: int,
+    interpret: bool,
+):
+    """Build the jitted fused round for one static shape.
+
+    One XLA program: batched leaf super-stage DPs (Pallas sparse-option
+    (max,+) stages with backpointer outputs), the balanced frontier
+    aggregation tree (the same kernel with dense descending offsets),
+    the root argmax, and the index-based backtrack — device gathers
+    through the recorded backpointer tables instead of a host Python
+    unwind.  Mirrors ``_superstage_dp_batch`` + ``_combine_frontiers`` +
+    ``_backtrack_superstages`` op for op (float64, first-max argmax,
+    per-stage feasibility masks), so its decisions are bit-for-bit the
+    sparse host path's.
+
+    Two lattice grids keep the work proportional to the *support*: leaf
+    DPs and backtracking run on the per-leaf grid ``NB`` (max leaf spend
+    + 1), the aggregation tree on ``NBT >= NB`` (root-cut/leaf-sum
+    bound), and each tree level enumerates only ``K_level`` right-spend
+    offsets — the static support bound of its right subtrees.  Dropped
+    grid tails and offsets are provably ``-inf`` (beyond every reachable
+    spend sum), so values, first-max winners and backpointers of every
+    reachable state are bitwise unchanged versus the single-grid form.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import mckp_dp as _mk
+
+    # static balanced aggregation-tree shape: adjacent pairs, odd tail
+    # up; per level, the right subtrees' leaf counts bound the spend
+    # support the combine must enumerate
+    levels: list[tuple[int, int, int]] = []
+    if use_tree:
+        sizes = [1] * L
+        while len(sizes) > 1:
+            pairs, odd = len(sizes) // 2, len(sizes) % 2
+            k_level = min(
+                NBT,
+                max(sizes[2 * p + 1] for p in range(pairs)) * (NB - 1) + 1,
+            )
+            levels.append((pairs, odd, k_level))
+            sizes = [
+                sizes[2 * p] + sizes[2 * p + 1] for p in range(pairs)
+            ] + (sizes[-1:] if odd else [])
+
+    @jax.jit
+    def run(kb, vb, tmax_leaf, tcut_root):
+        t_idx = jnp.arange(NB)
+        rows_i = jnp.arange(L)
+        neg = jnp.asarray(-jnp.inf, vb.dtype)
+        dp0 = jnp.full((L, NB), neg).at[:, 0].set(0.0)
+
+        def stage(dp, skv):
+            kb_s, vb_s = skv
+            out, arg = _mk.maxplus_stage_pallas_batched(
+                dp, kb_s, vb_s, block_b=block_b, interpret=interpret
+            )
+            # per-leaf feasibility mask after every stage == the host
+            # batch's out[li, tmax+1:] = -inf
+            out = jnp.where(t_idx[None, :] > tmax_leaf[:, None], neg, out)
+            return out, arg
+
+        dp, wins = jax.lax.scan(stage, dp0, (kb, vb))  # wins: [S, L, NB]
+
+        # frontier aggregation tree: each combine is the same sparse-option
+        # kernel with the dense descending offset row (b-spend descending ==
+        # the dict DP's smallest-a-spend tie-break), pruned at the root cap
+        t_idx_tree = jnp.arange(NBT)
+        tree_block = min(NBT, 256)
+        cur = jnp.concatenate(
+            [dp, jnp.full((L, NBT - NB), neg)], axis=1
+        ) if NBT > NB else dp
+        wins_tree = []
+        for pairs, odd, k_level in levels:
+            left = cur[0 : 2 * pairs : 2]
+            right = cur[1 : 2 * pairs : 2]
+            comb_desc = jnp.arange(k_level - 1, -1, -1, dtype=jnp.int32)
+            ckb = jnp.broadcast_to(comb_desc[None, :], (pairs, k_level))
+            cvb = right[:, k_level - 1 :: -1]
+            out, arg = _mk.maxplus_stage_pallas_batched(
+                left, ckb, cvb, block_b=tree_block, interpret=interpret
+            )
+            out = jnp.where(t_idx_tree[None, :] > tcut_root, neg, out)
+            wins_tree.append(arg)
+            cur = (
+                jnp.concatenate([out, cur[2 * pairs :]], axis=0) if odd else out
+            )
+
+        root_row = cur[0]
+        t_root = jnp.argmax(root_row).astype(jnp.int32)  # first max
+        root_val = root_row[t_root]
+
+        # tree backtrack: split t down the static structure via gathers
+        ts = [t_root]
+        for (pairs, odd, k_level), win in zip(
+            reversed(levels), reversed(wins_tree)
+        ):
+            prev = []
+            for p in range(pairs):
+                j = win[p, ts[p]]
+                t_r = (k_level - 1 - j).astype(jnp.int32)
+                prev.extend([(ts[p] - t_r).astype(jnp.int32), t_r])
+            if odd:
+                prev.append(ts[pairs])
+            ts = prev
+        t_leaf = jnp.stack(ts) if len(ts) > 1 else jnp.reshape(t_root, (1,))
+
+        # leaf backtrack: walk the backpointer tables stage-by-stage, the
+        # device-gather analogue of _IntStages.backtrack
+        def bstep(t, skw):
+            kb_s, win_s = skw
+            j = win_s[rows_i, t]
+            return (t - kb_s[rows_i, j]).astype(jnp.int32), j.astype(jnp.int32)
+
+        _, js_rev = jax.lax.scan(bstep, t_leaf, (kb[::-1], wins[::-1]))
+        js = js_rev[::-1].swapaxes(0, 1)  # [L, S]
+        return t_root, t_leaf, js, root_val
+
+    return run
+
+
+def _fused_leaf_rows(
+    spec: tuple, fstate: FusedState
+) -> tuple[int, int, list] | None:
+    """Per-leaf lattice prep, mirroring ``_superstage_dp_batch``'s per-job
+    block: micro-int class keys, the leaf gcd pitch, and the per-stage
+    descending (offsets, values, keys) rows.  None routes to host."""
+    name, eff, plan, curves_, curve_keys = spec
+    lkey = tuple(curve_keys)
+    ent = fstate._leaf_ints.get(lkey)
+    if ent is None:
+        ints = []
+        g_l = 0
+        for c in curves_:
+            ia = _micro_int(c.keys)
+            if ia is None or not len(ia):
+                return None
+            ints.append(ia)
+            g_l = int(np.gcd(g_l, np.gcd.reduce(ia)))
+        all_zero = g_l == 0  # every class key is 0.0: the leaf can only spend 0
+        if g_l <= 0:
+            g_l = 1
+        if len(fstate._leaf_ints) > 1024:
+            fstate._leaf_ints.clear()
+        ent = (g_l, ints, all_zero)
+        fstate._leaf_ints[lkey] = ent
+    g_l, ints, all_zero = ent
+    if all_zero:
+        tmax_host = 0  # zero-spend leaf: one state, any lattice pitch fits
+    else:
+        bound = np.floor((eff + 1e-9) * 1e6 / g_l)
+        if not np.isfinite(bound) or bound < 0:
+            return None
+        tmax_host = int(bound)
+    rows = []
+    for s, (ia, curve, ckey) in enumerate(zip(ints, curves_, curve_keys)):
+        sig = (ckey, g_l, tmax_host)
+        row = fstate._row_cache.get(sig)
+        if row is None:
+            keep = np.flatnonzero(ia // g_l <= tmax_host)
+            if not len(keep):
+                return None
+            kb = (ia[keep] // g_l)[::-1].copy()  # leaf-lattice units
+            row = (
+                kb,
+                curve.vals[keep][::-1].copy(),
+                curve.keys[keep][::-1].copy(),
+                sig,
+            )
+            if len(fstate._row_cache) > 4096:
+                fstate._row_cache.clear()
+            fstate._row_cache[sig] = row
+        rows.append(row)
+    return g_l, tmax_host, rows, all_zero
+
+
+def _fused_run(
+    specs: list[tuple],
+    eff_root: float,
+    kind: str,
+    root_name: str | None,
+    *,
+    pick_cache: MutableMapping | None,
+    fstate: FusedState,
+    st: "HierState | None" = None,
+) -> MCKPSolution | None:
+    """One fused device round over prepared leaf specs.
+
+    ``specs``: per-leaf (name, eff, plan, curves, curve_keys) in child
+    order.  ``kind``: 'flat' (grouped solve, no domain accounting),
+    'leaf_root' (hierarchical root that is itself a leaf) or 'two_level'
+    (root + leaf children).  Returns None to route the caller to the
+    host path — on off-lattice keys, oversized grids, or a structure
+    change against the resident banks (which are rebuilt so the *next*
+    round runs fused again).
+    """
+    import time
+
+    import jax
+    import jax.experimental
+    import jax.numpy as jnp
+
+    L = len(specs)
+    if L == 0:
+        return None
+
+    prepped = []
+    for spec in specs:
+        pr = _fused_leaf_rows(spec, fstate)
+        if pr is None:
+            return None
+        prepped.append(pr)
+
+    g = 0
+    for (g_l, _, rows, all_zero) in prepped:
+        if rows and not all_zero:
+            # zero-spend leaves contribute nothing: their only state (0)
+            # sits on every lattice, so they must not shrink the pitch
+            g = int(np.gcd(g, g_l))
+    if g <= 0:
+        g = 1
+
+    s_max = 1
+    k_max = 1
+    nb_needed = 1
+    tmax_dev = np.zeros(L, dtype=np.int32)
+    for li, (g_l, tmax_host, rows, all_zero) in enumerate(prepped):
+        if rows:
+            mult = 1 if all_zero else g_l // g
+            td = tmax_host * mult
+            if td + 1 > _FUSED_MAX_NB:
+                return None
+            tmax_dev[li] = td
+            nb_needed = max(nb_needed, td + 1)
+            s_max = max(s_max, len(rows))
+            for kb, _, _, _ in rows:
+                k_max = max(k_max, len(kb))
+
+    use_tree = kind == "two_level" and L > 1
+    t_cut_root = 0
+    nbt_needed = nb_needed
+    if use_tree:
+        # the exact _maxplus_pair prune: keep combined states whose
+        # reconstructed float64 key is <= eff_root + 1e-9
+        ub = int((eff_root + 1e-9) * 1e6 // g) + 1
+        if ub + 1 > 4 * _FUSED_MAX_NB:
+            return None
+        ks = (np.arange(ub + 2, dtype=np.int64) * g).astype(np.float64) * 1e-6
+        t_cut_root = int(np.flatnonzero(ks <= eff_root + 1e-9).max())
+        # the tree grid only needs the reachable spend-sum support: every
+        # combined state beyond min(root cut, sum of leaf maxima) is -inf
+        nbt_needed = max(
+            nb_needed, min(t_cut_root, int(tmax_dev.sum())) + 1
+        )
+
+    if k_max > _FUSED_MAX_OPTS:
+        return None
+    nb_pad = _pow2_at_least(nb_needed, 16)
+    nbt_pad = _pow2_at_least(nbt_needed, 16) if use_tree else nb_pad
+    if max(nb_pad, nbt_pad) > _FUSED_MAX_NB:
+        return None
+    s_pad = max(1, -(-s_max // 8) * 8)
+    k_pad = _pow2_at_least(max(k_max, 1), 4)
+
+    names = tuple(name for name, *_ in specs)
+    # sticky pads: padding up is always exact (identity stages, -inf
+    # option tails, masked grid tops), so never *shrink* the resident
+    # shape — otherwise budget drift across a pow2 boundary would flap
+    # between rebuild-fallback rounds and recompiles
+    if fstate.shape is not None:
+        pk, pL, ps, pkk, pnb, pnbt = fstate.shape[:6]
+        if (pk, pL) == (kind, L):
+            s_pad = max(s_pad, ps)
+            k_pad = max(k_pad, pkk)
+            nb_pad = max(nb_pad, pnb)
+            nbt_pad = max(nbt_pad, pnbt) if use_tree else nb_pad
+    nbt_pad = max(nbt_pad, nb_pad)
+    # per-leaf class-digest sets: a *new class layout* (new behaviour
+    # class appearing/vanishing in a leaf) is a structure change ->
+    # host-path round + bank rebuild.  Sorted, because the canonical
+    # class order is by min member name: membership churn can permute
+    # classes without changing the set, and a permutation is just row
+    # content the delta-patch path re-uploads.  Multiplicity drift keeps
+    # digests stable and stays on the delta-patch path.
+    digests = tuple(
+        tuple(sorted(e[0] for e in spec[2].layout)) for spec in specs
+    )
+    shape = (kind, L, s_pad, k_pad, nb_pad, nbt_pad, g, names, digests)
+
+    structure_changed = fstate.shape is not None and fstate.shape != shape
+    rebuild = fstate.shape is None or structure_changed
+
+    with jax.experimental.enable_x64():
+        if rebuild:
+            kb_np = np.zeros((s_pad, L, k_pad), dtype=np.int32)
+            vb_np = np.full((s_pad, L, k_pad), -np.inf)
+            vb_np[:, :, 0] = 0.0  # identity padding stages: spend 0, +0.0
+            row_sigs: list[list] = [[None] * s_pad for _ in range(L)]
+            keys_desc: list[list] = [[None] * s_pad for _ in range(L)]
+            for li, (g_l, tmax_host, rows, all_zero) in enumerate(prepped):
+                mult = 1 if all_zero else g_l // g
+                for s, (kb, vb, keys, sig) in enumerate(rows):
+                    n = len(kb)
+                    kb_np[s, li, :n] = kb * mult
+                    vb_np[s, li, :n] = vb
+                    vb_np[s, li, n:] = -np.inf
+                    row_sigs[li][s] = sig
+                    keys_desc[li][s] = keys
+            fstate.kb_dev = jnp.asarray(kb_np)
+            fstate.vb_dev = jnp.asarray(vb_np)
+            fstate.row_sigs = row_sigs
+            fstate.keys_desc = keys_desc
+            fstate.shape = shape
+            fstate.g = g
+            fstate.last_key = None
+            fstate.last_solution = None
+            if structure_changed:
+                # ISSUE contract: layout/topology changes run the host
+                # path this round; the rebuilt banks resume fused next one
+                fstate.stats["fallbacks"] += 1
+                return None
+        else:
+            # delta patch: upload only the rows whose content signature
+            # moved (class churn / headroom drift), via donated scatter
+            s_idx: list[int] = []
+            l_idx: list[int] = []
+            patch_kb: list[np.ndarray] = []
+            patch_vb: list[np.ndarray] = []
+            for li, (g_l, tmax_host, rows, all_zero) in enumerate(prepped):
+                mult = 1 if all_zero else g_l // g
+                for s in range(s_pad):
+                    if s < len(rows):
+                        kb, vb, keys, sig = rows[s]
+                    else:
+                        kb = vb = keys = None
+                        sig = None
+                    if fstate.row_sigs[li][s] == sig:
+                        continue
+                    kbr = np.zeros(k_pad, dtype=np.int32)
+                    vbr = np.full(k_pad, -np.inf)
+                    if kb is None:
+                        vbr[0] = 0.0
+                    else:
+                        kbr[: len(kb)] = kb * mult
+                        vbr[: len(vb)] = vb
+                    s_idx.append(s)
+                    l_idx.append(li)
+                    patch_kb.append(kbr)
+                    patch_vb.append(vbr)
+                    fstate.row_sigs[li][s] = sig
+                    fstate.keys_desc[li][s] = keys
+            if s_idx:
+                patch = _fused_patch_fn()
+                si = jnp.asarray(np.asarray(s_idx, dtype=np.int32))
+                lj = jnp.asarray(np.asarray(l_idx, dtype=np.int32))
+                fstate.kb_dev = patch(
+                    fstate.kb_dev, si, lj, jnp.asarray(np.stack(patch_kb))
+                )
+                fstate.vb_dev = patch(
+                    fstate.vb_dev, si, lj, jnp.asarray(np.stack(patch_vb))
+                )
+                fstate.stats["row_uploads"] += len(s_idx)
+                fstate.last_key = None
+
+        run = _fused_pipeline_fn(
+            use_tree, L, s_pad, k_pad, nb_pad, nbt_pad, min(nb_pad, 256),
+            _interpret(),
+        )
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(
+            run(
+                fstate.kb_dev,
+                fstate.vb_dev,
+                jnp.asarray(tmax_dev),
+                jnp.int32(t_cut_root),
+            )
+        )
+        fstate.stats["device_s"] += time.perf_counter() - t0
+        fstate.stats["rounds"] += 1
+
+    if not np.isfinite(float(out[3])):
+        return None  # no feasible root state: keep the host path authoritative
+    t_root = int(out[0])
+    t_leaf = np.asarray(out[1])
+    js = np.asarray(out[2])
+
+    leaf_meta = []
+    for name, eff, plan, curves_, curve_keys in specs:
+        tok = (
+            st.token(("leaf", (plan.layout, _qkey(eff))))
+            if st is not None
+            else None
+        )
+        leaf_meta.append((tok, plan.key))
+
+    dec_key = (
+        shape,
+        tuple(tuple(rs) for rs in fstate.row_sigs),
+        tuple(leaf_meta),
+        t_root,
+        t_leaf.tobytes(),
+        js.tobytes(),
+    )
+    if dec_key == fstate.last_key and fstate.last_solution is not None:
+        # unchanged device decision vector: the previous solution is the
+        # bit-identical answer — skip the host assembly entirely
+        fstate.stats["short_circuits"] += 1
+        return fstate.last_solution
+
+    picks: dict[str, tuple[float, float, tuple[float, float]]] = {}
+    domain_spent: dict[str, float] | None = (
+        {} if kind in ("two_level", "leaf_root") else None
+    )
+    if kind == "two_level":
+        domain_spent[root_name] = float(np.float64(t_root * g) * 1e-6)
+    leaf_totals: list[tuple[float, float]] = []
+    for li, ((name, eff, plan, curves_, curve_keys), (tok, _pk)) in enumerate(
+        zip(specs, leaf_meta)
+    ):
+        u = float(np.float64(int(t_leaf[li]) * g) * 1e-6)
+        if domain_spent is not None:
+            domain_spent[name] = u
+        n_stages = len(plan.classes)
+        spends = [
+            float(fstate.keys_desc[li][s][int(js[li, s])])
+            for s in range(n_stages)
+        ]
+        skey = None
+        if st is not None and plan.key is not None:
+            skey = (tok, plan.key, tuple(spends))
+            hit = st.leaf_sol_cache.get(skey)
+            if hit is not None:
+                picks.update(hit[0])
+                leaf_totals.append((hit[1], hit[2]))
+                continue
+        lp, lt, ls = _assemble_plan(
+            plan, curve_keys, curves_, spends, pick_cache
+        )
+        if skey is not None:
+            st.leaf_sol_cache[skey] = (lp, lt, ls)
+        picks.update(lp)
+        leaf_totals.append((lt, ls))
+
+    total = 0.0
+    spent = 0.0
+    for lt, ls in leaf_totals:
+        total += lt
+        spent += ls
+    sol = MCKPSolution(
+        total_value=total, spent=spent, picks=picks, domain_spent=domain_spent
+    )
+    fstate.last_key = dec_key
+    fstate.last_solution = sol
+    return sol
+
+
+@functools.cache
+def _interpret() -> bool:
+    import jax
+
+    return jax.default_backend() != "tpu"
+
+
+def solve_grouped_fused(
+    groups: Sequence[GroupedOptions],
+    budget: float,
+    *,
+    fstate: FusedState,
+    curve_cache: MutableMapping | None = None,
+    pick_cache: MutableMapping | None = None,
+    plan_cache: MutableMapping | None = None,
+    chain_cache: MutableMapping | None = None,
+) -> MCKPSolution | None:
+    """Fused device-resident form of :func:`solve_sparse_grouped`.
+
+    Returns the bit-for-bit identical solution, or None to fall back to
+    the host path (off-lattice keys, oversized grids, structure change).
+    """
+    plan = _leaf_plan(groups, plan_cache)
+    curves_, curve_keys = _class_curves(
+        plan.classes, budget, curve_cache, chain_cache
+    )
+    eff = float(budget)
+    specs = [(None, eff, plan, curves_, curve_keys)]
+    sol = _fused_run(
+        specs, eff, "flat", None, pick_cache=pick_cache, fstate=fstate
+    )
+    return sol
+
+
+def solve_hierarchical_fused(
+    root: DomainGroups,
+    budget: float,
+    *,
+    state: HierState,
+    fstate: FusedState,
+) -> MCKPSolution | None:
+    """Fused device-resident form of the two-level sparse
+    :func:`solve_hierarchical`.
+
+    Walks the domain tree on the host exactly like ``_sparse_frontier``
+    (same effective caps, plans and class curves — shared caches), then
+    runs the whole decision pipeline on device.  Returns None to fall
+    back to the host path: deeper-than-two-level trees, off-lattice
+    keys, oversized grids, or a structure change (new class layouts,
+    topology edits) against the resident banks.
+    """
+    eff_root = _domain_eff(root, float(budget))
+    if root.children:
+        if any(c.children for c in root.children):
+            return None
+        leaves = list(root.children)
+        kind = "two_level"
+    else:
+        leaves = [root]
+        kind = "leaf_root"
+    specs = []
+    for dom in leaves:
+        eff = _domain_eff(dom, eff_root)
+        plan = _leaf_plan(dom.groups, state.plan_cache)
+        curves_, curve_keys = _class_curves(
+            plan.classes, eff, state.curve_cache, state.chain_cache
+        )
+        specs.append((dom.name, eff, plan, curves_, curve_keys))
+    return _fused_run(
+        specs,
+        eff_root,
+        kind,
+        root.name,
+        pick_cache=state.pick_cache,
+        fstate=fstate,
+        st=state,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Dense-grid DP (numpy)
 # ---------------------------------------------------------------------------
 

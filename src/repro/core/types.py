@@ -146,6 +146,34 @@ class Allocation:
         return tot
 
 
+@dataclasses.dataclass(frozen=True)
+class FusedRoundStats:
+    """Counters of the device-resident fused round path (DESIGN.md §14).
+
+    Snapshot of a fused controller's warm device state: rounds that ran
+    fully on device, host fallbacks on structure changes (new class
+    layouts, topology edits), dirty rows patched by the donated delta
+    uploads, rounds that short-circuited host assembly on an unchanged
+    decision vector, and cumulative seconds inside the jitted pipeline.
+    """
+
+    rounds: int = 0
+    fallbacks: int = 0
+    row_uploads: int = 0
+    short_circuits: int = 0
+    device_s: float = 0.0
+
+    @property
+    def attempts(self) -> int:
+        return self.rounds + self.fallbacks
+
+    @property
+    def fused_fraction(self) -> float:
+        """Share of attempted fused rounds that stayed on device."""
+        n = self.attempts
+        return self.rounds / n if n else 0.0
+
+
 @dataclasses.dataclass
 class EmulationResult:
     """Outcome of one emulated redistribution round."""

@@ -85,6 +85,111 @@ def _maxplus_kernel_batched(
     arg_ref[0, ...] = arg
 
 
+def _maxplus_stage_kernel_batched(
+    dp_pad_ref, kb_ref, vb_ref, out_ref, arg_ref, *, block_b: int, nb: int,
+    k_opts: int,
+):
+    """Sparse-option (max,+) DP stage with a backpointer output.
+
+    Where :func:`_maxplus_kernel_batched` slides over every grid offset,
+    this kernel iterates only the stage's ``k_opts`` *options* — spend
+    offsets ``kb[j]`` (descending) with values ``vb[j]`` — and emits, per
+    output position, the winning option index ``j`` (first maximizer in
+    option order, i.e. the largest spend among ties: the sparse solvers'
+    dict-DP tie-break).  That argmax row is the *backpointer table* the
+    fused device-resident round gathers through instead of unwinding the
+    DP in host Python (DESIGN.md §14).
+    """
+    i = pl.program_id(1)
+    b0 = i * block_b
+
+    def body(j, carry):
+        acc, arg = carry
+        k = kb_ref[0, j]
+        # per-option contiguous sliding window: dp[b - kb[j]] for the block
+        col = dp_pad_ref[0, pl.dslice(nb + b0 - k, block_b)]
+        vj = vb_ref[0, pl.dslice(j, 1)]  # [1], broadcasts
+        cand = col + vj
+        better = cand > acc
+        acc = jnp.where(better, cand, acc)
+        arg = jnp.where(better, j, arg)
+        return acc, arg
+
+    acc0 = jnp.full((block_b,), -jnp.inf, dtype=out_ref.dtype)
+    arg0 = jnp.zeros((block_b,), dtype=jnp.int32)
+    acc, arg = jax.lax.fori_loop(0, k_opts, body, (acc0, arg0))
+    out_ref[0, ...] = acc
+    arg_ref[0, ...] = arg
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def maxplus_stage_pallas_batched(
+    dp: jax.Array,
+    kb: jax.Array,
+    vb: jax.Array,
+    *,
+    block_b: int = 256,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Row-batched sparse-option (max,+) stage with backpointers.
+
+    dp: [R, NB] float; kb: [R, K] int32 spend offsets in [0, NB]
+    (descending per row); vb: [R, K] option values (pad options with
+    ``vb = -inf``, ``kb = 0``).  Returns
+
+        out[r, b] = max_j dp[r, b - kb[r, j]] + vb[r, j]
+        arg[r, b] = first maximizing j (int32)
+
+    with out-of-range gathers (kb[j] > b) reading -inf.  Unlike the dense
+    :func:`maxplus_conv_pallas_batched` this keeps the input dtype
+    (float64 in interpret mode drives the bit-for-bit fused solver path;
+    TPU compiles the same kernel in float32 for the dense paths).
+    """
+    if dp.ndim != 2 or kb.shape != vb.shape or kb.shape[0] != dp.shape[0]:
+        raise ValueError(
+            f"bad shapes dp={dp.shape} kb={kb.shape} vb={vb.shape}"
+        )
+    r, nb = dp.shape
+    k_opts = kb.shape[1]
+    vb = vb.astype(dp.dtype)
+    kb = kb.astype(jnp.int32)
+    nblocks = pl.cdiv(nb, block_b)
+    nb_pad = nblocks * block_b
+    neg = jnp.asarray(-jnp.inf, dp.dtype)
+    # left pad NB (kb <= NB stays in-bounds), right pad to the block multiple
+    dp_pad = jnp.concatenate(
+        [
+            jnp.full((r, nb), neg),
+            dp,
+            jnp.full((r, nb_pad - nb), neg),
+        ],
+        axis=1,
+    )
+
+    out, arg = pl.pallas_call(
+        functools.partial(
+            _maxplus_stage_kernel_batched, block_b=block_b, nb=nb,
+            k_opts=k_opts,
+        ),
+        grid=(r, nblocks),
+        in_specs=[
+            pl.BlockSpec((1, dp_pad.shape[1]), lambda ri, i: (ri, 0)),
+            pl.BlockSpec((1, k_opts), lambda ri, i: (ri, 0)),
+            pl.BlockSpec((1, k_opts), lambda ri, i: (ri, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_b), lambda ri, i: (ri, i)),
+            pl.BlockSpec((1, block_b), lambda ri, i: (ri, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, nb_pad), dp.dtype),
+            jax.ShapeDtypeStruct((r, nb_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(dp_pad, kb, vb)
+    return out[:, :nb], arg[:, :nb]
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def maxplus_conv_pallas_batched(
     dp: jax.Array,

@@ -42,25 +42,6 @@ def maxplus_conv_batched(dp: jax.Array, f: jax.Array, *, block_b: int = 256):
 
 
 @functools.cache
-def _maxplus_scan_fn(block_b: int, interpret: bool):
-    import jax
-    import jax.numpy as jnp
-
-    @jax.jit
-    def run(f_groups, gids):
-        def stage(dp, gid):
-            out, arg = _mckp_dp.maxplus_conv_pallas(
-                dp, f_groups[gid], block_b=block_b, interpret=interpret
-            )
-            return out, arg
-
-        dp0 = jnp.zeros(f_groups.shape[1], dtype=f_groups.dtype)
-        return jax.lax.scan(stage, dp0, gids)
-
-    return run
-
-
-@functools.cache
 def _maxplus_scan_batched_fn(block_b: int, interpret: bool):
     import jax
     import jax.numpy as jnp
@@ -116,11 +97,34 @@ def maxplus_scan(f_groups, stage_gids, *, block_b: int = 256):
     distinct classes never materialize an [N, NB] curve matrix.  Returns
     (dp_final [NB], argmax_k [N, NB]) — bitwise equal to scanning the
     row-expanded matrix through ``maxplus_conv``.
+
+    Delegates to :func:`maxplus_scan_batched` with a leading leaf axis of
+    1 — the single-row and batched scans are one kernel (each batched row
+    is bitwise the single-row result; see test_maxplus_scan_batched_rows_
+    bitwise), so there is exactly one scan body to maintain.
     """
     import jax.numpy as jnp
 
-    run = _maxplus_scan_fn(block_b, not _on_tpu())
-    return run(f_groups, jnp.asarray(stage_gids))
+    gids = jnp.asarray(stage_gids)
+    dp_final, args = maxplus_scan_batched(
+        f_groups[None], gids[None], block_b=block_b
+    )
+    return dp_final[0], args[0]
+
+
+def maxplus_stage_batched(dp, kb, vb, *, block_b: int = 256):
+    """Sparse-option (max,+) stage with backpointer output.
+
+    dp: [R, NB]; kb: [R, K] int32 descending spend offsets; vb: [R, K]
+    option values.  Returns (out [R, NB], arg [R, NB]) where ``arg`` is
+    the first maximizing option index — the backpointer table the fused
+    device-resident round backtracks through with device gathers.
+    Dtype-preserving (float64 in interpret mode for the bit-for-bit
+    fused solver path).
+    """
+    return _mckp_dp.maxplus_stage_pallas_batched(
+        dp, kb, vb, block_b=block_b, interpret=not _on_tpu()
+    )
 
 
 def flash_attention(q, k, v, **kw):

@@ -567,3 +567,213 @@ def test_incremental_zero_churn_reuses_allocation(suite):
     f0 = sim_f.run_round(ctrl_f, budget=900.0, round_index=0)
     f1 = sim_f.run_round(ctrl_f, budget=900.0, round_index=1)
     assert f1.allocation is f0.allocation
+
+
+# ---------------------------------------------------------------------------
+# Device-resident fused round (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+def _run_fused_parity(system, apps, surfs, seed, *, hier: bool, churn: float):
+    """Fused controller vs PR-5 host incremental controller, bit-for-bit,
+    under a churn-scaled random event storm.
+
+    The budget drifts -25 W/round so event-free rounds still pay a real
+    solve (the whole-solution cache misses), exercising the fused
+    pipeline rather than the allocation cache.  Returns the fused
+    controller so callers can inspect its round counters.
+    """
+    rng = np.random.default_rng(seed)
+    n = 48
+    if hier:
+        policy = "ecoshift_hier"
+        racks = [f"rack{i}" for i in range(4)]
+    else:
+        policy, racks = "ecoshift", None
+    pair = []
+    for kw in (dict(fused=True), {}):
+        sim = ClusterSim.build(
+            system, apps, surfs, n_nodes=n, seed=0,
+            initial_caps=(150.0, 150.0),
+            topology=(
+                PowerTopology.uniform_racks(n, 4, rack_cap=7000.0)
+                if hier else None
+            ),
+        )
+        ctrl = make_controller(policy, system, **kw)
+        pair.append((sim, ctrl))
+    k = int(np.ceil(n * churn))
+    for r in range(6):
+        events = (
+            _random_events(rng, pair[0][0], apps, r, k=k, topo_racks=racks)
+            if churn > 0 and r >= 1 else []
+        )
+        budget = 1800.0 - 25.0 * r
+        allocs = []
+        for sim, ctrl in pair:
+            if events:
+                touched = sim.apply_events(events)
+                ctrl.invalidate(touched)
+            res = sim.run_round(ctrl, budget=budget, round_index=r)
+            allocs.append(res.allocation)
+        a, b = allocs
+        assert dict(a.caps) == dict(b.caps), (
+            f"seed {seed} churn {churn} round {r}: fused != host"
+        )
+        assert a.spent == b.spent
+    return pair[0][1]
+
+
+@pytest.mark.parametrize("churn", [0.0, 0.01, 0.10])
+@pytest.mark.parametrize("seed", range(3))
+def test_fused_flat_parity(suite, churn, seed):
+    system, apps, surfs = suite
+    ctrl = _run_fused_parity(
+        system, apps[:8], surfs, seed, hier=False, churn=churn
+    )
+    stats = ctrl.fused_stats()
+    assert stats.attempts > 0
+    if churn == 0.0:
+        # stable structure: every attempted round stays on device
+        assert stats.fallbacks == 0
+
+
+@pytest.mark.parametrize("churn", [0.0, 0.01, 0.10])
+@pytest.mark.parametrize("seed", range(3))
+def test_fused_hier_parity(suite, churn, seed):
+    system, apps, surfs = suite
+    ctrl = _run_fused_parity(
+        system, apps[:8], surfs, seed, hier=True, churn=churn
+    )
+    stats = ctrl.fused_stats()
+    assert stats.attempts > 0
+    if churn == 0.0:
+        assert stats.fallbacks == 0
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=8, deadline=None)
+def test_fused_parity_property(seed):
+    system = types.SYSTEM_1
+    apps, surfs = surfaces.build_paper_suite(system)
+    _run_fused_parity(
+        system, apps[:6], surfs, seed, hier=(seed % 2 == 0), churn=0.10
+    )
+
+
+@pytest.mark.parametrize("hier", [False, True])
+def test_fused_fallback_transition(suite, hier):
+    """A mid-run class-layout change demotes exactly one round to the host
+    path (fused -> host -> fused), with parity maintained throughout."""
+    system, apps, surfs = suite
+    n = 40
+    policy = "ecoshift_hier" if hier else "ecoshift"
+    pair = []
+    for kw in (dict(fused=True), {}):
+        sim = ClusterSim.build(
+            system, apps[:6], surfs, n_nodes=n, seed=0,
+            initial_caps=(150.0, 150.0),
+            topology=(
+                PowerTopology.uniform_racks(n, 4, rack_cap=7000.0)
+                if hier else None
+            ),
+        )
+        ctrl = make_controller(policy, system, **kw)
+        pair.append((sim, ctrl))
+    fused_sim, fused_ctrl = pair[0]
+
+    def round_(r, events=()):
+        allocs = []
+        for sim, ctrl in pair:
+            if events:
+                touched = sim.apply_events(list(events))
+                ctrl.invalidate(touched)
+            res = sim.run_round(
+                ctrl, budget=1500.0 - 25.0 * r, round_index=r
+            )
+            allocs.append(res.allocation)
+        a, b = allocs
+        assert dict(a.caps) == dict(b.caps) and a.spent == b.spent, (
+            f"round {r}: fused != host"
+        )
+
+    round_(0)
+    round_(1)
+    assert fused_ctrl.last_solver == "fused"
+    # vaporize one whole receiver behaviour class: its digest vanishes
+    # from the class layout, so the fused round must fall back to the
+    # host path and rebuild its banks
+    t = fused_sim.table
+    _, recv, _ = fused_sim.partition_rows()
+    gids = t.base_gid[recv]
+    smallest = min(set(gids.tolist()), key=lambda g: (gids == g).sum())
+    doomed = tuple(
+        int(t.node_ids[i]) for i in recv[gids == smallest]
+    )
+    round_(2, events=[sc.NodeFailure(round=2, node_ids=doomed)])
+    assert fused_ctrl.last_solver == "host"
+    assert fused_ctrl.fused_stats().fallbacks >= 1
+    # structure is warm again: the next round resumes on device
+    round_(3)
+    assert fused_ctrl.last_solver == "fused"
+    round_(4)
+    assert fused_ctrl.last_solver == "fused"
+
+
+# ---------------------------------------------------------------------------
+# DeviceView: device-resident NodeTable columns
+# ---------------------------------------------------------------------------
+
+
+class TestDeviceView:
+    def test_patch_equals_rebuild(self, suite):
+        """Steady-state dirty-row patches produce the same device arrays
+        as a cold full upload."""
+        system, apps, surfs = suite
+        sim = ClusterSim.build(system, apps, surfs, n_nodes=24, seed=0)
+        view = sim.table.device_view()
+        full0 = view.uploads_full
+        sim.apply_events([
+            sc.StragglerOnset(round=1, node_id=3, slowdown=1.5),
+            sc.NodeFailure(round=1, node_ids=(7,)),
+        ])
+        view = sim.table.device_view()
+        assert view.uploads_full == full0  # patched, not rebuilt
+        assert view.uploads_rows >= 2
+        for col in ("caps", "alive", "slowdown", "domain_id"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(view, col)),
+                np.asarray(getattr(sim.table, col)),
+            )
+
+    def test_growth_forces_full_upload(self, suite):
+        system, apps, surfs = suite
+        sim = ClusterSim.build(system, apps, surfs, n_nodes=16, seed=0)
+        view = sim.table.device_view()
+        full0 = view.uploads_full
+        sim.apply_events([
+            sc.NodeArrival(round=1, app=apps[0], caps=(150.0, 150.0)),
+        ])
+        view = sim.table.device_view()
+        assert view.uploads_full == full0 + 1  # shapes changed
+        assert len(np.asarray(view.alive)) == len(sim.table)
+        for col in ("caps", "alive", "slowdown", "domain_id"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(view, col)),
+                np.asarray(getattr(sim.table, col)),
+            )
+
+    def test_noop_when_clean(self, suite):
+        system, apps, surfs = suite
+        sim = ClusterSim.build(system, apps, surfs, n_nodes=8, seed=0)
+        v1 = sim.table.device_view()
+        caps_before = v1.caps
+        v2 = sim.table.device_view()
+        assert v2 is v1 and v2.caps is caps_before
+
+    def test_float64_residency(self, suite):
+        system, apps, surfs = suite
+        sim = ClusterSim.build(system, apps, surfs, n_nodes=8, seed=0)
+        view = sim.table.device_view()
+        assert str(view.caps.dtype) == "float64"
+        assert str(view.slowdown.dtype) == "float64"

@@ -1,5 +1,7 @@
 """Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -158,6 +160,114 @@ class TestRMSNorm:
         np.testing.assert_allclose(
             np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype)
         )
+
+
+# ---------------------------------------------------------------------------
+# Sparse-option (max,+) stage with backpointers (fused-round kernel)
+# ---------------------------------------------------------------------------
+
+
+def _stage_ref_np(dp, kb, vb):
+    """Scalar oracle of maxplus_stage_pallas_batched (first-max in j)."""
+    r, nb = dp.shape
+    out = np.full((r, nb), -np.inf, dtype=dp.dtype)
+    arg = np.zeros((r, nb), dtype=np.int32)
+    for ri in range(r):
+        for b in range(nb):
+            best, bj = -np.inf, 0
+            for j in range(kb.shape[1]):
+                k = kb[ri, j]
+                cand = dp[ri, b - k] + vb[ri, j] if b - k >= 0 else -np.inf
+                if cand > best:
+                    best, bj = cand, j
+            out[ri, b] = best
+            arg[ri, b] = bj
+    return out, arg
+
+
+def _stage_inputs(rng, r, nb, k, dtype):
+    dp = np.maximum.accumulate(rng.uniform(0, 1, (r, nb)), axis=1).astype(dtype)
+    dp[:, 1:][rng.uniform(size=(r, nb - 1)) < 0.2] = -np.inf
+    kb = np.sort(rng.integers(0, nb + 1, (r, k)), axis=1)[:, ::-1].astype(np.int32)
+    vb = np.sort(rng.uniform(0, 0.5, (r, k)), axis=1).astype(dtype)
+    # pad-style tail options: spend 0, value -inf (as the fused banks emit)
+    vb[:, -1] = -np.inf
+    kb[:, -1] = 0
+    return dp, kb, vb
+
+
+class TestMaxPlusStageBatched:
+    @pytest.mark.parametrize("r,nb,k", [(1, 16, 3), (4, 64, 8), (3, 200, 21)])
+    @pytest.mark.parametrize("block_b", [32, 256])
+    def test_matches_scalar_ref(self, r, nb, k, block_b):
+        rng = np.random.default_rng(r * 1000 + nb + k)
+        dp, kb, vb = _stage_inputs(rng, r, nb, k, np.float32)
+        out, arg = mckp_dp.maxplus_stage_pallas_batched(
+            jnp.asarray(dp), jnp.asarray(kb), jnp.asarray(vb),
+            block_b=block_b,
+        )
+        out_r, arg_r = _stage_ref_np(dp, kb, vb)
+        np.testing.assert_array_equal(np.asarray(out), out_r)
+        np.testing.assert_array_equal(np.asarray(arg), arg_r)
+
+    def test_float64_bitwise(self):
+        """f64 inputs (the fused solver path) reproduce the host adds
+        bit-for-bit — same IEEE ops in the same order."""
+        rng = np.random.default_rng(7)
+        with jax.experimental.enable_x64():
+            dp, kb, vb = _stage_inputs(rng, 5, 96, 12, np.float64)
+            out, arg = mckp_dp.maxplus_stage_pallas_batched(
+                jnp.asarray(dp), jnp.asarray(kb), jnp.asarray(vb),
+                block_b=64,
+            )
+            assert out.dtype == jnp.float64
+            out_r, arg_r = _stage_ref_np(dp, kb, vb)
+            np.testing.assert_array_equal(np.asarray(out), out_r)
+            np.testing.assert_array_equal(np.asarray(arg), arg_r)
+
+    def test_direct_vs_jitted_lowering(self):
+        """Interpret-mode kernel: the direct call (primitive impl) and an
+        explicit outer-jit XLA lowering produce identical bits.
+        (jax.disable_jit() is off-limits: pallas_call's impl re-binds the
+        primitive under jit and would recurse forever without it.)"""
+        rng = np.random.default_rng(11)
+        dp, kb, vb = _stage_inputs(rng, 4, 80, 9, np.float32)
+        args = (jnp.asarray(dp), jnp.asarray(kb), jnp.asarray(vb))
+        out_d, arg_d = mckp_dp.maxplus_stage_pallas_batched(*args, block_b=32)
+        jitted = jax.jit(
+            functools.partial(mckp_dp.maxplus_stage_pallas_batched, block_b=32)
+        )
+        out_j, arg_j = jitted(*args)
+        np.testing.assert_array_equal(np.asarray(out_d), np.asarray(out_j))
+        np.testing.assert_array_equal(np.asarray(arg_d), np.asarray(arg_j))
+
+    def test_backpointers_are_first_max(self):
+        """Duplicate options tie: the backpointer is the first maximizer
+        in option order (the sparse dict-DP largest-spend tie-break)."""
+        dp = jnp.asarray(np.zeros((1, 8), np.float32))
+        kb = jnp.asarray(np.array([[2, 2, 0]], np.int32))
+        vb = jnp.asarray(np.array([[0.5, 0.5, 0.1]], np.float32))
+        out, arg = mckp_dp.maxplus_stage_pallas_batched(dp, kb, vb, block_b=8)
+        np.testing.assert_array_equal(
+            np.asarray(arg)[0], [2, 2, 0, 0, 0, 0, 0, 0]
+        )
+        np.testing.assert_allclose(
+            np.asarray(out)[0], [0.1, 0.1, 0.5, 0.5, 0.5, 0.5, 0.5, 0.5]
+        )
+
+    def test_ops_wrapper_matches(self):
+        from repro.kernels import ops
+
+        rng = np.random.default_rng(3)
+        dp, kb, vb = _stage_inputs(rng, 2, 48, 5, np.float32)
+        out_w, arg_w = ops.maxplus_stage_batched(
+            jnp.asarray(dp), jnp.asarray(kb), jnp.asarray(vb)
+        )
+        out_k, arg_k = mckp_dp.maxplus_stage_pallas_batched(
+            jnp.asarray(dp), jnp.asarray(kb), jnp.asarray(vb)
+        )
+        np.testing.assert_array_equal(np.asarray(out_w), np.asarray(out_k))
+        np.testing.assert_array_equal(np.asarray(arg_w), np.asarray(arg_k))
 
 
 # ---------------------------------------------------------------------------

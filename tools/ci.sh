@@ -28,6 +28,9 @@ echo "== hierarchical allocation bench (fast tiers; regression guard vs committe
 python -m benchmarks.hier_alloc --fast \
   --check BENCH_hier_alloc.json --out BENCH_hier_alloc.json
 
-echo "== incremental allocation bench (fast tiers; parity + regression guard vs committed JSON) =="
-python -m benchmarks.incremental_alloc --fast \
+echo "== kernel parity (CPU interpret mode: Pallas kernels vs references) =="
+python -m pytest -x -q tests/test_kernels.py
+
+echo "== incremental allocation bench (fast tiers; parity + regression guard vs committed JSON; incl. fused warm re-solve) =="
+python -m benchmarks.incremental_alloc --fast --fused \
   --check BENCH_incremental_alloc.json --out BENCH_incremental_alloc.json

@@ -9,19 +9,28 @@ the engine's phase timings (``ClusterSim.last_round_profile``):
     conserve   sim-side per-domain draw accounting / cap enforcement
     measure    vectorized measurement + telemetry emission
 
+With ``--fused`` the controller runs the device-resident fused round
+(DESIGN.md §14) and each row also shows the device/host split of the
+allocate phase (``alloc_device_s`` — seconds inside the jitted pipeline —
+plus which solver produced the round).  ``--json`` emits the whole run as
+one JSON object on stdout (per-round phase timings in ms, device-vs-host
+split, fused-state counters) for tooling; the human table is suppressed.
+
 plus a cProfile top-N of one steady-state round, so future perf PRs can
 see exactly where round time goes before touching anything.
 
     PYTHONPATH=src python tools/profile_round.py [--nodes 10000]
         [--racks 16] [--churn 0.01] [--rounds 6] [--policy ecoshift_hier]
-        [--from-scratch] [--top 20]
+        [--from-scratch] [--fused] [--json] [--top 20]
 """
 
 from __future__ import annotations
 
 import argparse
 import cProfile
+import dataclasses
 import io
+import json
 import os
 import pstats
 import sys
@@ -56,6 +65,11 @@ def main() -> None:
                     "racks, ecoshift flat)")
     ap.add_argument("--from-scratch", action="store_true",
                     help="profile the incremental=False baseline instead")
+    ap.add_argument("--fused", action="store_true",
+                    help="device-resident fused rounds (DESIGN.md §14)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit one JSON object instead of the table "
+                    "(implies no cProfile pass)")
     ap.add_argument("--top", type=int, default=20)
     args = ap.parse_args()
 
@@ -69,7 +83,11 @@ def main() -> None:
     )
     policy = args.policy or ("ecoshift_hier" if topo is not None else "ecoshift")
     sim = _sim(system, apps, surfs, n, topology=topo)
-    ctrl = make_controller(policy, system, incremental=not args.from_scratch)
+    ctrl = make_controller(
+        policy, system,
+        incremental=not args.from_scratch,
+        fused=args.fused,
+    )
 
     rng = np.random.default_rng(11)
     _, recv, _ = sim.partition_rows()
@@ -92,15 +110,52 @@ def main() -> None:
         sim.run_round(ctrl, budget=budget, round_index=r)
         return time.perf_counter() - t0
 
-    header = "round  total_ms  " + "  ".join(p[:-2] for p in PHASES)
-    print(f"{policy} n={n} racks={args.racks} churn={args.churn:.1%} "
-          f"incremental={not args.from_scratch}")
-    print(header)
+    rounds: list[dict] = []
+    if not args.json:
+        header = "round  total_ms  " + "  ".join(p[:-2] for p in PHASES)
+        if args.fused:
+            header += "  device_ms  solver"
+        print(f"{policy} n={n} racks={args.racks} churn={args.churn:.1%} "
+              f"incremental={not args.from_scratch} fused={args.fused}")
+        print(header)
     for r in range(args.rounds):
         total = one_round(r)
         prof = sim.last_round_profile
-        cols = "  ".join(f"{prof.get(p, 0.0) * 1e3:9.1f}" for p in PHASES)
-        print(f"{r:5d}  {total * 1e3:8.1f}  {cols}")
+        device_s = float(prof.get("alloc_device_s", 0.0))
+        solver = str(prof.get("alloc_solver", "")) or "-"
+        rounds.append({
+            "round": r,
+            "total_ms": total * 1e3,
+            **{p[:-2] + "_ms": float(prof.get(p, 0.0)) * 1e3 for p in PHASES},
+            "alloc_device_ms": device_s * 1e3,
+            "alloc_host_ms": (float(prof.get("allocate_s", 0.0)) - device_s)
+            * 1e3,
+            "alloc_solver": solver,
+        })
+        if not args.json:
+            cols = "  ".join(
+                f"{float(prof.get(p, 0.0)) * 1e3:9.1f}" for p in PHASES
+            )
+            row = f"{r:5d}  {total * 1e3:8.1f}  {cols}"
+            if args.fused:
+                row += f"  {device_s * 1e3:9.2f}  {solver}"
+            print(row)
+
+    if args.json:
+        out = {
+            "policy": policy,
+            "nodes": n,
+            "racks": args.racks,
+            "churn": args.churn,
+            "incremental": not args.from_scratch,
+            "fused": args.fused,
+            "rounds": rounds,
+        }
+        if args.fused:
+            out["fused_stats"] = dataclasses.asdict(ctrl.fused_stats())
+        json.dump(out, sys.stdout, indent=2)
+        print()
+        return
 
     pr = cProfile.Profile()
     pr.enable()
