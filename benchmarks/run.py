@@ -18,6 +18,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        budget_horizon,
         cluster_scaling,
         dp_scaling,
         hier_alloc,
@@ -51,6 +52,7 @@ def main() -> None:
         ("cluster_scaling", cluster_scaling.run, True),
         ("hier_alloc", hier_alloc.run, True),
         ("incremental_alloc", incremental_alloc.run, True),
+        ("budget_horizon", budget_horizon.run, True),
         ("roofline", roofline_report.run, False),
         ("pod_power", pod_power_allocation.run, True),
         ("straggler", straggler_response.run, True),

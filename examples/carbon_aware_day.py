@@ -1,0 +1,70 @@
+"""A carbon-aware day: ride a grid CO2 trace with the MPC allocator.
+
+Replays the shipped 96-point (15-minute) CO2-intensity and spot-price
+fixtures through a 100-node cluster three ways — the myopic cap-riding
+controller, a signal-blind uniform derating, and the receding-horizon
+planner (DESIGN.md §15) — and prints the value / CO2 / dollars
+scoreboard.  The MPC controller plans over the budget forecast weighted
+by the CO2 signal, shedding spend on dirty-grid rounds and banking it
+into the midday solar trough, and never exceeds any round's
+instantaneous budget.
+
+    PYTHONPATH=src python examples/carbon_aware_day.py
+"""
+
+from repro.cluster import ClusterSim, ConstantProvider, Scenario
+from repro.cluster.controller import make_controller
+from repro.core import surfaces, types
+
+SYSTEM = types.SYSTEM_1
+N_NODES = 100
+N_ROUNDS = 96  # one day at 15-minute resolution
+BUDGET_W = 2.0 * N_NODES
+HORIZON = 12  # plan 3 hours ahead
+ECO = 0.7  # spend at most 70% of the myopic controller's weighted draw
+
+
+def score(res):
+    value = grams = dollars = 0.0
+    for rec in res.records:
+        spent = rec.result.allocation.spent
+        assert spent <= rec.result.budget + 1e-6  # compliance, every round
+        value += rec.avg_improvement
+        grams += rec.carbon_intensity * spent
+        dollars += rec.power_price * spent
+    return value, grams, dollars
+
+
+def main() -> None:
+    apps, surfs = surfaces.build_paper_suite(SYSTEM)
+    scen = Scenario.carbon_aware(N_ROUNDS, ConstantProvider(BUDGET_W))
+
+    cases = (
+        ("myopic (H=1)", Scenario.carbon_aware(N_ROUNDS, BUDGET_W), {}),
+        (
+            "blind 70% derate",
+            Scenario.carbon_aware(N_ROUNDS, ConstantProvider(BUDGET_W * ECO)),
+            {},
+        ),
+        ("mpc (H=12, eco 0.7)", scen, {"horizon": HORIZON, "eco_factor": ECO}),
+    )
+    print(f"== carbon-aware day: {N_NODES} nodes x {N_ROUNDS} rounds ==")
+    print(f"{'policy':22s} {'value':>8s} {'co2':>12s} {'dollars':>10s} "
+          f"{'perf/co2':>9s}")
+    for name, s, kw in cases:
+        sim = ClusterSim.build(
+            SYSTEM, apps, surfs, n_nodes=N_NODES, seed=0,
+            initial_caps=(150.0, 150.0),
+        )
+        ctrl = make_controller("ecoshift", SYSTEM, **kw)
+        value, grams, dollars = score(sim.run(s, ctrl))
+        print(
+            f"{name:22s} {value:8.3f} {grams:12.0f} {dollars:10.0f} "
+            f"{value / grams * 1e6:9.3f}"
+        )
+    print("\nMPC sheds spend on dirty-grid rounds: better perf-per-CO2 than "
+          "riding the cap, and better than derating blindly.")
+
+
+if __name__ == "__main__":
+    main()

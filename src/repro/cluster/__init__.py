@@ -1,7 +1,10 @@
 """Stateful, vectorized cluster control loop (EcoShift §5.4, multi-round).
 
-Four layers:
+Five layers:
 
+ * ``budget``     — composable :class:`BudgetProvider` sources (constant,
+                    trace replay, scaled/min composition, step overrides)
+                    plus the shipped day-scale CO2/price/solar fixtures;
  * ``scenario``   — declarative event timelines (budget/price traces, node
                     arrivals/failures, straggler onsets, phase changes);
  * ``predictor``  — the telemetry-driven online prediction subsystem
@@ -17,6 +20,20 @@ this package, kept for the paper-figure benchmarks and tests.
 """
 
 from repro.core.topology import PowerDomain, PowerTopology  # noqa: F401
+from repro.cluster.budget import (  # noqa: F401
+    BudgetProvider,
+    ConstantProvider,
+    MinProvider,
+    OverrideBook,
+    ScaledProvider,
+    StepOverrideProvider,
+    TraceReplayProvider,
+    as_provider,
+    fixture_provider,
+    fixture_trace,
+    load_fixture,
+    solar_budget,
+)
 from repro.cluster.scenario import (  # noqa: F401
     DomainCapChange,
     NodeArrival,
@@ -38,4 +55,8 @@ from repro.cluster.sim import (  # noqa: F401
     RoundRecord,
     SimResult,
 )
-from repro.cluster.controller import Controller, make_controller  # noqa: F401
+from repro.cluster.controller import (  # noqa: F401
+    Controller,
+    ControllerConfig,
+    make_controller,
+)

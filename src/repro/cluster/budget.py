@@ -1,0 +1,338 @@
+"""Budget providers: one source of truth for every dynamic power budget.
+
+Real power-constrained sites ride grid signals — CO2 intensity, spot
+price, solar output — rather than static caps.  This module turns "what
+is the budget at round r?" into a first-class, composable interface:
+
+ * :class:`BudgetProvider` — the protocol every budget source satisfies:
+   ``budget_at(round)`` for the instantaneous value and
+   ``forecast(round, horizon)`` for the H-round outlook the receding-
+   horizon allocator plans over (``repro.core.mckp.plan_horizon``);
+ * :class:`ConstantProvider` / :class:`TraceReplayProvider` — static and
+   trace-replay sources (scalar / per-round sequence / callable, the
+   three legacy ``Scenario`` trace forms, with identical hold-last
+   semantics);
+ * :class:`ScaledProvider` / :class:`MinProvider` — composition: derate
+   a feed by a factor, or cap one feed by another (e.g. "solar output,
+   but never above the PDU rating");
+ * :class:`StepOverrideProvider` / :class:`OverrideBook` — piecewise
+   step overrides active *from their round on*.  ``OverrideBook`` is the
+   engine's routing target for ``DomainCapChange`` events, replacing the
+   ad-hoc ``dict`` the sim used to mutate — domain caps, cluster
+   budgets, and cap-change events now all resolve through the same float
+   coercion (:func:`as_watts`) and the same from-round-inclusive step
+   semantics (the rounding/precedence bugfix this module centralizes,
+   see DESIGN.md §15).
+
+All three historical budget pathways (``Scenario.budget`` traces,
+``DomainCapChange`` events, ``Scenario.with_domain_cap``) resolve through
+this module; ``Scenario`` auto-wraps raw traces via :func:`as_provider`
+so existing scenarios run unchanged.
+
+Day-scale signal fixtures (CO2 intensity, spot price, solar output)
+ship with the package under ``fixtures/`` and load via
+:func:`load_fixture` / :func:`fixture_trace`.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable, Protocol, Sequence, Union, runtime_checkable
+
+#: legacy trace union: scalar (constant), per-round sequence (holds its
+#: last value), or callable ``round -> value``; None = "no signal"
+Trace = Union[None, float, Sequence, Callable[[int], object]]
+
+
+def as_watts(value) -> float | None:
+    """The one scalar coercion every budget/cap pathway shares.
+
+    ``Scenario.budget_at`` and the per-domain cap resolution historically
+    coerced independently (plain ``float()`` in two places), which let a
+    ``DomainCapChange`` carrying a numpy scalar and a budget-trace step
+    landing on the same round disagree at the last bit.  Centralizing the
+    coercion (and accepting numpy floats explicitly) makes both sides
+    resolve identically by construction.
+    """
+    if value is None:
+        return None
+    return float(value)
+
+
+def trace_at(trace: Trace, r: int):
+    """Resolve a legacy trace at round ``r`` (scenario semantics: scalars
+    are constant, sequences hold their last value, empty sequences and
+    None yield None, callables are invoked)."""
+    if trace is None or isinstance(trace, (int, float)):
+        return trace
+    if callable(trace):
+        return trace(r)
+    if len(trace) == 0:
+        return None
+    return trace[min(r, len(trace) - 1)]
+
+
+@runtime_checkable
+class BudgetProvider(Protocol):
+    """What every budget source answers: now, and the next H rounds."""
+
+    def budget_at(self, r: int) -> float | None:
+        """Budget (watts / signal units) at round ``r``; None = unset."""
+        ...
+
+    def forecast(self, r: int, horizon: int) -> tuple:
+        """Values for rounds ``r .. r+horizon-1`` (certainty-equivalent:
+        trace replay *is* the forecast; a live feed would plug a
+        predictive model in here)."""
+        ...
+
+
+class _ProviderBase:
+    """Shared forecast/composition plumbing for concrete providers."""
+
+    def budget_at(self, r: int) -> float | None:  # pragma: no cover
+        raise NotImplementedError
+
+    def forecast(self, r: int, horizon: int) -> tuple:
+        return tuple(self.budget_at(r + i) for i in range(int(horizon)))
+
+    # -- composition sugar ---------------------------------------------------
+
+    def scaled(self, factor: float) -> "ScaledProvider":
+        return ScaledProvider(self, factor)
+
+    def min_with(self, other) -> "MinProvider":
+        return MinProvider(self, other)
+
+
+class ConstantProvider(_ProviderBase):
+    """The same value every round (``None`` = every round unset)."""
+
+    def __init__(self, value: float | None):
+        self.value = as_watts(value)
+
+    def budget_at(self, r: int) -> float | None:
+        return self.value
+
+    def __repr__(self) -> str:
+        return f"ConstantProvider({self.value!r})"
+
+
+class TraceReplayProvider(_ProviderBase):
+    """Replay a recorded signal trace (CO2 intensity, spot price, solar
+    output, budget watts) with the scenario trace semantics: scalars are
+    constant, sequences hold their last value, callables are invoked.
+
+    This is the shim target for legacy ``Scenario.budget`` traces: a raw
+    trace handed to ``Scenario``/``with_budget`` auto-wraps into one of
+    these (:func:`as_provider`), so ``budget_at`` keeps returning exactly
+    ``float(trace value)``.
+    """
+
+    def __init__(self, trace: Trace):
+        if isinstance(trace, TraceReplayProvider):
+            trace = trace.trace
+        if not (
+            trace is None
+            or isinstance(trace, (int, float))
+            or callable(trace)
+            or hasattr(trace, "__len__")
+        ):
+            raise TypeError(
+                f"trace must be None, scalar, sequence or callable, "
+                f"got {type(trace).__name__}"
+            )
+        self.trace = trace
+
+    def budget_at(self, r: int) -> float | None:
+        return as_watts(trace_at(self.trace, r))
+
+    def __repr__(self) -> str:
+        return f"TraceReplayProvider({self.trace!r})"
+
+
+class ScaledProvider(_ProviderBase):
+    """``factor * base`` — per-domain derating, unit conversion (e.g.
+    normalized solar fraction -> watts), or eco-mode shaving."""
+
+    def __init__(self, base, factor: float):
+        self.base = as_provider(base)
+        self.factor = float(factor)
+
+    def budget_at(self, r: int) -> float | None:
+        b = None if self.base is None else self.base.budget_at(r)
+        return None if b is None else b * self.factor
+
+    def __repr__(self) -> str:
+        return f"ScaledProvider({self.base!r}, {self.factor!r})"
+
+
+class MinProvider(_ProviderBase):
+    """Pointwise minimum of several providers (unset members ignored;
+    all-unset rounds stay None) — "solar-following, but never above the
+    breaker rating"."""
+
+    def __init__(self, *providers):
+        if not providers:
+            raise ValueError("MinProvider needs at least one provider")
+        self.providers = tuple(as_provider(p) for p in providers)
+
+    def budget_at(self, r: int) -> float | None:
+        vals = [
+            v
+            for p in self.providers
+            if p is not None
+            for v in (p.budget_at(r),)
+            if v is not None
+        ]
+        return min(vals) if vals else None
+
+    def __repr__(self) -> str:
+        return f"MinProvider{self.providers!r}"
+
+
+class StepOverrideProvider(_ProviderBase):
+    """A base provider with piecewise step overrides: each ``(round, value)``
+    step applies *from its round on* (inclusive) until a later step
+    supersedes it — exactly the ``DomainCapChange`` contract."""
+
+    def __init__(self, base, steps):
+        self.base = as_provider(base)
+        items = steps.items() if hasattr(steps, "items") else steps
+        self.steps = tuple(
+            sorted((int(rr), as_watts(v)) for rr, v in items)
+        )
+
+    def budget_at(self, r: int) -> float | None:
+        v = None if self.base is None else self.base.budget_at(r)
+        for rr, val in self.steps:
+            if rr <= r:
+                v = val
+        return v
+
+    def __repr__(self) -> str:
+        return f"StepOverrideProvider({self.base!r}, {self.steps!r})"
+
+
+def as_provider(trace) -> BudgetProvider | None:
+    """Normalize anything budget-like into a provider (the shim).
+
+    ``None`` stays None ("no signal" — e.g. donor-derived pool budgets);
+    an object already exposing ``budget_at`` passes through unchanged;
+    raw legacy traces wrap into a :class:`TraceReplayProvider`.
+    Idempotent, so frozen-dataclass normalization can run on every
+    ``dataclasses.replace``.
+    """
+    if trace is None:
+        return None
+    if hasattr(trace, "budget_at"):
+        return trace
+    return TraceReplayProvider(trace)
+
+
+class OverrideBook:
+    """Mutable registry of per-domain cap-change steps (the engine's
+    ``DomainCapChange`` routing target).
+
+    Each domain id accumulates ``(round, cap)`` steps; :meth:`active`
+    resolves which override (if any) binds each domain *at a given
+    round* — a step applies from its round on, the latest applicable
+    step wins.  Resolution shares :func:`as_watts` with the budget
+    providers, so a cap change and a budget-trace step landing on the
+    same round can no longer disagree on float handling; and a headroom
+    query for a round *before* a change's round no longer sees the
+    future cap (the old ``dict`` override applied unconditionally the
+    moment the event was processed).
+    """
+
+    def __init__(self):
+        self._steps: dict[int, list[tuple[int, float]]] = {}
+
+    def set(self, domain_id: int, round: int, cap) -> None:
+        """Record: ``domain_id``'s cap becomes ``cap`` from ``round`` on."""
+        steps = self._steps.setdefault(int(domain_id), [])
+        steps.append((int(round), as_watts(cap)))
+        steps.sort(key=lambda s: s[0])
+
+    def active(self, r: int) -> dict[int, float]:
+        """domain id -> overriding cap binding at round ``r``."""
+        out: dict[int, float] = {}
+        for dom, steps in self._steps.items():
+            for rr, cap in steps:
+                if rr <= r:
+                    out[dom] = cap
+        return out
+
+    def provider_for(self, domain_id: int, base=None) -> StepOverrideProvider:
+        """This domain's cap timeline as a provider (base = its cap trace)."""
+        return StepOverrideProvider(
+            base, self._steps.get(int(domain_id), ())
+        )
+
+    def clear(self) -> None:
+        self._steps.clear()
+
+    def __len__(self) -> int:
+        return len(self._steps)
+
+    def __bool__(self) -> bool:
+        return bool(self._steps)
+
+
+# ---------------------------------------------------------------------------
+# Day-scale signal fixtures (shipped as scenario inputs)
+# ---------------------------------------------------------------------------
+
+_FIXTURE_DIR = os.path.join(os.path.dirname(__file__), "fixtures")
+
+#: shipped day-scale signal fixtures (96 points = 15-minute resolution)
+FIXTURES = ("co2_day", "price_day", "solar_day")
+
+
+def load_fixture(name: str) -> dict:
+    """Load a shipped signal fixture (or a path to one) as its raw dict:
+    ``{"name", "units", "resolution_minutes", "values"}``."""
+    path = (
+        name
+        if os.path.sep in name or name.endswith(".json")
+        else os.path.join(_FIXTURE_DIR, f"{name}.json")
+    )
+    with open(path) as f:
+        return json.load(f)
+
+
+def fixture_trace(name: str, n_rounds: int | None = None) -> tuple:
+    """A fixture's value sequence, resampled to ``n_rounds`` points by
+    nearest-index lookup (None = native resolution)."""
+    values = load_fixture(name)["values"]
+    if n_rounds is None or n_rounds == len(values):
+        return tuple(float(v) for v in values)
+    n = len(values)
+    return tuple(
+        float(values[min(int(i * n / n_rounds), n - 1)])
+        for i in range(int(n_rounds))
+    )
+
+
+def fixture_provider(name: str, n_rounds: int | None = None) -> TraceReplayProvider:
+    """A shipped fixture as a replayable provider (scenario input)."""
+    return TraceReplayProvider(fixture_trace(name, n_rounds))
+
+
+def solar_budget(
+    peak_watts: float,
+    floor_watts: float = 0.0,
+    n_rounds: int | None = None,
+) -> BudgetProvider:
+    """Day-scale solar-following budget: the shipped normalized solar
+    curve scaled to ``peak_watts``, never below ``floor_watts`` (grid
+    backstop) — a ready-made dynamic-budget scenario input."""
+    solar = ScaledProvider(fixture_provider("solar_day", n_rounds), peak_watts)
+
+    class _Floor(_ProviderBase):
+        def budget_at(self, r: int) -> float | None:
+            v = solar.budget_at(r)
+            return None if v is None else max(v, float(floor_watts))
+
+    return _Floor()

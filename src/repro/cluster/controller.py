@@ -115,6 +115,60 @@ class MixedAdaptiveController(_StatelessController):
     policy = "mixed_adaptive"
 
 
+@dataclasses.dataclass
+class ControllerConfig:
+    """One construction config for every EcoShift-family controller.
+
+    The solver/grouping/fusion/predictor knobs grew organically across
+    ``EcoShiftController`` / ``EcoShiftHierController`` /
+    ``EcoShiftOnlineController`` / ``OracleController``; this dataclass
+    folds them into a single object so callers (and
+    ``policies.get_controller``) construct any controller as
+    ``Ctrl(system, config=ControllerConfig(...))``.  Every historical
+    keyword form keeps working as an alias: an explicit keyword passed to
+    a controller's ``__init__`` overrides the corresponding config field
+    (``merged``), and the defaults here are exactly the historical
+    per-controller defaults.
+
+    The receding-horizon fields (DESIGN.md §15): ``horizon`` is how many
+    rounds of budget forecast the controller plans over (1 = myopic —
+    planning entirely disabled, bit-for-bit today's path); ``eco_factor``
+    is the fraction of the myopic controller's weighted (CO2/dollar)
+    spend the planner may use (>= 1.0 never restricts, also bit-for-bit);
+    ``plan_levels`` / ``plan_grid`` bound the horizon DP's per-round
+    candidate count and allowance lattice.
+    """
+
+    solver: str = "sparse"
+    unit: float = 1.0
+    grouped: bool = True
+    incremental: bool = True
+    fused: bool = False
+    #: optional repro.core.allocator.EcoShiftAllocator (warm NCF handle)
+    allocator: object | None = None
+    #: optional repro.cluster.predictor.OnlinePredictor (required by the
+    #: online controller; optional surface source for the hier controller)
+    predictor: object | None = None
+    #: optional repro.core.topology.PowerTopology (hier controller)
+    topology: object | None = None
+    #: Oracle brute-force toggle (None = auto, <= 10 receivers)
+    exhaustive: bool | None = None
+    #: receding-horizon plan length in rounds (1 = myopic)
+    horizon: int = 1
+    #: fraction of the myopic weighted spend the planner may use
+    eco_factor: float = 1.0
+    #: max frontier candidates per horizon step
+    plan_levels: int = 64
+    #: allowance-lattice cells of the horizon DP
+    plan_grid: int = 2048
+
+    def merged(self, **overrides) -> "ControllerConfig":
+        """Copy with every non-None override applied — the legacy-kwarg
+        alias path (an explicit keyword beats the config field)."""
+        changes = {k: v for k, v in overrides.items() if v is not None}
+        return dataclasses.replace(self, **changes) if changes else self
+
+
 def _served_replace(batch: ReceiverBatch, served) -> ReceiverBatch:
     """Swap in predictor-served surfaces and strip the delta sequence.
 
@@ -399,32 +453,45 @@ class EcoShiftController(_OptionCachingController):
         self,
         system: SystemSpec,
         *,
-        solver: str = "sparse",
-        unit: float = 1.0,
+        config: ControllerConfig | None = None,
+        solver: str | None = None,
+        unit: float | None = None,
         allocator=None,
-        grouped: bool = True,
-        incremental: bool = True,
-        fused: bool = False,
+        grouped: bool | None = None,
+        incremental: bool | None = None,
+        fused: bool | None = None,
+        horizon: int | None = None,
+        eco_factor: float | None = None,
+        plan_levels: int | None = None,
+        plan_grid: int | None = None,
     ):
         super().__init__(system)
-        self.solver = solver
-        self.unit = unit
+        cfg = (config if config is not None else ControllerConfig()).merged(
+            solver=solver, unit=unit, allocator=allocator, grouped=grouped,
+            incremental=incremental, fused=fused, horizon=horizon,
+            eco_factor=eco_factor, plan_levels=plan_levels,
+            plan_grid=plan_grid,
+        )
+        #: the resolved construction config (ControllerConfig)
+        self.config = cfg
+        self.solver = cfg.solver
+        self.unit = cfg.unit
         #: optional repro.core.allocator.EcoShiftAllocator (warm NCF handle)
-        self.allocator = allocator
+        self.allocator = cfg.allocator
         #: group-collapsed allocation (one DP super-stage per behaviour
         #: class); False forces the legacy per-instance path
-        self.grouped = grouped
+        self.grouped = cfg.grouped
         #: delta-driven steady-state rounds (DESIGN.md §13): consume batch
         #: deltas into persistent grouping state, reuse cached solutions;
         #: False re-collapses and re-solves from scratch every round (the
         #: PR-4-style baseline the incremental_alloc bench compares against)
-        self.incremental = incremental
+        self.incremental = cfg.incremental
         #: device-resident fused rounds (DESIGN.md §14): keep option banks
         #: resident on device and run the whole warm-round decision
         #: pipeline as one jitted Pallas program, falling back to the host
         #: sparse path on structure changes.  Requires ``incremental`` and
         #: ``solver='sparse'`` — otherwise silently ignored.
-        self.fused = fused
+        self.fused = cfg.fused
         #: resident device banks + shape signature for the fused rounds
         self._fused_state = mckp.FusedState()
         #: 'fused' | 'host' — which path produced the last solution
@@ -432,11 +499,100 @@ class EcoShiftController(_OptionCachingController):
         #: device seconds spent inside the last fused pipeline call (0.0
         #: for host rounds and alloc-cache hits)
         self.last_device_s: float = 0.0
+        #: receding-horizon planning (DESIGN.md §15): plan length, weighted
+        #: spend fraction, and DP bounds — planning is active only when
+        #: horizon > 1 AND eco_factor < 1 AND the engine fed an outlook
+        self.horizon = int(cfg.horizon)
+        self.eco_factor = float(cfg.eco_factor)
+        self.plan_levels = int(cfg.plan_levels)
+        self.plan_grid = int(cfg.plan_grid)
+        #: (caps, weights) forecast fed by the engine, consumed per round
+        self._outlook: tuple | None = None
+        #: (group tokens, cutoff) -> planning frontier arrays (flat path)
+        self._frontier_lru = mckp.LRUCache(32)
+        #: budget the planner committed for the last round (None = the
+        #: plan did not restrict the round — myopic path taken verbatim)
+        self.last_planned_budget: float | None = None
+        #: full per-round spend plan behind last_planned_budget
+        self.last_plan: tuple | None = None
 
     def invalidate(self, names: Sequence[str] | None = None) -> None:
         super().invalidate(names)
         if names is None:
             self._fused_state.clear()
+            self._frontier_lru.clear()
+
+    # -- receding-horizon planning (DESIGN.md §15) ---------------------------
+
+    def set_budget_outlook(self, caps, weights=None) -> None:
+        """Engine hook: the provider-backed budget forecast for the next
+        ``len(caps)`` rounds (``caps[0]`` = this round's budget) plus the
+        optional CO2/price weight signal.  Consumed by the next allocate
+        call; refreshed by the engine every round."""
+        self._outlook = (
+            tuple(float(c) for c in caps),
+            None if weights is None else tuple(float(w) for w in weights),
+        )
+
+    def _plan_pending(self) -> bool:
+        return (
+            self.horizon > 1
+            and self.eco_factor < 1.0
+            and self._outlook is not None
+            and self.solver == "sparse"
+        )
+
+    def _plan_budget(self, budget: float, frontier_fn) -> float:
+        """Run the horizon DP over this round's frontier; returns the
+        budget to commit for round 0 (== ``budget`` whenever the plan
+        would not restrict it — the caller then proceeds on the literally
+        unchanged myopic path)."""
+        self.last_planned_budget = None
+        self.last_plan = None
+        outlook, self._outlook = self._outlook, None
+        caps, weights = outlook
+        caps = caps[: self.horizon]
+        if weights is not None:
+            weights = weights[: self.horizon]
+        # one frontier serves every horizon cap: states <= any cap are
+        # identical whether the DP ran under that cap or under the larger
+        # quantized cutoff (the _curve_cutoff invariance argument), so the
+        # planning frontier is keyed budget-drift-invariantly
+        cutoff = mckp._curve_cutoff(max(max(caps), float(budget)))
+        keys, vals = frontier_fn(cutoff)
+        plan = mckp.plan_horizon(
+            keys, vals, caps, weights,
+            eco_factor=self.eco_factor,
+            levels=self.plan_levels,
+            grid=self.plan_grid,
+        )
+        if plan is None:
+            return budget
+        b_eff = min(float(budget), float(plan[0]))
+        if b_eff >= budget - 1e-9:
+            return budget
+        self.last_planned_budget = b_eff
+        self.last_plan = tuple(plan)
+        return b_eff
+
+    def _planning_frontier(self, groups, cutoff: float):
+        """Warm flat-path planning frontier (grouped super-stage DP end
+        states), LRU-keyed by (group identity tokens, cutoff)."""
+        key = (
+            tuple(sorted(mckp._group_token(g) for g in groups)),
+            mckp._qkey(cutoff),
+        )
+        hit = self._frontier_lru.get(key)
+        if hit is None:
+            hit = mckp.grouped_frontier(
+                groups,
+                cutoff,
+                curve_cache=self._agg_curves,
+                plan_cache=self._plan_cache,
+                chain_cache=self._chain_cache,
+            )
+            self._frontier_lru[key] = hit
+        return hit
 
     def fused_stats(self) -> FusedRoundStats:
         """Snapshot of the device-resident round counters."""
@@ -503,6 +659,13 @@ class EcoShiftController(_OptionCachingController):
         if incremental:
             self._incremental_groups(batch)
             groups = self._grouping.groups(0)
+        else:
+            groups = self._grouped_options_for(batch)
+        if self._plan_pending():
+            budget = self._plan_budget(
+                budget, lambda cap: self._planning_frontier(groups, cap)
+            )
+        if incremental:
             key = (
                 tuple(sorted(mckp._group_token(g) for g in groups)),
                 mckp._qkey(budget),
@@ -513,7 +676,6 @@ class EcoShiftController(_OptionCachingController):
                 self.last_device_s = 0.0
                 return hit
         else:
-            groups = self._grouped_options_for(batch)
             key = None
         sol = None
         self.last_device_s = 0.0
@@ -601,22 +763,30 @@ class EcoShiftHierController(EcoShiftController):
         self,
         system: SystemSpec,
         *,
+        config: ControllerConfig | None = None,
         topology=None,
-        solver: str = "sparse",
-        unit: float = 1.0,
+        solver: str | None = None,
+        unit: float | None = None,
         predictor=None,
         allocator=None,
-        incremental: bool = True,
-        fused: bool = False,
+        incremental: bool | None = None,
+        fused: bool | None = None,
+        horizon: int | None = None,
+        eco_factor: float | None = None,
+        plan_levels: int | None = None,
+        plan_grid: int | None = None,
     ):
-        super().__init__(
-            system, solver=solver, unit=unit, allocator=allocator,
-            incremental=incremental, fused=fused,
+        cfg = (config if config is not None else ControllerConfig()).merged(
+            topology=topology, solver=solver, unit=unit, predictor=predictor,
+            allocator=allocator, incremental=incremental, fused=fused,
+            horizon=horizon, eco_factor=eco_factor, plan_levels=plan_levels,
+            plan_grid=plan_grid,
         )
+        super().__init__(system, config=cfg)
         #: repro.core.topology.PowerTopology (bound here or by the engine)
-        self.topology = topology
+        self.topology = cfg.topology
         #: optional OnlinePredictor: serve predicted surfaces + ingest telemetry
-        self.predictor = predictor
+        self.predictor = cfg.predictor
         #: (class layout, quantized budget) -> leaf frontier DP arrays
         self._frontiers: mckp.LRUCache = mckp.LRUCache(self.MAX_FRONTIERS)
         #: persistent hierarchical warm state: frontier aggregation tree
@@ -721,6 +891,22 @@ class EcoShiftHierController(EcoShiftController):
                 batch, leaf_ids=np.asarray(batch.domain_ids)
             )
             by_leaf = self._grouping.by_scope()
+            state = self._hier_state
+        else:
+            by_leaf = self._grouped_options_by_leaf(batch)
+        root = None
+        if self._plan_pending():
+            # the root frontier under the quantized cutoff serves every
+            # horizon cap; the primed leaf frontiers and tree combines are
+            # the same warm HierState entries the solve below reuses
+            root = policies_mod.domain_tree(self.topology, domain_extra, by_leaf)
+            budget = self._plan_budget(
+                budget,
+                lambda cap: mckp.hierarchical_frontier(
+                    root, cap, state=self._hier_state
+                ),
+            )
+        if incremental:
             key = (
                 tuple(
                     (leaf, tuple(sorted(mckp._group_token(g) for g in groups)))
@@ -735,10 +921,8 @@ class EcoShiftHierController(EcoShiftController):
                 self.last_solver = "cache"
                 self.last_device_s = 0.0
                 return hit[0]
-            state = self._hier_state
-        else:
-            by_leaf = self._grouped_options_by_leaf(batch)
-        root = policies_mod.domain_tree(self.topology, domain_extra, by_leaf)
+        if root is None:
+            root = policies_mod.domain_tree(self.topology, domain_extra, by_leaf)
         sol = None
         self.last_device_s = 0.0
         if incremental and self.fused:
@@ -799,13 +983,19 @@ class EcoShiftOnlineController(EcoShiftController):
         self,
         system: SystemSpec,
         *,
-        predictor,
-        solver: str = "sparse",
-        unit: float = 1.0,
+        predictor=None,
+        config: ControllerConfig | None = None,
+        solver: str | None = None,
+        unit: float | None = None,
     ):
-        super().__init__(system, solver=solver, unit=unit)
+        cfg = (config if config is not None else ControllerConfig()).merged(
+            predictor=predictor, solver=solver, unit=unit
+        )
+        if cfg.predictor is None:
+            raise ValueError("ecoshift_online needs a predictor")
+        super().__init__(system, config=cfg)
         #: repro.cluster.predictor.OnlinePredictor (required)
-        self.predictor = predictor
+        self.predictor = cfg.predictor
 
     def allocate(self, receivers, baselines, budget, surfaces=None):
         seen = {
@@ -834,10 +1024,20 @@ class OracleController(_OptionCachingController):
     sees_truth = True
     supports_grouped = True
 
-    def __init__(self, system: SystemSpec, *, exhaustive: bool | None = None):
+    def __init__(
+        self,
+        system: SystemSpec,
+        *,
+        exhaustive: bool | None = None,
+        config: ControllerConfig | None = None,
+    ):
         super().__init__(system)
+        cfg = (config if config is not None else ControllerConfig()).merged(
+            exhaustive=exhaustive
+        )
+        self.config = cfg
         #: None = auto (brute force iff <= 10 receivers, like run_round)
-        self.exhaustive = exhaustive
+        self.exhaustive = cfg.exhaustive
 
     def allocate(self, receivers, baselines, budget, surfaces):
         options = self._options_for(receivers, baselines, surfaces)

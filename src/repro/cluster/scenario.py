@@ -1,14 +1,19 @@
 """Declarative scenario timelines for multi-round cluster simulation.
 
 A ``Scenario`` is a pure description of *what happens when*: the reclaimed
-budget (or power price) per round and the cluster events — node failures,
-arrivals, straggler onsets, workload phase changes.  Benchmarks build one
-declaratively instead of hand-rolling ``fail_nodes`` / ``add_straggler``
-call sequences, and the same scenario can be replayed against any
-controller (``repro.cluster.controller``) on the engine
-(``repro.cluster.sim``).
+budget (and optional price / CO2-intensity signals) per round and the
+cluster events — node failures, arrivals, straggler onsets, workload
+phase changes.  Benchmarks build one declaratively instead of
+hand-rolling ``fail_nodes`` / ``add_straggler`` call sequences, and the
+same scenario can be replayed against any controller
+(``repro.cluster.controller``) on the engine (``repro.cluster.sim``).
 
-Budget / price traces accept three forms:
+Budgets and signals are **provider-backed** (``repro.cluster.budget``):
+pass any :class:`~repro.cluster.budget.BudgetProvider` — trace replay of
+a CO2/price/solar fixture, composed deratings, solar-following caps —
+via ``with_budget_provider`` (or the ``budget=`` field).  The historical
+raw trace forms keep working through a thin shim (auto-wrapped into a
+``TraceReplayProvider`` with identical semantics):
 
  * a scalar — constant every round;
  * a sequence — one entry per round (shorter sequences hold their last
@@ -16,21 +21,27 @@ Budget / price traces accept three forms:
  * a callable ``round -> value``.
 
 A budget of ``None`` means "derive the pool from donor headroom this
-round", matching the single-round emulator's default.
+round", matching the single-round emulator's default.  ``with_budget``
+(raw-trace access) is deprecated in favor of ``with_budget_provider``
+and emits a one-release ``DeprecationWarning``.
 
 A scenario may **attach a power topology** (``with_topology``): the
 rack/PDU domain tree the engine enforces (DESIGN.md §12).  Attachment
 makes node-id events *fail fast* — ``with_failure`` / ``with_straggler`` /
 ``with_phase_change`` referencing node ids no leaf domain owns raise at
 build time instead of mid-sim — and enables ``DomainCapChange`` events
-(e.g. a rack PDU derating mid-scenario).
+(e.g. a rack PDU derating mid-scenario).  Event/budget precedence on a
+shared round is documented at :meth:`Scenario.budget_at`.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence, Union
+import warnings
+from typing import Sequence, Union
 
+from repro.cluster import budget as budget_mod
+from repro.cluster.budget import Trace, trace_at as _trace_at  # noqa: F401
 from repro.core.surfaces import PowerSurface
 from repro.core.types import AppSpec
 
@@ -145,19 +156,6 @@ def _validate_against_topology(events: Sequence[Event], topology) -> None:
                     f"cap change at round {e.round}: cap must be positive"
                 )
 
-Trace = Union[None, float, Sequence, Callable[[int], object]]
-
-
-def _trace_at(trace: Trace, r: int):
-    if trace is None or isinstance(trace, (int, float)):
-        return trace
-    if callable(trace):
-        return trace(r)
-    if len(trace) == 0:
-        return None
-    return trace[min(r, len(trace) - 1)]
-
-
 # ---------------------------------------------------------------------------
 # Scenario
 # ---------------------------------------------------------------------------
@@ -165,13 +163,21 @@ def _trace_at(trace: Trace, r: int):
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """A timeline of ``n_rounds`` redistribution rounds."""
+    """A timeline of ``n_rounds`` redistribution rounds.
+
+    ``budget`` / ``power_price`` / ``carbon`` accept either a
+    :class:`~repro.cluster.budget.BudgetProvider` or a legacy raw trace
+    (auto-wrapped into a ``TraceReplayProvider`` at construction — the
+    normalized field always holds a provider or None).
+    """
 
     n_rounds: int
-    #: reclaimed budget per round (None = donor-derived pool)
-    budget: Trace = None
-    #: optional $/W power price per round, recorded alongside results
-    power_price: Trace = None
+    #: reclaimed budget per round (None = donor-derived pool); normalized
+    #: to a BudgetProvider
+    budget: object = None
+    #: optional $/W power price per round, recorded alongside results and
+    #: usable as the horizon planner's weight signal; normalized provider
+    power_price: object = None
     events: tuple[Event, ...] = ()
     #: optional power-domain tree (repro.core.topology.PowerTopology); the
     #: engine adopts and enforces it, and the builder methods validate
@@ -179,14 +185,56 @@ class Scenario:
     #: sweeps existing events once; with_event/with_events validate only
     #: what they add, so chained builders stay O(total events))
     topology: object | None = None
+    #: optional grid CO2-intensity signal (gCO2eq/kWh) — the receding-
+    #: horizon allocator's preferred weight feed; normalized provider
+    carbon: object = None
+
+    def __post_init__(self):
+        # normalize every signal field to a provider exactly once;
+        # as_provider is idempotent so dataclasses.replace re-runs are free
+        for field in ("budget", "power_price", "carbon"):
+            v = getattr(self, field)
+            p = budget_mod.as_provider(v)
+            if p is not v:
+                object.__setattr__(self, field, p)
 
     def budget_at(self, r: int) -> float | None:
-        b = _trace_at(self.budget, r)
-        return None if b is None else float(b)
+        """Cluster budget at round ``r`` (None = donor-derived pool).
+
+        **Precedence on a shared round** (engine contract, tested by
+        tests/test_budget.py): the engine applies round ``r``'s events —
+        including ``DomainCapChange`` — *before* resolving the budget and
+        the per-domain headroom for round ``r``, so a cap change and a
+        budget-trace step landing on the same round both take effect that
+        round; a ``DomainCapChange`` overrides the domain's own cap trace
+        from its round on (inclusive); and both sides coerce through
+        ``repro.cluster.budget.as_watts``, so they can never disagree on
+        rounding/float handling.
+        """
+        return None if self.budget is None else self.budget.budget_at(r)
 
     def price_at(self, r: int) -> float | None:
-        p = _trace_at(self.power_price, r)
-        return None if p is None else float(p)
+        return None if self.power_price is None else self.power_price.budget_at(r)
+
+    def carbon_at(self, r: int) -> float | None:
+        return None if self.carbon is None else self.carbon.budget_at(r)
+
+    def budget_forecast(self, r: int, horizon: int) -> tuple:
+        """Budgets for rounds ``r .. r+horizon-1`` (None entries where
+        unset) — what the receding-horizon controller plans over."""
+        if self.budget is None:
+            return (None,) * int(horizon)
+        return tuple(self.budget.forecast(r, horizon))
+
+    def price_forecast(self, r: int, horizon: int) -> tuple:
+        if self.power_price is None:
+            return (None,) * int(horizon)
+        return tuple(self.power_price.forecast(r, horizon))
+
+    def carbon_forecast(self, r: int, horizon: int) -> tuple:
+        if self.carbon is None:
+            return (None,) * int(horizon)
+        return tuple(self.carbon.forecast(r, horizon))
 
     def events_at(self, r: int) -> tuple[Event, ...]:
         # lazily indexed by round: scenario replay is O(rounds + events),
@@ -272,8 +320,69 @@ class Scenario:
             DomainCapChange(round=round, domain=domain, cap=cap)
         )
 
+    def with_budget_provider(self, provider) -> "Scenario":
+        """Attach a budget source: any
+        :class:`~repro.cluster.budget.BudgetProvider` (trace replay,
+        composed deratings, solar-following, ...) or a raw trace (wrapped
+        via :func:`~repro.cluster.budget.as_provider`)."""
+        return dataclasses.replace(
+            self, budget=budget_mod.as_provider(provider)
+        )
+
     def with_budget(self, budget: Trace) -> "Scenario":
-        return dataclasses.replace(self, budget=budget)
+        """Deprecated raw-trace budget attachment.
+
+        Use :meth:`with_budget_provider` — the trace is auto-wrapped into
+        a ``TraceReplayProvider`` with identical semantics, so behavior
+        is unchanged for this release.
+        """
+        warnings.warn(
+            "Scenario.with_budget(trace) is deprecated; use "
+            "Scenario.with_budget_provider(...) (raw traces are "
+            "auto-wrapped into a TraceReplayProvider)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self.with_budget_provider(budget)
+
+    def with_power_price(self, provider) -> "Scenario":
+        """Attach a $/MWh (or $/W) price signal — recorded per round and
+        usable as the horizon planner's weight feed."""
+        return dataclasses.replace(
+            self, power_price=budget_mod.as_provider(provider)
+        )
+
+    def with_carbon(self, provider) -> "Scenario":
+        """Attach a grid CO2-intensity signal (provider or raw trace) —
+        the receding-horizon allocator weights its spend plan by it."""
+        return dataclasses.replace(
+            self, carbon=budget_mod.as_provider(provider)
+        )
+
+    @staticmethod
+    def carbon_aware(
+        n_rounds: int,
+        budget,
+        carbon=None,
+        power_price=None,
+    ) -> "Scenario":
+        """Day-scale carbon-aware scenario: a budget provider plus CO2 /
+        price signals (defaults: the shipped ``co2_day`` / ``price_day``
+        fixtures resampled to ``n_rounds``)."""
+        return Scenario(
+            n_rounds=n_rounds,
+            budget=budget_mod.as_provider(budget),
+            carbon=budget_mod.as_provider(
+                carbon
+                if carbon is not None
+                else budget_mod.fixture_trace("co2_day", n_rounds)
+            ),
+            power_price=budget_mod.as_provider(
+                power_price
+                if power_price is not None
+                else budget_mod.fixture_trace("price_day", n_rounds)
+            ),
+        )
 
     @staticmethod
     def price_capped(

@@ -56,6 +56,7 @@ from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
+from repro.cluster import budget as budget_mod
 from repro.cluster import scenario as scenario_mod
 from repro.cluster.predictor import TelemetryBatch
 from repro.cluster.scenario import Scenario
@@ -423,6 +424,8 @@ class RoundRecord:
     n_alive: int
     events: tuple = ()
     power_price: float | None = None
+    #: grid CO2 intensity this round (scenario carbon signal), if any
+    carbon_intensity: float | None = None
     #: per-receiver noisy measurements: a TelemetryBatch on the vectorized
     #: path (iterable of TelemetryRecord views), () on the legacy loop path
     telemetry: object = ()
@@ -521,8 +524,11 @@ class ClusterSim:
         self._views_cache: tuple[int, list[NodeState]] | None = None
         #: hierarchical power-domain tree (repro.core.topology.PowerTopology)
         self.topology = None
-        #: persisted DomainCapChange overrides: domain id -> cap watts
-        self._domain_cap_override: dict[int, float] = {}
+        #: DomainCapChange routing: per-domain (round, cap) steps resolved
+        #: through the provider-backed budget subsystem — a step applies
+        #: from its round on, with the same float coercion as scenario
+        #: budgets (repro.cluster.budget.OverrideBook)
+        self._cap_overrides = budget_mod.OverrideBook()
         #: per-domain draw/cap observed by the latest topology round
         self.last_domain_draw: dict[str, float] | None = None
         self.last_domain_caps: dict[str, float] | None = None
@@ -566,7 +572,7 @@ class ClusterSim:
             topology.leaf_of(t.node_ids).astype(np.int32) if len(t) else None
         )
         self.topology = topology
-        self._domain_cap_override = {}
+        self._cap_overrides = budget_mod.OverrideBook()
         if domain_id is not None:
             t.domain_id = domain_id
             t.bump()
@@ -604,7 +610,7 @@ class ClusterSim:
         hierarchical allocator may spend inside each domain (>= 0).
         """
         topo = self.topology
-        caps = topo.cap_at(round_index, self._domain_cap_override)
+        caps = topo.cap_at(round_index, self._cap_overrides.active(round_index))
         leaf = np.zeros(len(topo), dtype=np.float64)
         t = self.table
         if len(t):
@@ -851,9 +857,9 @@ class ClusterSim:
                     )
                 if event.domain not in self.topology.index:
                     raise KeyError(f"unknown domain {event.domain!r}")
-                self._domain_cap_override[
-                    self.topology.index[event.domain]
-                ] = float(event.cap)
+                self._cap_overrides.set(
+                    self.topology.index[event.domain], event.round, event.cap
+                )
             else:
                 raise TypeError(f"unknown event {event!r}")
         rows = (
@@ -1433,6 +1439,13 @@ class ClusterSim:
                     "scenario topology differs from the sim's attached one"
                 )
         records: list[RoundRecord] = []
+        # receding-horizon controllers get a per-round budget outlook: the
+        # provider-backed cap forecast plus the CO2 (or price) weight
+        # signal over the controller's horizon (DESIGN.md §15)
+        horizon = int(getattr(controller, "horizon", 1) or 1)
+        feeds_outlook = horizon > 1 and hasattr(
+            controller, "set_budget_outlook"
+        )
         for r in range(scenario.n_rounds):
             events = scenario.events_at(r)
             touched = self.apply_events(events) if events else []
@@ -1445,6 +1458,21 @@ class ClusterSim:
             )
             _, recv_rows, pool = self.partition_rows()
             b = scenario.budget_at(r)
+            if feeds_outlook:
+                caps = [
+                    pool if c is None else float(c)
+                    for c in scenario.budget_forecast(r, horizon)
+                ]
+                caps[0] = float(pool if b is None else b)
+                weights = scenario.carbon_forecast(r, horizon)
+                if all(w is None for w in weights):
+                    weights = scenario.price_forecast(r, horizon)
+                controller.set_budget_outlook(
+                    caps,
+                    None
+                    if all(w is None for w in weights)
+                    else [1.0 if w is None else float(w) for w in weights],
+                )
             res = self.run_round(
                 controller,
                 budget=pool if b is None else b,
@@ -1460,6 +1488,7 @@ class ClusterSim:
                     n_alive=int(np.count_nonzero(self.table.alive)),
                     events=events,
                     power_price=scenario.price_at(r),
+                    carbon_intensity=scenario.carbon_at(r),
                     telemetry=self.last_telemetry,
                     domain_draw=self.last_domain_draw,
                     domain_caps=self.last_domain_caps,

@@ -34,3 +34,7 @@ python -m pytest -x -q tests/test_kernels.py
 echo "== incremental allocation bench (fast tiers; parity + regression guard vs committed JSON; incl. fused warm re-solve) =="
 python -m benchmarks.incremental_alloc --fast --fused \
   --check BENCH_incremental_alloc.json --out BENCH_incremental_alloc.json
+
+echo "== budget horizon bench (fast day; compliance + MPC-beats-myopic + regression guard vs committed JSON) =="
+python -m benchmarks.budget_horizon --fast \
+  --check BENCH_budget_horizon.json --out BENCH_budget_horizon.json

@@ -11,7 +11,10 @@ caps with a mid-run ``DomainCapChange`` derating; every round must respect
 every domain cap), the **low-churn incremental tier** (1k nodes through a
 sparse event trickle: the delta-driven incremental controller must match
 the from-scratch controller bit-for-bit every round and beat it decisively
-on steady-state rounds, DESIGN.md §13), and exercises the
+on steady-state rounds, DESIGN.md §13), the **receding-horizon MPC tier**
+(a CO2-day scenario: per-round budget compliance, strictly better
+perf-per-CO2 than myopic, and horizon=1 bit-for-bit parity,
+DESIGN.md §15), and exercises the
 online-prediction path: a cold-start arrival (no pretrained surface)
 converging under the ``ecoshift_online`` controller within a handful of
 telemetry rounds.  Exits nonzero on any regression; hard wall-clock
@@ -49,6 +52,9 @@ HIER_BUDGET_S = 15.0
 
 #: wall-clock guard for the low-churn incremental tier alone
 INCR_BUDGET_S = 15.0
+
+#: wall-clock guard for the receding-horizon (MPC) tier alone
+MPC_BUDGET_S = 15.0
 
 
 def scaling_smoke(system, apps, surfs) -> None:
@@ -204,6 +210,59 @@ def incremental_smoke(system, apps, surfs) -> None:
     )
 
 
+def mpc_smoke(system, apps, surfs) -> None:
+    """Receding-horizon tier (DESIGN.md §15): a CO2-day scenario through
+    the MPC controller must (a) never exceed any round's instantaneous
+    budget, (b) emit strictly less carbon than myopic at strictly better
+    perf-per-CO2, and (c) be bit-for-bit myopic when horizon=1."""
+    from repro.cluster import budget as bm
+
+    n, n_rounds = 100, 24
+    t0 = time.perf_counter()
+    scen = Scenario.carbon_aware(n_rounds, bm.ConstantProvider(2.0 * n))
+    runs = {}
+    for name, kw in (
+        ("myopic", {}),
+        ("h1", {"horizon": 1, "eco_factor": 0.7}),
+        ("mpc", {"horizon": 8, "eco_factor": 0.7}),
+    ):
+        sim = ClusterSim.build(
+            system, apps, surfs, n_nodes=n, seed=0,
+            initial_caps=(150.0, 150.0),
+        )
+        runs[name] = sim.run(scen, make_controller("ecoshift", system, **kw))
+    for ra, rb in zip(runs["myopic"].records, runs["h1"].records):
+        assert ra.result.allocation.caps == rb.result.allocation.caps, (
+            "horizon=1 diverged from the plain controller"
+        )
+    def score(res):
+        value = sum(r.avg_improvement for r in res.records)
+        grams = 0.0
+        for rec in res.records:
+            spent = rec.result.allocation.spent
+            assert spent <= rec.result.budget + 1e-6, (
+                f"round {rec.round}: spent {spent:.1f} W over budget "
+                f"{rec.result.budget:.1f} W"
+            )
+            grams += rec.carbon_intensity * spent
+        return value, grams
+    v0, g0 = score(runs["myopic"])
+    v1, g1 = score(runs["mpc"])
+    assert g1 < g0, f"MPC emitted no less carbon ({g1:.0f} vs {g0:.0f})"
+    assert v1 / g1 > v0 / g0, (
+        f"MPC perf-per-CO2 {v1 / g1:.3g} not better than myopic {v0 / g0:.3g}"
+    )
+    elapsed = time.perf_counter() - t0
+    assert elapsed < MPC_BUDGET_S, (
+        f"MPC tier took {elapsed:.1f} s (guard {MPC_BUDGET_S} s)"
+    )
+    print(
+        f"mpc       {n} nodes x {n_rounds} rounds in {elapsed:.1f} s, "
+        f"h1==myopic bit-for-bit, CO2 {g0 / 1e3:.0f}->{g1 / 1e3:.0f} kg-ish "
+        f"units, perf-per-CO2 {v0 / g0 * 1e6:.3f}->{v1 / g1 * 1e6:.3f}"
+    )
+
+
 def online_prediction_smoke(system, apps, surfs) -> None:
     """Cold-start arrival through the telemetry-driven prediction loop."""
     train = [a for a in apps if a.sclass in "CGB"][:8]
@@ -310,6 +369,8 @@ def main() -> None:
     hier_smoke(system, apps, surfs)
 
     incremental_smoke(system, apps, surfs)
+
+    mpc_smoke(system, apps, surfs)
 
     online_prediction_smoke(system, apps, surfs)
 
