@@ -19,6 +19,13 @@ hierarchical allocation is asserted cap-for-cap equal to the flat one; at
 10k nodes the multi-domain warm round must finish within 2x the flat warm
 round (the DESIGN.md §12 acceptance bar).
 
+Deep tiers (ISSUE 8) then time 4-level site → row → PDU → chassis trees
+with binding caps at every level — up to 100k nodes, whose warm round
+must land within 3x the same run's 10k hier-16 warm round — through both
+the host incremental controller and the fused device-resident one.
+``--smoke-1m`` builds (and coverage-validates) a million-node 4-level
+tree and solves one sampled-PDU sub-tree round.
+
 Run as a module to emit ``BENCH_hier_alloc.json``:
 
     PYTHONPATH=src python -m benchmarks.hier_alloc [--fast]
@@ -38,6 +45,26 @@ MAX_RATIO_VS_FLAT = 2.0
 
 #: rack headroom as a fraction of the rack's even budget share
 RACK_HEADROOM_FRAC = 0.6
+
+#: acceptance bar (ISSUE 8): the 100k-node 4-level warm round must land
+#: within this factor of the 10k hier-16 warm round — the larger of the
+#: same run's measurement and the committed anchor below, so an
+#: unusually quick 10k round on a fast machine doesn't turn a 10x node
+#: scale-up into a flaky failure
+DEEP_MAX_RATIO_VS_10K = 3.0
+
+#: committed BENCH_hier_alloc.json 10k hier-16 warm round (seconds) at
+#: the time the deep tiers landed; floors the ratio bar's denominator
+DEEP_ANCHOR_10K_WARM_S = 0.1543
+
+#: deep-tree per-level headroom fractions (level 1 = rows, then PDUs,
+#: then leaf chassis) of each domain's node-proportional budget share —
+#: strictly tightening down the tree, so every level genuinely binds
+DEEP_LEVEL_FRACS = (0.9, 0.75, 0.6)
+
+#: deep bench tiers: (n_nodes, fanouts) — 4-level site → row → PDU →
+#: chassis trees; the 100k tier is the ISSUE 8 scale target
+DEEP_TIERS = [(1000, (2, 2, 2)), (100_000, (4, 5, 5))]
 
 
 def _sim(system, apps, surfs, n: int, topology=None) -> ClusterSim:
@@ -75,6 +102,49 @@ def _topology(system, apps, surfs, n: int, n_racks: int, budget: float):
     return PowerTopology(PowerDomain(name="site", cap=1e18, children=racks))
 
 
+def _node_counts(dom, index, out) -> int:
+    i = index[dom.name]
+    if dom.children:
+        out[i] = sum(_node_counts(c, index, out) for c in dom.children)
+    else:
+        out[i] = sum(hi - lo for lo, hi in dom.nodes)
+    return out[i]
+
+
+def _deep_topology(system, apps, surfs, n: int, fanouts, budget: float):
+    """Arbitrary-depth site → row → PDU → chassis tree with binding caps
+    at *every* level: each domain gets its committed draw plus a
+    per-level fraction of its node-proportional budget share, the
+    fractions tightening toward the leaves (root stays unconstrained —
+    the cluster budget is the binding root signal)."""
+    probe = _sim(
+        system, apps, surfs, n,
+        topology=PowerTopology.uniform_tree(
+            n, fanouts, [1e15] * (len(fanouts) + 1)
+        ),
+    )
+    _, committed, _ = probe.domain_headroom(0)
+    index = probe.topology.index
+    counts: dict[int, int] = {}
+    _node_counts(probe.topology.domains[0], index, counts)
+
+    def recap(dom, depth):
+        i = index[dom.name]
+        if depth == 0:
+            cap = 1e18
+        else:
+            frac = DEEP_LEVEL_FRACS[min(depth - 1, len(DEEP_LEVEL_FRACS) - 1)]
+            cap = float(committed[i]) + frac * budget * counts[i] / n
+        return PowerDomain(
+            name=dom.name,
+            cap=cap,
+            nodes=dom.nodes,
+            children=tuple(recap(c, depth + 1) for c in dom.children),
+        )
+
+    return PowerTopology(recap(probe.topology.domains[0], 0), n_nodes=n)
+
+
 def _timed_round(sim, ctrl, budget: float) -> tuple[float, object]:
     t0 = time.perf_counter()
     res = sim.run_round(ctrl, budget=budget)
@@ -97,6 +167,7 @@ def run(lines: list[str], *, fast: bool = False, results: list | None = None):
     system, apps, surfs = get_suite("system1-a100")
     tiers = [1000] if fast else [1000, 10000]
     fanouts = [1, 4, 16]
+    warm_10k_hier16 = None
     for n in tiers:
         budget = _budget(n)
 
@@ -133,6 +204,8 @@ def run(lines: list[str], *, fast: bool = False, results: list | None = None):
             flat_over = _max_overdraw(sim_v)
 
             ratio = t_warm / t_flat_warm
+            if n == 10000 and n_racks == 16:
+                warm_10k_hier16 = t_warm
             if n >= 10000 and n_racks > 1:
                 assert ratio <= MAX_RATIO_VS_FLAT, (
                     f"hier round at n={n}, {n_racks} racks took "
@@ -164,6 +237,123 @@ def run(lines: list[str], *, fast: bool = False, results: list | None = None):
         if results is not None:
             results.append(tier)
 
+    # deep (>= 4-level) tiers: site -> row -> PDU -> chassis trees with
+    # binding caps at every level (ISSUE 8).  The 100k tier is the scale
+    # target: its warm round must land within DEEP_MAX_RATIO_VS_10K x the
+    # same run's 10k hier-16 warm round.
+    deep_tiers = DEEP_TIERS[:1] if fast else DEEP_TIERS
+    for n, fanouts_t in deep_tiers:
+        budget = _budget(n)
+        topo = _deep_topology(system, apps, surfs, n, fanouts_t, budget)
+
+        sim_d = _sim(system, apps, surfs, n, topology=topo)
+        ctrl_d = make_controller("ecoshift_hier", system)
+        t_cold, res_d = _timed_round(sim_d, ctrl_d, budget)
+        over = _max_overdraw(sim_d)
+        assert over <= 1e-6, "deep hierarchical path overdrew a domain"
+        t_warm, _ = _timed_round(sim_d, ctrl_d, budget)
+        assert _max_overdraw(sim_d) <= 1e-6, (
+            "deep hierarchical warm round overdrew a domain"
+        )
+
+        # fused (device-resident) controller on a fresh identical sim:
+        # round 1 falls back (structure build), round 2 compiles, round 3
+        # is the steady-state warm round the envelope bar measures.
+        sim_u = _sim(system, apps, surfs, n, topology=topo)
+        ctrl_u = make_controller("ecoshift_hier", system, fused=True)
+        _, res_u = _timed_round(sim_u, ctrl_u, budget)
+        assert dict(res_u.allocation.caps) == dict(res_d.allocation.caps), (
+            "fused deep cold round diverged from the host controller"
+        )
+        sim_u.run_round(ctrl_u, budget=budget)
+        t_fused_warm, _ = _timed_round(sim_u, ctrl_u, budget)
+        assert _max_overdraw(sim_u) <= 1e-6, (
+            "fused deep warm round overdrew a domain"
+        )
+
+        if n >= 100_000:
+            anchor = max(warm_10k_hier16 or 0.0, DEEP_ANCHOR_10K_WARM_S)
+            bar = DEEP_MAX_RATIO_VS_10K * anchor
+            best = min(t_warm, t_fused_warm)
+            assert best <= bar, (
+                f"deep {n}-node warm round took {best:.3f}s, above "
+                f"{DEEP_MAX_RATIO_VS_10K}x the 10k hier-16 warm anchor "
+                f"({anchor:.3f}s -> bar {bar:.3f}s)"
+            )
+
+        depth = len(fanouts_t) + 1
+        entry = {
+            "n_nodes": n,
+            "budget_w": budget,
+            "fanouts_tree": list(fanouts_t),
+            "depth": depth,
+            "n_domains": len(topo.domains),
+            "hier_round_s": {"cold": t_cold, "warm": t_warm},
+            "fused_round_s": {"warm": t_fused_warm},
+            "max_overdraw_w": over,
+            "avg_improvement": res_d.avg_improvement,
+        }
+        if results is not None:
+            results.append(entry)
+        lines.append(
+            csv_line(
+                f"hier_alloc.deep.n{n}.d{depth}",
+                t_warm * 1e6,
+                f"warm_s={t_warm:.4f};fused_warm_s={t_fused_warm:.4f};"
+                f"cold_s={t_cold:.4f};domains={len(topo.domains)};"
+                f"imp={res_d.avg_improvement * 100:.2f}%;"
+                f"overdraw_w={over:.0f}",
+            )
+        )
+
+
+def smoke_1m(lines: list[str]) -> None:
+    """1M-node smoke: build (and coverage-validate) a 4-level million-node
+    tree, then run one allocation round on a sampled PDU sub-tree (~10k
+    nodes) shifted to the origin — proof the builder and the deep solver
+    hold up at the million-node topology scale without paying a full
+    million-node simulation."""
+    system, apps, surfs = get_suite("system1-a100")
+    n = 1_000_000
+    t0 = time.perf_counter()
+    topo = PowerTopology.uniform_tree(
+        n, (10, 10, 10), [1e18, 1e15, 1e15, 1e15]
+    )
+    t_build = time.perf_counter() - t0
+    assert len(topo.domains) == 1 + 10 + 100 + 1000
+
+    # sample one PDU (10 chassis, n/100 nodes); shift node ids to 0
+    pdu = topo.domains[0].children[0].children[0]
+    off = min(lo for leaf in pdu.children for lo, _hi in leaf.nodes)
+    n_sub = sum(hi - lo for leaf in pdu.children for lo, hi in leaf.nodes)
+
+    def shift(dom):
+        return PowerDomain(
+            name=dom.name,
+            cap=dom.cap,
+            nodes=tuple((lo - off, hi - off) for lo, hi in dom.nodes),
+            children=tuple(shift(c) for c in dom.children),
+        )
+
+    sub = PowerTopology(
+        PowerDomain(name="site", cap=1e18, children=(shift(pdu),)),
+        n_nodes=n_sub,
+    )
+    budget = _budget(n_sub)
+    sim = _sim(system, apps, surfs, n_sub, topology=sub)
+    ctrl = make_controller("ecoshift_hier", system)
+    t_round, res = _timed_round(sim, ctrl, budget)
+    assert _max_overdraw(sim) <= 1e-6, "1M-smoke sub-tree overdrew a domain"
+    lines.append(
+        csv_line(
+            "hier_alloc.smoke1m",
+            t_round * 1e6,
+            f"build_s={t_build:.4f};round_s={t_round:.4f};"
+            f"sampled_nodes={n_sub};"
+            f"imp={res.avg_improvement * 100:.2f}%",
+        )
+    )
+
 
 #: regression-guard tolerance vs a committed reference (mirrors
 #: benchmarks.cluster_scaling; generous for shared-runner noise)
@@ -180,10 +370,34 @@ def check_against(reference: dict, results: list) -> list[str]:
     ref_by_key = {
         (t["n_nodes"], f["n_racks"]): f
         for t in reference.get("tiers", [])
-        for f in t["fanouts"]
+        for f in t.get("fanouts", [])
+    }
+    ref_deep = {
+        (t["n_nodes"], tuple(t["fanouts_tree"])): t
+        for t in reference.get("tiers", [])
+        if "fanouts_tree" in t
     }
     problems = []
     for tier in results:
+        if "fanouts_tree" in tier:
+            ref = ref_deep.get((tier["n_nodes"], tuple(tier["fanouts_tree"])))
+            if ref is None:
+                continue
+            for key, fresh, base in (
+                ("hier", tier["hier_round_s"]["warm"],
+                 ref["hier_round_s"]["warm"]),
+                ("fused", tier["fused_round_s"]["warm"],
+                 ref["fused_round_s"]["warm"]),
+            ):
+                budget = CHECK_FACTOR * base + CHECK_SLACK_S
+                if fresh > budget:
+                    problems.append(
+                        f"deep n={tier['n_nodes']}, "
+                        f"fanouts={tier['fanouts_tree']}: warm {key} round "
+                        f"{fresh:.3f}s exceeds {budget:.3f}s "
+                        f"({CHECK_FACTOR}x ref {base:.3f}s + {CHECK_SLACK_S}s)"
+                    )
+            continue
         for f in tier["fanouts"]:
             ref = ref_by_key.get((tier["n_nodes"], f["n_racks"]))
             if ref is None:
@@ -216,7 +430,19 @@ def main() -> None:
         help="compare fresh warm hier-round times against a committed "
         "reference (loaded before --out overwrites it); exit 1 on regression",
     )
+    ap.add_argument(
+        "--smoke-1m",
+        action="store_true",
+        help="run only the 1M-node topology smoke (build + sampled "
+        "sub-tree round); no JSON is written",
+    )
     args = ap.parse_args()
+
+    if args.smoke_1m:
+        smoke_lines = ["name,us_per_call,derived"]
+        smoke_1m(smoke_lines)
+        print("\n".join(smoke_lines))
+        return
 
     reference = None
     if args.check:

@@ -496,6 +496,10 @@ class EcoShiftController(_OptionCachingController):
         self._fused_state = mckp.FusedState()
         #: 'fused' | 'host' — which path produced the last solution
         self.last_solver: str | None = None
+        #: why the last fused attempt routed to host ("" when it stayed
+        #: fused, wasn't attempted, or hit the alloc cache) — mirrors
+        #: ``FusedRoundStats.fallback_reason``
+        self.last_fallback_reason: str = ""
         #: device seconds spent inside the last fused pipeline call (0.0
         #: for host rounds and alloc-cache hits)
         self.last_device_s: float = 0.0
@@ -674,13 +678,19 @@ class EcoShiftController(_OptionCachingController):
             if hit is not None:
                 self.last_solver = "cache"
                 self.last_device_s = 0.0
+                self.last_fallback_reason = ""
                 return hit
         else:
             key = None
         sol = None
         self.last_device_s = 0.0
+        self.last_fallback_reason = ""
         if incremental and self.fused:
             sol = self._try_fused_grouped(groups, budget)
+            if sol is None:
+                self.last_fallback_reason = self._fused_state.stats.get(
+                    "fallback_reason", ""
+                )
         self.last_solver = "fused" if sol is not None else "host"
         if sol is None:
             sol = mckp.solve_grouped(
@@ -920,11 +930,13 @@ class EcoShiftHierController(EcoShiftController):
                 self.last_domain_spent = hit[1]
                 self.last_solver = "cache"
                 self.last_device_s = 0.0
+                self.last_fallback_reason = ""
                 return hit[0]
         if root is None:
             root = policies_mod.domain_tree(self.topology, domain_extra, by_leaf)
         sol = None
         self.last_device_s = 0.0
+        self.last_fallback_reason = ""
         if incremental and self.fused:
             fstate = self._fused_state
             d0 = fstate.stats["device_s"]
@@ -932,6 +944,10 @@ class EcoShiftHierController(EcoShiftController):
                 root, budget, state=self._hier_state, fstate=fstate
             )
             self.last_device_s = fstate.stats["device_s"] - d0
+            if sol is None:
+                self.last_fallback_reason = fstate.stats.get(
+                    "fallback_reason", ""
+                )
         self.last_solver = "fused" if sol is not None else "host"
         if sol is None:
             sol = mckp.solve_hierarchical(

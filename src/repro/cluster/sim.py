@@ -1370,6 +1370,9 @@ class ClusterSim:
             getattr(controller, "last_device_s", 0.0) or 0.0
         )
         prof["alloc_solver"] = getattr(controller, "last_solver", None) or ""
+        prof["alloc_fallback_reason"] = (
+            getattr(controller, "last_fallback_reason", "") or ""
+        )
 
         tp = _time.perf_counter()
         if self.topology is not None:

@@ -1414,12 +1414,13 @@ def solve_hierarchical(
     frontier_cache: MutableMapping | None = None,
     state: HierState | None = None,
 ) -> MCKPSolution:
-    """Two-level topology-aware MCKP over a power-domain tree.
+    """Topology-aware MCKP over an arbitrary-depth power-domain tree.
 
     Per-domain group-collapsed aggregate tables become capped value-vs-spend
     frontiers; the upper-level DP folds sibling frontiers through a
-    balanced aggregation tree to split each parent's budget subject to
-    every domain's local cap, then backtracks down to the per-receiver
+    balanced aggregation tree *recursively at every internal domain* to
+    split each parent's budget subject to every domain's local cap (site
+    → row → PDU → ... → leaf), then backtracks down to the per-receiver
     picks.  Every domain's spend is <= its cap by construction, and with a
     single root domain whose cap >= the cluster budget the result is
     **bit-for-bit** ``solve_sparse_grouped`` (``solver='sparse'``) /
@@ -1690,6 +1691,7 @@ class FusedState:
             "row_uploads": 0,
             "short_circuits": 0,
             "device_s": 0.0,
+            "fallback_reason": "",
         }
 
     def clear(self) -> None:
@@ -1720,27 +1722,154 @@ def _fused_patch_fn():
 
 
 @functools.cache
+def _fused_shards() -> int:
+    """Device count the fused leaf scan shards over.
+
+    Defaults to every visible device (1 on a single-device host — the
+    transparent unsharded path); ``REPRO_FUSED_SHARDS`` overrides, so a
+    multi-device process can also compile the single-device pipeline and
+    certify the sharded one bitwise against it.
+    """
+    import os
+
+    import jax
+
+    env = os.environ.get("REPRO_FUSED_SHARDS")
+    n = int(env) if env else jax.device_count()
+    return max(1, min(n, jax.device_count()))
+
+
+@functools.cache
+def _tree_ops(
+    tree_sig: tuple | int, first_out: int
+) -> tuple[tuple, dict, dict, tuple]:
+    """Lower a nested domain signature to its static combine-op list.
+
+    ``tree_sig``: leaf = spec row index; internal domain =
+    ``("d", dom_idx, (child_sigs...))`` with ``dom_idx`` post-order.
+    Rows ``0..L-1`` are the DFS leaves; each pairwise combine allocates
+    the next row id from ``first_out``.  Per domain the ops replay
+    ``_combine_frontiers``' balanced order exactly (adjacent pairs, odd
+    tail carried up; a single-child domain emits no op — its cap already
+    flows through the child's cascaded eff).  Returns ``(ops, depth,
+    leaves_under, dom_rows)``: ops as ``(left_row, right_row, out_row,
+    dom_idx)`` in topological order, per-row combine depth and leaf
+    count, and each internal domain's result row.
+    """
+    ops: list[tuple[int, int, int, int]] = []
+    depth: dict[int, int] = {}
+    leaves_under: dict[int, int] = {}
+    nxt = [first_out]
+    dom_rows: dict[int, int] = {}
+
+    def build(sig):
+        if isinstance(sig, int):
+            depth.setdefault(sig, 0)
+            leaves_under.setdefault(sig, 1)
+            return sig
+        _tag, dom_idx, children = sig
+        rows = [build(c) for c in children]
+        while len(rows) > 1:
+            merged = []
+            for i in range(0, len(rows) - 1, 2):
+                left, right = rows[i], rows[i + 1]
+                out = nxt[0]
+                nxt[0] += 1
+                depth[out] = 1 + max(depth[left], depth[right])
+                leaves_under[out] = leaves_under[left] + leaves_under[right]
+                ops.append((left, right, out, dom_idx))
+                merged.append(out)
+            if len(rows) % 2:
+                merged.append(rows[-1])
+            rows = merged
+        dom_rows[dom_idx] = rows[0]
+        return rows[0]
+
+    build(tree_sig)
+    # renumber output rows into wave (depth) order: the pipeline buffer
+    # appends each wave's outputs contiguously, so a row's id must equal
+    # its append position — creation order interleaves domains and would
+    # not (stable sort keeps within-depth creation order)
+    order = sorted(range(len(ops)), key=lambda i: depth[ops[i][2]])
+    remap = {
+        ops[i][2]: first_out + pos for pos, i in enumerate(order)
+    }
+    ops_w = tuple(
+        (
+            remap.get(ops[i][0], ops[i][0]),
+            remap.get(ops[i][1], ops[i][1]),
+            remap[ops[i][2]],
+            ops[i][3],
+        )
+        for i in order
+    )
+    return (
+        ops_w,
+        {remap.get(r, r): d for r, d in depth.items()},
+        {remap.get(r, r): v for r, v in leaves_under.items()},
+        tuple(
+            remap.get(dom_rows[i], dom_rows[i]) for i in range(len(dom_rows))
+        ),
+    )
+
+
+def _tree_waves(
+    ops: tuple, depth: dict, leaves_under: dict, nb: int, nbt: int
+) -> tuple:
+    """Group combine ops into depth waves for batched kernel launches.
+
+    Ops at the same combine depth are independent (inputs come from
+    strictly shallower rows), so each wave is one row-batched (max,+)
+    dispatch.  Per wave, the enumerated right-offset count is the static
+    support bound of its right inputs: ``min(nbt, max_right_leaves *
+    (nb - 1) + 1)`` — offsets beyond a subtree's reachable spend are
+    provably ``-inf`` and dropping them is bitwise-neutral.
+    """
+    by_depth: dict[int, list] = {}
+    for op in ops:
+        by_depth.setdefault(depth[op[2]], []).append(op)
+    return tuple(
+        (
+            min(nbt, max(leaves_under[op[1]] for op in wave) * (nb - 1) + 1),
+            tuple(wave),
+        )
+        for _d, wave in sorted(by_depth.items())
+    )
+
+
+@functools.cache
 def _fused_pipeline_fn(
-    use_tree: bool, L: int, S: int, K: int, NB: int, NBT: int, block_b: int,
-    interpret: bool,
+    tree: tuple | None, L: int, Lp: int, S: int, K: int, NB: int, NBT: int,
+    block_b: int, shards: int, interpret: bool,
 ):
     """Build the jitted fused round for one static shape.
 
     One XLA program: batched leaf super-stage DPs (Pallas sparse-option
-    (max,+) stages with backpointer outputs), the balanced frontier
-    aggregation tree (the same kernel with dense descending offsets),
-    the root argmax, and the index-based backtrack — device gathers
-    through the recorded backpointer tables instead of a host Python
-    unwind.  Mirrors ``_superstage_dp_batch`` + ``_combine_frontiers`` +
-    ``_backtrack_superstages`` op for op (float64, first-max argmax,
-    per-stage feasibility masks), so its decisions are bit-for-bit the
-    sparse host path's.
+    (max,+) stages with backpointer outputs), the depth-wave frontier
+    aggregation schedule of an arbitrary-depth domain tree (the same
+    kernel with dense descending offsets, masked at each owning domain's
+    cap cut), the root argmax, and the index-based backtrack — device
+    gathers through the recorded backpointer tables instead of a host
+    Python unwind.  Mirrors ``_superstage_dp_batch`` +
+    ``_combine_frontiers`` + ``_backtrack_superstages`` op for op
+    (float64, first-max argmax, per-stage feasibility masks, per-pair
+    cap pruning), so its decisions are bit-for-bit the sparse host
+    path's at any tree depth.
+
+    ``tree`` is the static ``(waves, dom_rows)`` schedule from
+    ``_tree_ops``/``_tree_waves`` (None for flat/leaf-root rounds);
+    ``Lp >= L`` is the leaf row count padded to a multiple of
+    ``shards`` — with ``shards > 1`` the leaf scan runs under
+    ``shard_map`` over the leaf axis (rows are independent, so the
+    sharded scan is bitwise the single-device one; DESIGN.md §16), and
+    the aggregation waves tree-reduce the gathered per-device frontier
+    partials.
 
     Two lattice grids keep the work proportional to the *support*: leaf
     DPs and backtracking run on the per-leaf grid ``NB`` (max leaf spend
-    + 1), the aggregation tree on ``NBT >= NB`` (root-cut/leaf-sum
-    bound), and each tree level enumerates only ``K_level`` right-spend
-    offsets — the static support bound of its right subtrees.  Dropped
+    + 1), the aggregation waves on ``NBT >= NB`` (cap-cut/support-sum
+    bound), and each wave enumerates only ``K_level`` right-spend
+    offsets — the static support bound of its right inputs.  Dropped
     grid tails and offsets are provably ``-inf`` (beyond every reachable
     spend sum), so values, first-max winners and backpointers of every
     reachable state are bitwise unchanged versus the single-grid form.
@@ -1750,29 +1879,13 @@ def _fused_pipeline_fn(
 
     from repro.kernels import mckp_dp as _mk
 
-    # static balanced aggregation-tree shape: adjacent pairs, odd tail
-    # up; per level, the right subtrees' leaf counts bound the spend
-    # support the combine must enumerate
-    levels: list[tuple[int, int, int]] = []
-    if use_tree:
-        sizes = [1] * L
-        while len(sizes) > 1:
-            pairs, odd = len(sizes) // 2, len(sizes) % 2
-            k_level = min(
-                NBT,
-                max(sizes[2 * p + 1] for p in range(pairs)) * (NB - 1) + 1,
-            )
-            levels.append((pairs, odd, k_level))
-            sizes = [
-                sizes[2 * p] + sizes[2 * p + 1] for p in range(pairs)
-            ] + (sizes[-1:] if odd else [])
+    waves, dom_rows = tree if tree is not None else ((), ())
+    root_row = dom_rows[-1] if dom_rows else 0
 
-    @jax.jit
-    def run(kb, vb, tmax_leaf, tcut_root):
+    def leaf_scan(kb, vb, tmax_leaf):
         t_idx = jnp.arange(NB)
-        rows_i = jnp.arange(L)
         neg = jnp.asarray(-jnp.inf, vb.dtype)
-        dp0 = jnp.full((L, NB), neg).at[:, 0].set(0.0)
+        dp0 = jnp.full((kb.shape[1], NB), neg).at[:, 0].set(0.0)
 
         def stage(dp, skv):
             kb_s, vb_s = skv
@@ -1784,50 +1897,87 @@ def _fused_pipeline_fn(
             out = jnp.where(t_idx[None, :] > tmax_leaf[:, None], neg, out)
             return out, arg
 
-        dp, wins = jax.lax.scan(stage, dp0, (kb, vb))  # wins: [S, L, NB]
+        return jax.lax.scan(stage, dp0, (kb, vb))
 
-        # frontier aggregation tree: each combine is the same sparse-option
-        # kernel with the dense descending offset row (b-spend descending ==
-        # the dict DP's smallest-a-spend tie-break), pruned at the root cap
+    if shards > 1:
+        from jax.sharding import PartitionSpec as P
+
+        try:
+            from jax.experimental.shard_map import shard_map
+        except ImportError:  # newer jax: promoted out of experimental
+            from jax import shard_map  # type: ignore[attr-defined]
+
+        from repro.kernels import ops as _kops
+
+        leaf_fn = shard_map(
+            leaf_scan,
+            mesh=_kops.leaf_shard_mesh(shards),
+            in_specs=(
+                P(None, "leaves", None),
+                P(None, "leaves", None),
+                P("leaves"),
+            ),
+            out_specs=(P("leaves", None), P(None, "leaves", None)),
+            check_rep=False,  # pallas_call carries no replication rule
+        )
+    else:
+        leaf_fn = leaf_scan
+
+    @jax.jit
+    def run(kb, vb, tmax_leaf, tcuts):
+        rows_i = jnp.arange(L)
+        neg = jnp.asarray(-jnp.inf, vb.dtype)
+        dp, wins = leaf_fn(kb, vb, tmax_leaf)  # dp: [Lp, NB]; wins: [S, Lp, NB]
+
+        # frontier aggregation: depth waves of pairwise combines, each the
+        # same sparse-option kernel with the dense descending offset row
+        # (b-spend descending == the dict DP's smallest-a-spend tie-break),
+        # masked at the owning domain's cap cut — the device image of
+        # _combine_frontiers applying _maxplus_pair(..., eff) at every pair
         t_idx_tree = jnp.arange(NBT)
         tree_block = min(NBT, 256)
-        cur = jnp.concatenate(
-            [dp, jnp.full((L, NBT - NB), neg)], axis=1
-        ) if NBT > NB else dp
+        buf = (
+            jnp.concatenate([dp, jnp.full((Lp, NBT - NB), neg)], axis=1)
+            if NBT > NB
+            else dp
+        )
         wins_tree = []
-        for pairs, odd, k_level in levels:
-            left = cur[0 : 2 * pairs : 2]
-            right = cur[1 : 2 * pairs : 2]
+        for k_level, wave in waves:
+            left = buf[jnp.asarray([op[0] for op in wave])]
+            right = buf[jnp.asarray([op[1] for op in wave])]
             comb_desc = jnp.arange(k_level - 1, -1, -1, dtype=jnp.int32)
-            ckb = jnp.broadcast_to(comb_desc[None, :], (pairs, k_level))
+            ckb = jnp.broadcast_to(comb_desc[None, :], (len(wave), k_level))
             cvb = right[:, k_level - 1 :: -1]
             out, arg = _mk.maxplus_stage_pallas_batched(
                 left, ckb, cvb, block_b=tree_block, interpret=interpret
             )
-            out = jnp.where(t_idx_tree[None, :] > tcut_root, neg, out)
+            tc = tcuts[jnp.asarray([op[3] for op in wave])]
+            out = jnp.where(t_idx_tree[None, :] > tc[:, None], neg, out)
             wins_tree.append(arg)
-            cur = (
-                jnp.concatenate([out, cur[2 * pairs :]], axis=0) if odd else out
-            )
+            buf = jnp.concatenate([buf, out], axis=0)
 
-        root_row = cur[0]
-        t_root = jnp.argmax(root_row).astype(jnp.int32)  # first max
-        root_val = root_row[t_root]
+        root_vec = buf[root_row]
+        t_root = jnp.argmax(root_vec).astype(jnp.int32)  # first max
+        root_val = root_vec[t_root]
 
-        # tree backtrack: split t down the static structure via gathers
-        ts = [t_root]
-        for (pairs, odd, k_level), win in zip(
-            reversed(levels), reversed(wins_tree)
-        ):
-            prev = []
-            for p in range(pairs):
-                j = win[p, ts[p]]
+        # tree backtrack: split t down the static schedule via gathers,
+        # in reverse wave order (an op's output t is known before its
+        # inputs are needed — the schedule is topological)
+        t_of = {root_row: t_root}
+        for (k_level, wave), win in zip(reversed(waves), reversed(wins_tree)):
+            for i in range(len(wave) - 1, -1, -1):
+                l_row, r_row, o_row, _d = wave[i]
+                t_out = t_of[o_row]
+                j = win[i, t_out]
                 t_r = (k_level - 1 - j).astype(jnp.int32)
-                prev.extend([(ts[p] - t_r).astype(jnp.int32), t_r])
-            if odd:
-                prev.append(ts[pairs])
-            ts = prev
-        t_leaf = jnp.stack(ts) if len(ts) > 1 else jnp.reshape(t_root, (1,))
+                t_of[r_row] = t_r
+                t_of[l_row] = (t_out - t_r).astype(jnp.int32)
+        t_leaf = jnp.stack([t_of[i] for i in range(L)]).astype(jnp.int32)
+        t_dom = (
+            jnp.stack([t_of[r] for r in dom_rows]).astype(jnp.int32)
+            if dom_rows
+            else jnp.zeros((0,), jnp.int32)
+        )
 
         # leaf backtrack: walk the backpointer tables stage-by-stage, the
         # device-gather analogue of _IntStages.backtrack
@@ -1838,7 +1988,7 @@ def _fused_pipeline_fn(
 
         _, js_rev = jax.lax.scan(bstep, t_leaf, (kb[::-1], wins[::-1]))
         js = js_rev[::-1].swapaxes(0, 1)  # [L, S]
-        return t_root, t_leaf, js, root_val
+        return t_root, t_leaf, js, root_val, t_dom
 
     return run
 
@@ -1902,7 +2052,8 @@ def _fused_run(
     specs: list[tuple],
     eff_root: float,
     kind: str,
-    root_name: str | None,
+    tree_sig: tuple | int | None,
+    doms: tuple,
     *,
     pick_cache: MutableMapping | None,
     fstate: FusedState,
@@ -1910,13 +2061,16 @@ def _fused_run(
 ) -> MCKPSolution | None:
     """One fused device round over prepared leaf specs.
 
-    ``specs``: per-leaf (name, eff, plan, curves, curve_keys) in child
+    ``specs``: per-leaf (name, eff, plan, curves, curve_keys) in DFS
     order.  ``kind``: 'flat' (grouped solve, no domain accounting),
-    'leaf_root' (hierarchical root that is itself a leaf) or 'two_level'
-    (root + leaf children).  Returns None to route the caller to the
-    host path — on off-lattice keys, oversized grids, or a structure
+    'leaf_root' (hierarchical root that is itself a leaf) or 'tree'
+    (arbitrary-depth domain tree: ``tree_sig`` is the nested signature
+    over spec indices and ``doms`` the post-order (name, eff) list of
+    internal domains, root last).  Returns None to route the caller to
+    the host path — on off-lattice keys, oversized grids, or a structure
     change against the resident banks (which are rebuilt so the *next*
-    round runs fused again).
+    round runs fused again); ``fstate.stats['fallback_reason']`` records
+    why.
     """
     import time
 
@@ -1924,14 +2078,17 @@ def _fused_run(
     import jax.experimental
     import jax.numpy as jnp
 
+    stats = fstate.stats
     L = len(specs)
     if L == 0:
+        stats["fallback_reason"] = "empty"
         return None
 
     prepped = []
     for spec in specs:
         pr = _fused_leaf_rows(spec, fstate)
         if pr is None:
+            stats["fallback_reason"] = "off_lattice"
             return None
         prepped.append(pr)
 
@@ -1944,15 +2101,19 @@ def _fused_run(
     if g <= 0:
         g = 1
 
+    shards = _fused_shards()
+    Lp = -(-L // shards) * shards  # pad rows are identity leaves
+
     s_max = 1
     k_max = 1
     nb_needed = 1
-    tmax_dev = np.zeros(L, dtype=np.int32)
+    tmax_dev = np.zeros(Lp, dtype=np.int32)
     for li, (g_l, tmax_host, rows, all_zero) in enumerate(prepped):
         if rows:
             mult = 1 if all_zero else g_l // g
             td = tmax_host * mult
             if td + 1 > _FUSED_MAX_NB:
+                stats["fallback_reason"] = "grid_overflow"
                 return None
             tmax_dev[li] = td
             nb_needed = max(nb_needed, td + 1)
@@ -1960,28 +2121,47 @@ def _fused_run(
             for kb, _, _, _ in rows:
                 k_max = max(k_max, len(kb))
 
-    use_tree = kind == "two_level" and L > 1
-    t_cut_root = 0
+    use_tree = kind == "tree"
+    tcuts = np.zeros(len(doms), dtype=np.int32)
     nbt_needed = nb_needed
+    ops: tuple = ()
+    depths: dict = {}
+    leaves_under: dict = {}
+    dom_rows: tuple = ()
     if use_tree:
-        # the exact _maxplus_pair prune: keep combined states whose
-        # reconstructed float64 key is <= eff_root + 1e-9
-        ub = int((eff_root + 1e-9) * 1e6 // g) + 1
-        if ub + 1 > 4 * _FUSED_MAX_NB:
-            return None
-        ks = (np.arange(ub + 2, dtype=np.int64) * g).astype(np.float64) * 1e-6
-        t_cut_root = int(np.flatnonzero(ks <= eff_root + 1e-9).max())
+        # the exact _maxplus_pair prune per internal domain: keep combined
+        # states whose reconstructed float64 key is <= eff + 1e-9
+        cut_by_eff: dict[float, int] = {}
+        for i, (_dn, eff_d) in enumerate(doms):
+            c = cut_by_eff.get(eff_d)
+            if c is None:
+                ub = int((eff_d + 1e-9) * 1e6 // g) + 1
+                if ub + 1 > 4 * _FUSED_MAX_NB:
+                    stats["fallback_reason"] = "grid_overflow"
+                    return None
+                ks = (
+                    np.arange(ub + 2, dtype=np.int64) * g
+                ).astype(np.float64) * 1e-6
+                c = int(np.flatnonzero(ks <= eff_d + 1e-9).max())
+                cut_by_eff[eff_d] = c
+            tcuts[i] = c
+        ops, depths, leaves_under, dom_rows = _tree_ops(tree_sig, Lp)
         # the tree grid only needs the reachable spend-sum support: every
-        # combined state beyond min(root cut, sum of leaf maxima) is -inf
-        nbt_needed = max(
-            nb_needed, min(t_cut_root, int(tmax_dev.sum())) + 1
-        )
+        # state beyond min(cap cut, sum of input supports) is -inf
+        support = {li: int(tmax_dev[li]) for li in range(L)}
+        for l_row, r_row, o_row, d in ops:
+            support[o_row] = min(
+                support[l_row] + support[r_row], int(tcuts[d])
+            )
+        nbt_needed = max(nb_needed, max(support.values()) + 1)
 
     if k_max > _FUSED_MAX_OPTS:
+        stats["fallback_reason"] = "grid_overflow"
         return None
     nb_pad = _pow2_at_least(nb_needed, 16)
     nbt_pad = _pow2_at_least(nbt_needed, 16) if use_tree else nb_pad
     if max(nb_pad, nbt_pad) > _FUSED_MAX_NB:
+        stats["fallback_reason"] = "grid_overflow"
         return None
     s_pad = max(1, -(-s_max // 8) * 8)
     k_pad = _pow2_at_least(max(k_max, 1), 4)
@@ -2009,16 +2189,20 @@ def _fused_run(
     digests = tuple(
         tuple(sorted(e[0] for e in spec[2].layout)) for spec in specs
     )
-    shape = (kind, L, s_pad, k_pad, nb_pad, nbt_pad, g, names, digests)
+    dom_names = tuple(dn for dn, _ in doms)
+    shape = (
+        kind, L, s_pad, k_pad, nb_pad, nbt_pad, g, names, digests,
+        tree_sig, dom_names,
+    )
 
     structure_changed = fstate.shape is not None and fstate.shape != shape
     rebuild = fstate.shape is None or structure_changed
 
     with jax.experimental.enable_x64():
         if rebuild:
-            kb_np = np.zeros((s_pad, L, k_pad), dtype=np.int32)
-            vb_np = np.full((s_pad, L, k_pad), -np.inf)
-            vb_np[:, :, 0] = 0.0  # identity padding stages: spend 0, +0.0
+            kb_np = np.zeros((s_pad, Lp, k_pad), dtype=np.int32)
+            vb_np = np.full((s_pad, Lp, k_pad), -np.inf)
+            vb_np[:, :, 0] = 0.0  # identity padding stages/rows: spend 0, +0.0
             row_sigs: list[list] = [[None] * s_pad for _ in range(L)]
             keys_desc: list[list] = [[None] * s_pad for _ in range(L)]
             for li, (g_l, tmax_host, rows, all_zero) in enumerate(prepped):
@@ -2039,9 +2223,10 @@ def _fused_run(
             fstate.last_key = None
             fstate.last_solution = None
             if structure_changed:
-                # ISSUE contract: layout/topology changes run the host
-                # path this round; the rebuilt banks resume fused next one
-                fstate.stats["fallbacks"] += 1
+                # contract: layout/topology changes run the host path
+                # this round; the rebuilt banks resume fused next one
+                stats["fallbacks"] += 1
+                stats["fallback_reason"] = "structure_change"
                 return None
         else:
             # delta patch: upload only the rows whose content signature
@@ -2086,9 +2271,13 @@ def _fused_run(
                 fstate.stats["row_uploads"] += len(s_idx)
                 fstate.last_key = None
 
+        tree_static = None
+        if use_tree:
+            waves = _tree_waves(ops, depths, leaves_under, nb_pad, nbt_pad)
+            tree_static = (waves, dom_rows)
         run = _fused_pipeline_fn(
-            use_tree, L, s_pad, k_pad, nb_pad, nbt_pad, min(nb_pad, 256),
-            _interpret(),
+            tree_static, L, Lp, s_pad, k_pad, nb_pad, nbt_pad,
+            min(nb_pad, 256), shards, _interpret(),
         )
         t0 = time.perf_counter()
         out = jax.block_until_ready(
@@ -2096,14 +2285,17 @@ def _fused_run(
                 fstate.kb_dev,
                 fstate.vb_dev,
                 jnp.asarray(tmax_dev),
-                jnp.int32(t_cut_root),
+                jnp.asarray(tcuts),
             )
         )
-        fstate.stats["device_s"] += time.perf_counter() - t0
-        fstate.stats["rounds"] += 1
+        stats["device_s"] += time.perf_counter() - t0
+        stats["rounds"] += 1
 
     if not np.isfinite(float(out[3])):
-        return None  # no feasible root state: keep the host path authoritative
+        # no feasible root state: keep the host path authoritative
+        stats["fallback_reason"] = "no_feasible_root"
+        return None
+    stats["fallback_reason"] = ""
     t_root = int(out[0])
     t_leaf = np.asarray(out[1])
     js = np.asarray(out[2])
@@ -2133,10 +2325,17 @@ def _fused_run(
 
     picks: dict[str, tuple[float, float, tuple[float, float]]] = {}
     domain_spent: dict[str, float] | None = (
-        {} if kind in ("two_level", "leaf_root") else None
+        {} if kind in ("tree", "leaf_root") else None
     )
-    if kind == "two_level":
-        domain_spent[root_name] = float(np.float64(t_root * g) * 1e-6)
+    if use_tree:
+        # per-internal-domain spends off the device backtrack: the
+        # float64(t * g) * 1e-6 reconstruction is the host frontier-key
+        # round-trip, so the values are bitwise _backtrack_frontier's
+        t_dom = np.asarray(out[4])
+        for i, (dname, _de) in enumerate(doms):
+            domain_spent[dname] = float(
+                np.float64(int(t_dom[i]) * g) * 1e-6
+            )
     leaf_totals: list[tuple[float, float]] = []
     for li, ((name, eff, plan, curves_, curve_keys), (tok, _pk)) in enumerate(
         zip(specs, leaf_meta)
@@ -2207,7 +2406,7 @@ def solve_grouped_fused(
     eff = float(budget)
     specs = [(None, eff, plan, curves_, curve_keys)]
     sol = _fused_run(
-        specs, eff, "flat", None, pick_cache=pick_cache, fstate=fstate
+        specs, eff, "flat", None, (), pick_cache=pick_cache, fstate=fstate
     )
     return sol
 
@@ -2219,38 +2418,59 @@ def solve_hierarchical_fused(
     state: HierState,
     fstate: FusedState,
 ) -> MCKPSolution | None:
-    """Fused device-resident form of the two-level sparse
+    """Fused device-resident form of the N-level sparse
     :func:`solve_hierarchical`.
 
-    Walks the domain tree on the host exactly like ``_sparse_frontier``
-    (same effective caps, plans and class curves — shared caches), then
-    runs the whole decision pipeline on device.  Returns None to fall
-    back to the host path: deeper-than-two-level trees, off-lattice
-    keys, oversized grids, or a structure change (new class layouts,
-    topology edits) against the resident banks.
+    Walks the arbitrary-depth domain tree on the host exactly like
+    ``_sparse_frontier`` (same cascaded effective caps, plans and class
+    curves — shared caches), lowering it to a static combine schedule
+    plus a dynamic per-domain cap-cut vector, then runs the whole
+    decision pipeline on device (DESIGN.md §16).  Returns None to fall
+    back to the host path: off-lattice keys, oversized grids, or a
+    structure change (new class layouts, topology edits) against the
+    resident banks — ``fstate.stats['fallback_reason']`` says which.
     """
     eff_root = _domain_eff(root, float(budget))
-    if root.children:
-        if any(c.children for c in root.children):
-            return None
-        leaves = list(root.children)
-        kind = "two_level"
-    else:
-        leaves = [root]
-        kind = "leaf_root"
+    if not root.children:
+        plan = _leaf_plan(root.groups, state.plan_cache)
+        curves_, curve_keys = _class_curves(
+            plan.classes, eff_root, state.curve_cache, state.chain_cache
+        )
+        specs = [(root.name, eff_root, plan, curves_, curve_keys)]
+        return _fused_run(
+            specs,
+            eff_root,
+            "leaf_root",
+            None,
+            (),
+            pick_cache=state.pick_cache,
+            fstate=fstate,
+            st=state,
+        )
+
     specs = []
-    for dom in leaves:
-        eff = _domain_eff(dom, eff_root)
+    doms: list[tuple[str, float]] = []
+
+    def walk(dom: DomainGroups, b: float):
+        eff = _domain_eff(dom, b)
+        if dom.children:
+            child_sigs = tuple(walk(c, eff) for c in dom.children)
+            doms.append((dom.name, eff))
+            return ("d", len(doms) - 1, child_sigs)
         plan = _leaf_plan(dom.groups, state.plan_cache)
         curves_, curve_keys = _class_curves(
             plan.classes, eff, state.curve_cache, state.chain_cache
         )
         specs.append((dom.name, eff, plan, curves_, curve_keys))
+        return len(specs) - 1
+
+    tree_sig = walk(root, float(budget))
     return _fused_run(
         specs,
         eff_root,
-        kind,
-        root.name,
+        "tree",
+        tree_sig,
+        tuple(doms),
         pick_cache=state.pick_cache,
         fstate=fstate,
         st=state,

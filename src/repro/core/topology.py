@@ -28,12 +28,23 @@ from typing import Callable, Iterator, Sequence, Union
 
 import numpy as np
 
-#: cap trace: scalar (constant), sequence (holds last value), or callable
+#: cap trace: scalar (constant), sequence (holds last value), callable, or a
+#: BudgetProvider (anything exposing ``budget_at(r)`` — the PR-7 provider
+#: protocol), so a rack can ride a solar/CO2 fixture like the cluster budget
 CapTrace = Union[float, Sequence, Callable[[int], float]]
 
 
 def cap_trace_at(trace: CapTrace, r: int) -> float:
-    """Resolve a cap trace at round ``r`` (same forms as scenario budgets)."""
+    """Resolve a cap trace at round ``r`` (same forms as scenario budgets).
+
+    ``BudgetProvider``s are first-class cap traces: anything with a
+    ``budget_at`` method resolves through it — the same duck-typing
+    ``repro.cluster.budget.as_provider`` coerces on, so one provider
+    object can drive both the cluster budget and a domain cap.
+    """
+    budget_at = getattr(trace, "budget_at", None)
+    if budget_at is not None and callable(budget_at):
+        return float(budget_at(r))
     if isinstance(trace, (int, float)):
         return float(trace)
     if callable(trace):
@@ -86,10 +97,12 @@ class PowerTopology:
     ``domains`` lists every domain in DFS preorder; ``index`` maps name →
     preorder id, ``parent[i]`` is the id of ``domains[i]``'s parent (-1 for
     the root), and ``leaf_ids`` the ids of the leaves.  Construction
-    validates name uniqueness and leaf-range disjointness.
+    validates name uniqueness and leaf-range disjointness; passing
+    ``n_nodes`` additionally validates *coverage* — the leaf ranges must
+    tile ``[0, n_nodes)`` exactly, with no gap at any depth.
     """
 
-    def __init__(self, root: PowerDomain):
+    def __init__(self, root: PowerDomain, n_nodes: int | None = None):
         self.root = root
         self.domains: list[PowerDomain] = []
         self.parent: np.ndarray
@@ -108,6 +121,10 @@ class PowerTopology:
 
         visit(root, -1)
         self.parent = np.asarray(parents, dtype=np.int32)
+        #: per-domain tree depth (root = 0), preorder-indexed
+        self.depth = np.zeros(len(self.domains), dtype=np.int32)
+        for i in range(1, len(self.domains)):
+            self.depth[i] = self.depth[self.parent[i]] + 1
         self.leaf_ids = np.array(
             [i for i, d in enumerate(self.domains) if d.is_leaf],
             dtype=np.int32,
@@ -130,6 +147,35 @@ class PowerTopology:
         self._span_lo = np.array([s[0] for s in spans], dtype=np.int64)
         self._span_hi = np.array([s[1] for s in spans], dtype=np.int64)
         self._span_leaf = np.array([s[2] for s in spans], dtype=np.int32)
+        #: node count the leaf ranges were validated to cover (None = unchecked)
+        self.n_nodes = n_nodes
+        if n_nodes is not None:
+            self._validate_coverage(n_nodes)
+
+    def _validate_coverage(self, n_nodes: int) -> None:
+        """Leaf ranges must tile ``[0, n_nodes)`` exactly: no gaps between
+        consecutive (sorted, already disjoint) spans, starting at 0 and
+        ending at ``n_nodes``."""
+        if n_nodes <= 0:
+            raise ValueError(f"n_nodes must be positive, got {n_nodes}")
+        if not len(self._span_lo):
+            raise ValueError("topology has no leaf node ranges")
+        if self._span_lo[0] != 0:
+            raise ValueError(
+                f"leaf ranges leave nodes [0, {self._span_lo[0]}) uncovered"
+            )
+        gaps = np.flatnonzero(self._span_lo[1:] != self._span_hi[:-1])
+        if len(gaps):
+            i = int(gaps[0])
+            raise ValueError(
+                f"leaf ranges leave nodes [{self._span_hi[i]}, "
+                f"{self._span_lo[i + 1]}) uncovered"
+            )
+        if self._span_hi[-1] != n_nodes:
+            raise ValueError(
+                f"leaf ranges cover [0, {self._span_hi[-1]}) but "
+                f"n_nodes={n_nodes}"
+            )
 
     def __len__(self) -> int:
         return len(self.domains)
@@ -236,5 +282,81 @@ class PowerTopology:
                 name=name,
                 cap=1e18 if site_cap is None else site_cap,
                 children=racks,
-            )
+            ),
+            n_nodes=n_nodes,
         )
+
+    #: default level names for :meth:`uniform_tree` (depth below the root)
+    LEVEL_NAMES = ("row", "pdu", "chassis", "rack", "shelf")
+
+    @staticmethod
+    def uniform_tree(
+        n_nodes: int,
+        fanouts: Sequence[int],
+        caps: Sequence[CapTrace],
+        name: str = "site",
+        level_names: Sequence[str] | None = None,
+    ) -> "PowerTopology":
+        """Balanced arbitrary-depth tree: site → row → PDU → ... → leaf.
+
+        ``fanouts[d]`` is the child count of every level-``d`` domain, so
+        the tree has ``len(fanouts) + 1`` levels and ``prod(fanouts)``
+        leaves; ``caps[0]`` is the root cap and ``caps[d + 1]`` the cap
+        trace shared by every level-``d+1`` domain (any :data:`CapTrace`
+        form, including a ``BudgetProvider``).  Leaves own contiguous,
+        near-equal node ranges tiling ``[0, n_nodes)`` exactly —
+        coverage-validated at build time.  Level names default to
+        :data:`LEVEL_NAMES` (``site → row → pdu → ...``); domain ``k`` at
+        level ``d`` is named ``f"{level_names[d - 1]}{k}"``.
+        """
+        fanouts = [int(f) for f in fanouts]
+        if not fanouts or any(f < 1 for f in fanouts):
+            raise ValueError(f"fanouts must be positive, got {fanouts}")
+        if len(caps) != len(fanouts) + 1:
+            raise ValueError(
+                f"need len(caps) == len(fanouts) + 1 (root + one per "
+                f"level), got {len(caps)} caps for {len(fanouts)} fanouts"
+            )
+        n_leaves = int(np.prod(fanouts))
+        if not 1 <= n_leaves <= n_nodes:
+            raise ValueError(
+                f"need 1 <= prod(fanouts)={n_leaves} <= n_nodes={n_nodes}"
+            )
+        if level_names is None:
+            level_names = [
+                PowerTopology.LEVEL_NAMES[d]
+                if d < len(PowerTopology.LEVEL_NAMES)
+                else f"l{d + 1}"
+                for d in range(len(fanouts))
+            ]
+        if len(level_names) != len(fanouts):
+            raise ValueError("need one level name per fanout level")
+        bounds = np.linspace(0, n_nodes, n_leaves + 1).astype(int)
+        counters = [0] * len(fanouts)
+        next_leaf = [0]
+
+        def build(depth: int) -> PowerDomain:
+            k = counters[depth - 1]
+            counters[depth - 1] += 1
+            if depth == len(fanouts):
+                lo, hi = int(bounds[next_leaf[0]]), int(bounds[next_leaf[0] + 1])
+                next_leaf[0] += 1
+                return PowerDomain(
+                    name=f"{level_names[depth - 1]}{k}",
+                    cap=caps[depth],
+                    nodes=((lo, hi),),
+                )
+            return PowerDomain(
+                name=f"{level_names[depth - 1]}{k}",
+                cap=caps[depth],
+                children=tuple(
+                    build(depth + 1) for _ in range(fanouts[depth])
+                ),
+            )
+
+        root = PowerDomain(
+            name=name,
+            cap=caps[0],
+            children=tuple(build(1) for _ in range(fanouts[0])),
+        )
+        return PowerTopology(root, n_nodes=n_nodes)

@@ -162,6 +162,10 @@ class FusedRoundStats:
     row_uploads: int = 0
     short_circuits: int = 0
     device_s: float = 0.0
+    #: why the most recent fused attempt fell back to host ("" = it didn't):
+    #: "off_lattice" | "grid_overflow" | "structure_change" |
+    #: "no_feasible_root" | "empty"
+    fallback_reason: str = ""
 
     @property
     def attempts(self) -> int:

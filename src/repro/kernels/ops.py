@@ -19,6 +19,24 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+@functools.cache
+def leaf_shard_mesh(n_devices: int):
+    """1-D device mesh (axis ``"leaves"``) over the first ``n_devices``
+    local devices.
+
+    The fused round's batched leaf DPs ``shard_map`` over this axis: each
+    [L, NB] DP row is independent, so splitting the [S, L, K] option
+    banks leaf-wise across devices is bitwise-neutral — every device runs
+    the identical per-row kernel and the frontier aggregation tree then
+    reduces the gathered per-device partials (DESIGN.md §16).  Multi-host
+    CPU smoke rides ``XLA_FLAGS=--xla_force_host_platform_device_count``.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(jax.devices()[:n_devices]), ("leaves",))
+
+
 def maxplus_conv(dp: jax.Array, f: jax.Array, *, block_b: int = 256):
     """(max,+)-convolution DP stage.  Returns (out, argmax_k)."""
     return _mckp_dp.maxplus_conv_pallas(

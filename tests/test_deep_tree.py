@@ -1,0 +1,362 @@
+"""N-level topology parity + conservation suite (DESIGN.md §16).
+
+The load-bearing contracts of the arbitrary-depth solver added in ISSUE 8:
+
+ * **collapse parity**: a random-depth tree whose intermediate domains are
+   unconstrained is *bit-for-bit* the two-level collapse (root → leaf
+   domains in DFS order) — picks, total_value, spent and every leaf's
+   domain_spent;
+ * **splice parity**: splicing an unconstrained single-child intermediate
+   out of the tree never changes the solution at the bit level;
+ * **conservation**: every internal domain's reported spend equals the sum
+   of its children's, at every ancestor level, under randomized instances
+   and randomized engine event storms (failures, stragglers, deratings);
+ * **fused parity**: the device-resident fused deep solve is bit-for-bit
+   the host sparse solve, including domain_spent at every level, and its
+   fallbacks surface a machine-readable ``fallback_reason``.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # image without hypothesis: property tests skip
+    from _hypothesis_stub import hypothesis, st
+
+from repro.cluster import ClusterSim, PowerTopology, Scenario
+from repro.cluster.controller import make_controller
+from repro.core import mckp, surfaces, types
+from test_hier_alloc import _assert_bitwise_equal, _random_groups
+
+
+@pytest.fixture(scope="module")
+def suite():
+    system = types.SYSTEM_1
+    apps, surfs = surfaces.build_paper_suite(system)
+    return system, apps, surfs
+
+
+def _random_deep_tree(rng, budget, *, unconstrained_internal=True):
+    """Random ragged tree, depth 2–4, returning (root, leaves_in_dfs_order).
+
+    Leaf caps are binding multiples of 25 W; internal caps are 1e18 when
+    ``unconstrained_internal`` (the collapse-parity regime) or random
+    binding multiples of 25 W otherwise."""
+    leaves = []
+
+    def build(d, path):
+        if d == 0 or (d < 3 and rng.random() < 0.3):
+            g = _random_groups(
+                rng, budget, n_groups=int(rng.integers(1, 3)),
+                prefix=f"L{path}_",
+            )
+            dom = mckp.DomainGroups(
+                name=f"leaf{path}",
+                cap=float(rng.integers(2, 20)) * 25.0,
+                groups=tuple(g),
+            )
+            leaves.append(dom)
+            return dom
+        cap = (
+            1e18 if unconstrained_internal
+            else float(rng.integers(4, 40)) * 25.0
+        )
+        kids = tuple(
+            build(d - 1, f"{path}{i}")
+            for i in range(int(rng.integers(1, 4)))
+        )
+        return mckp.DomainGroups(name=f"d{path}", cap=cap, children=kids)
+
+    depth = int(rng.integers(2, 5))
+    root_kids = tuple(
+        build(depth - 1, str(i)) for i in range(int(rng.integers(2, 4)))
+    )
+    root = mckp.DomainGroups(name="site", cap=budget, children=root_kids)
+    return root, leaves
+
+
+def _internal_domains(dom):
+    if dom.children:
+        yield dom
+        for c in dom.children:
+            yield from _internal_domains(c)
+
+
+# ---------------------------------------------------------------------------
+# Collapse / splice parity: deep tree == two-level, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_collapse_parity_property(seed):
+    """Unconstrained-intermediate deep trees solve bit-for-bit like their
+    two-level collapse (root → leaves in DFS order)."""
+    rng = np.random.default_rng(seed)
+    budget = float(rng.integers(6, 30)) * 25.0
+    deep, leaves = _random_deep_tree(rng, budget)
+    flat = mckp.DomainGroups(
+        name="site", cap=budget, children=tuple(leaves)
+    )
+    a = mckp.solve_hierarchical(deep, budget)
+    b = mckp.solve_hierarchical(flat, budget)
+    _assert_bitwise_equal(a, b)
+    for leaf in leaves:
+        assert a.domain_spent[leaf.name] == b.domain_spent[leaf.name]
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_unconstrained_splice_parity_property(seed):
+    """Wrapping every root child in an unconstrained single-child
+    intermediate level — the inverse of splicing that level out — never
+    changes the solution at the bit level."""
+    rng = np.random.default_rng(seed)
+    budget = float(rng.integers(6, 30)) * 25.0
+    base, _ = _random_deep_tree(rng, budget, unconstrained_internal=False)
+    wrapped = mckp.DomainGroups(
+        name="site",
+        cap=budget,
+        children=tuple(
+            mckp.DomainGroups(name=f"wrap{i}", cap=1e18, children=(c,))
+            for i, c in enumerate(base.children)
+        ),
+    )
+    a = mckp.solve_hierarchical(base, budget)
+    b = mckp.solve_hierarchical(wrapped, budget)
+    _assert_bitwise_equal(a, b)
+    for dom in _internal_domains(base):
+        assert a.domain_spent[dom.name] == b.domain_spent[dom.name]
+
+
+# ---------------------------------------------------------------------------
+# Conservation at every ancestor level
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_ancestor_conservation_property(seed):
+    """Every internal domain's reported spend is the sum of its children's
+    and never exceeds its cap — at every level of a random binding tree."""
+    rng = np.random.default_rng(seed)
+    budget = float(rng.integers(6, 30)) * 25.0
+    root, _ = _random_deep_tree(rng, budget, unconstrained_internal=False)
+    sol = mckp.solve_hierarchical(root, budget)
+    assert sol.spent <= budget + 1e-9
+    for dom in _internal_domains(root):
+        kids = sum(sol.domain_spent[c.name] for c in dom.children)
+        np.testing.assert_allclose(
+            sol.domain_spent[dom.name], kids, atol=1e-6
+        )
+        assert sol.domain_spent[dom.name] <= dom.cap + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Fused deep solve: bit-for-bit the host path, reasons on fallback
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fused_deep_parity(seed):
+    rng = np.random.default_rng(3000 + seed)
+    budget = float(rng.integers(6, 30)) * 25.0
+    root, _ = _random_deep_tree(
+        rng, budget,
+        unconstrained_internal=bool(rng.integers(0, 2)),
+    )
+    host = mckp.solve_hierarchical(root, budget)
+    fstate = mckp.FusedState()
+    fused = mckp.solve_hierarchical_fused(
+        root, budget, state=mckp.HierState(), fstate=fstate
+    )
+    assert fused is not None, fstate.stats["fallback_reason"]
+    assert fstate.stats["fallback_reason"] == ""
+    _assert_bitwise_equal(host, fused)
+    assert host.domain_spent.keys() == fused.domain_spent.keys()
+    for name, spent in host.domain_spent.items():
+        assert fused.domain_spent[name] == spent, name
+
+
+def test_fused_warm_resolve_stays_bitwise():
+    """Re-solving the same deep tree against resident banks (warm path:
+    no uploads, device round) stays bit-for-bit, and a budget change
+    rides the same banks."""
+    rng = np.random.default_rng(99)
+    budget = 600.0
+    root, _ = _random_deep_tree(rng, budget, unconstrained_internal=False)
+    state, fstate = mckp.HierState(), mckp.FusedState()
+    for b in (budget, budget, budget - 100.0):
+        host = mckp.solve_hierarchical(root, b)
+        fused = mckp.solve_hierarchical_fused(
+            root, b, state=state, fstate=fstate
+        )
+        assert fused is not None, fstate.stats["fallback_reason"]
+        _assert_bitwise_equal(host, fused)
+    assert fstate.stats["fallbacks"] == 0
+
+
+def test_fused_fallback_reasons():
+    """Fallbacks carry a machine-readable reason in the stats."""
+    from repro.core import curves
+
+    def one_leaf_root(costs, cap, budget):
+        t = curves.OptionTable(
+            name="odd",
+            costs=np.asarray(costs, dtype=float),
+            values=np.linspace(0.0, 0.5, len(costs)),
+            caps=np.stack(
+                [100.0 + np.asarray(costs, dtype=float),
+                 np.full(len(costs), 100.0)], axis=-1,
+            ),
+        )
+        g = mckp.GroupedOptions(table=t, members=("n0",))
+        return mckp.DomainGroups(
+            name="site",
+            cap=budget,
+            children=(mckp.DomainGroups(name="r0", cap=cap, groups=(g,)),),
+        )
+
+    # grid overflow: lattice pitch 25 W but a 150 kW spend key
+    fstate = mckp.FusedState()
+    out = mckp.solve_hierarchical_fused(
+        one_leaf_root([0.0, 25.0, 150000.0], 1e18, 200000.0),
+        200000.0, state=mckp.HierState(), fstate=fstate,
+    )
+    assert out is None
+    assert fstate.stats["fallback_reason"] == "grid_overflow"
+
+    # structure change against resident banks
+    rng = np.random.default_rng(7)
+    tree_a, _ = _random_deep_tree(rng, 500.0)
+    tree_b, _ = _random_deep_tree(rng, 500.0)
+    state, fstate = mckp.HierState(), mckp.FusedState()
+    assert (
+        mckp.solve_hierarchical_fused(
+            tree_a, 500.0, state=state, fstate=fstate
+        )
+        is not None
+    )
+    out = mckp.solve_hierarchical_fused(
+        tree_b, 500.0, state=mckp.HierState(), fstate=fstate
+    )
+    assert out is None
+    assert fstate.stats["fallback_reason"] == "structure_change"
+    assert fstate.stats["fallbacks"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Engine level: deep topologies under randomized event storms
+# ---------------------------------------------------------------------------
+
+
+def _deep_engine_topology(system, apps, surfs, n, fanouts, rng, sim_seed):
+    """uniform_tree with binding caps at every level: committed draw plus
+    a little randomized headroom per domain (tightening toward leaves)."""
+    from repro.core.topology import PowerDomain
+
+    probe = ClusterSim.build(
+        system, apps, surfs, n_nodes=n, seed=sim_seed,
+        initial_caps=(150.0, 150.0),
+        topology=PowerTopology.uniform_tree(
+            n, fanouts, [1e15] * (len(fanouts) + 1)
+        ),
+    )
+    _, committed, _ = probe.domain_headroom(0)
+    topo0 = probe.topology
+
+    def recap(dom, depth):
+        i = topo0.index[dom.name]
+        if depth == 0:
+            cap = 1e18
+        else:
+            cap = float(committed[i]) + float(rng.integers(2, 8)) * 50.0 / depth
+        return PowerDomain(
+            name=dom.name, cap=cap, nodes=dom.nodes,
+            children=tuple(recap(c, depth + 1) for c in dom.children),
+        )
+
+    return PowerTopology(recap(topo0.domains[0], 0), n_nodes=n)
+
+
+@pytest.mark.parametrize("seed", range(3))
+@pytest.mark.parametrize("fused", [False, True])
+def test_deep_event_storm_conserves_every_level(suite, seed, fused):
+    """A 4-level topology rides a randomized storm (failures, stragglers,
+    a mid-run PDU derating): every round, every domain stays at or under
+    its cap and every ancestor's draw is exactly its children's sum."""
+    system, apps, surfs = suite
+    rng = np.random.default_rng(500 + seed)
+    n = 48
+    fanouts = (2, 2, 2)
+    topo = _deep_engine_topology(
+        system, apps, surfs, n, fanouts, rng, seed
+    )
+    sim_seed = seed
+    derate_dom = f"pdu{int(rng.integers(0, 4))}"
+    derate_i = topo.index[derate_dom]
+    derated = float(topo.domains[derate_i].cap) - 25.0
+    scen = (
+        Scenario.constant(5, budget=float(rng.integers(4, 20)) * 100.0)
+        .with_topology(topo)
+        .with_failure(1, *rng.choice(n, size=3, replace=False).tolist())
+        .with_straggler(2, int(rng.integers(0, n)), 1.6)
+        .with_domain_cap(3, derate_dom, derated)
+    )
+    sim = ClusterSim.build(
+        system, apps, surfs, n_nodes=n, seed=sim_seed,
+        initial_caps=(150.0, 150.0), topology=topo,
+    )
+    trace = sim.run(
+        scen, make_controller("ecoshift_hier", system, fused=fused)
+    )
+    for rec in trace.records:
+        assert rec.domain_draw is not None
+        for name, draw in rec.domain_draw.items():
+            assert draw <= rec.domain_caps[name] + 1e-6, (
+                rec.round, name, draw, rec.domain_caps[name]
+            )
+        # conservation at every ancestor level
+        for dom in topo.domains:
+            if dom.is_leaf:
+                continue
+            kids = sum(rec.domain_draw[c.name] for c in dom.children)
+            np.testing.assert_allclose(
+                rec.domain_draw[dom.name], kids, atol=1e-6,
+                err_msg=f"round {rec.round}, domain {dom.name}",
+            )
+    # the derate had teeth and held
+    after = trace.records[3]
+    assert after.domain_caps[derate_dom] == derated
+    assert after.domain_draw[derate_dom] <= derated + 1e-6
+
+
+def test_fallback_reason_surfaces_through_engine(suite):
+    """controller.last_fallback_reason and the round profile expose why a
+    fused round fell back (empty on fused success and on host paths)."""
+    system, apps, surfs = suite
+    n = 24
+    topo = PowerTopology.uniform_tree(
+        n, (2, 2), [1e18, 9000.0, 4000.0]
+    )
+    sim = ClusterSim.build(
+        system, apps, surfs, n_nodes=n, seed=1,
+        initial_caps=(150.0, 150.0), topology=topo,
+    )
+    ctrl = make_controller("ecoshift_hier", system, fused=True)
+    sim.run_round(ctrl, budget=900.0)
+    assert ctrl.last_fallback_reason == ""
+    assert sim.last_round_profile["alloc_fallback_reason"] == ""
+    stats = ctrl.fused_stats()
+    assert stats.fallback_reason == ""
+    assert stats.rounds >= 1
+
+    # host controller: the key exists and is empty
+    sim2 = ClusterSim.build(
+        system, apps, surfs, n_nodes=n, seed=1,
+        initial_caps=(150.0, 150.0), topology=topo,
+    )
+    sim2.run_round(make_controller("ecoshift_hier", system), budget=900.0)
+    assert sim2.last_round_profile["alloc_fallback_reason"] == ""

@@ -231,3 +231,135 @@ class TestEngineAttachment:
         other = PowerTopology.uniform_racks(8, 2, rack_cap=8000.0)
         with pytest.raises(ValueError, match="differs"):
             sim.run(Scenario.constant(2).with_topology(other), "ecoshift_hier")
+
+
+class TestUniformTreeBuilder:
+    """uniform_tree: N-level balanced builder + build-time validation."""
+
+    def test_shape_names_and_coverage(self):
+        topo = PowerTopology.uniform_tree(
+            100, (2, 3), [1e18, 600.0, 200.0]
+        )
+        # 1 site + 2 rows + 6 pdus, preorder, depth-annotated
+        assert len(topo.domains) == 9
+        assert topo.names[0] == "site"
+        assert {d.name for d in topo.domains if not d.is_leaf} >= {
+            "row0", "row1"
+        }
+        assert sorted(
+            d.name for d in topo.domains if d.is_leaf
+        ) == [f"pdu{k}" for k in range(6)]
+        assert int(topo.depth.max()) == 2
+        # leaves tile [0, 100) exactly: every node owned exactly once
+        assert len(np.unique(topo.leaf_of(np.arange(100)))) == 6
+        assert topo.n_nodes == 100
+
+    def test_level_caps_apply_per_level(self):
+        topo = PowerTopology.uniform_tree(
+            40, (2, 2), [1000.0, 400.0, 150.0]
+        )
+        caps = topo.cap_at(0)
+        for i, d in enumerate(topo.domains):
+            want = [1000.0, 400.0, 150.0][int(topo.depth[i])]
+            assert caps[i] == want, d.name
+
+    def test_custom_level_names(self):
+        topo = PowerTopology.uniform_tree(
+            8, (2, 2), [1e18, 100.0, 40.0], level_names=("hall", "cage")
+        )
+        assert "hall0" in topo.index and "cage3" in topo.index
+
+    def test_validation_errors(self):
+        with pytest.raises(ValueError, match="positive"):
+            PowerTopology.uniform_tree(8, (2, 0), [1e18, 1.0, 1.0])
+        with pytest.raises(ValueError, match="caps"):
+            PowerTopology.uniform_tree(8, (2, 2), [1e18, 1.0])
+        with pytest.raises(ValueError, match="prod"):
+            PowerTopology.uniform_tree(3, (2, 2), [1e18, 1.0, 1.0])
+        with pytest.raises(ValueError, match="level name"):
+            PowerTopology.uniform_tree(
+                8, (2, 2), [1e18, 1.0, 1.0], level_names=("only-one",)
+            )
+
+    def test_coverage_validation_catches_gaps(self):
+        root = PowerDomain(
+            name="site",
+            cap=1e18,
+            children=(
+                PowerDomain(name="r0", cap=100.0, nodes=((0, 3),)),
+                PowerDomain(name="r1", cap=100.0, nodes=((5, 8),)),
+            ),
+        )
+        PowerTopology(root)  # unchecked without n_nodes (back-compat)
+        with pytest.raises(ValueError, match="uncovered"):
+            PowerTopology(root, n_nodes=8)
+        covered = PowerDomain(
+            name="site",
+            cap=1e18,
+            children=(
+                PowerDomain(name="r0", cap=100.0, nodes=((0, 3),)),
+                PowerDomain(name="r1", cap=100.0, nodes=((3, 8),)),
+            ),
+        )
+        with pytest.raises(ValueError, match="n_nodes=9"):
+            PowerTopology(covered, n_nodes=9)
+        assert PowerTopology(covered, n_nodes=8).n_nodes == 8
+
+
+class TestProviderCapTraces:
+    """Satellite: BudgetProviders are first-class domain cap traces."""
+
+    def test_provider_resolves_via_budget_at(self):
+        from repro.cluster.budget import as_provider
+        from repro.core.topology import cap_trace_at
+
+        provider = as_provider([120.0, 100.0, 90.0])
+        assert cap_trace_at(provider, 0) == 120.0
+        assert cap_trace_at(provider, 2) == 90.0
+        # plain traces still resolve the classic ways
+        assert cap_trace_at(75.0, 3) == 75.0
+        assert cap_trace_at([10.0, 20.0], 9) == 20.0
+        assert cap_trace_at(lambda r: 5.0 + r, 4) == 9.0
+
+    def test_provider_capped_domain_in_engine(self):
+        from repro.cluster.budget import as_provider
+
+        system = types.SYSTEM_1
+        apps, surfs = surfaces.build_paper_suite(system)
+        n = 16
+        probe = ClusterSim.build(
+            system, apps, surfs, n_nodes=n, seed=0,
+            initial_caps=(150.0, 150.0),
+            topology=PowerTopology.uniform_racks(n, 2, rack_cap=1e15),
+        )
+        _, committed, _ = probe.domain_headroom(0)
+        c0 = float(committed[1])
+        # rack0's cap rides a provider: derates 100 W after round 1
+        trace = as_provider([c0 + 150.0, c0 + 150.0, c0 + 50.0])
+        topo = PowerTopology(
+            PowerDomain(
+                name="site",
+                cap=1e18,
+                children=(
+                    PowerDomain(name="rack0", cap=trace, nodes=((0, 8),)),
+                    PowerDomain(name="rack1", cap=1e15, nodes=((8, 16),)),
+                ),
+            ),
+            n_nodes=n,
+        )
+        assert topo.cap_at(0)[1] == c0 + 150.0
+        assert topo.cap_at(5)[1] == c0 + 50.0
+        sim = ClusterSim.build(
+            system, apps, surfs, n_nodes=n, seed=0,
+            initial_caps=(150.0, 150.0), topology=topo,
+        )
+        from repro.cluster.controller import make_controller
+
+        ctrl = make_controller("ecoshift_hier", system)
+        for r in range(4):
+            sim.run_round(ctrl, budget=2000.0, round_index=r)
+            assert (
+                sim.last_domain_draw["rack0"]
+                <= sim.last_domain_caps["rack0"] + 1e-6
+            )
+        assert sim.last_domain_caps["rack0"] == c0 + 50.0

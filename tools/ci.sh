@@ -31,6 +31,10 @@ python -m benchmarks.hier_alloc --fast \
 echo "== kernel parity (CPU interpret mode: Pallas kernels vs references) =="
 python -m pytest -x -q tests/test_kernels.py
 
+echo "== multi-device sharding smoke (4 virtual CPU devices: sharded == single-device == host, bitwise) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+  python -m pytest -x -q tests/test_fused_sharding.py
+
 echo "== incremental allocation bench (fast tiers; parity + regression guard vs committed JSON; incl. fused warm re-solve) =="
 python -m benchmarks.incremental_alloc --fast --fused \
   --check BENCH_incremental_alloc.json --out BENCH_incremental_alloc.json

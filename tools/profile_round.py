@@ -19,9 +19,16 @@ split, fused-state counters) for tooling; the human table is suppressed.
 plus a cProfile top-N of one steady-state round, so future perf PRs can
 see exactly where round time goes before touching anything.
 
+With ``--depth N`` (N >= 3) the run uses an N-level uniform tree
+(site → row → … → chassis, via ``benchmarks.hier_alloc._deep_topology``)
+instead of the two-level rack topology, and the run ends with a
+per-level breakdown — domains, aggregate draw vs capped headroom, worst
+utilization and how many caps bind at each level of the tree.
+
     PYTHONPATH=src python tools/profile_round.py [--nodes 10000]
-        [--racks 16] [--churn 0.01] [--rounds 6] [--policy ecoshift_hier]
-        [--from-scratch] [--fused] [--json] [--top 20]
+        [--racks 16] [--depth 4] [--churn 0.01] [--rounds 6]
+        [--policy ecoshift_hier] [--from-scratch] [--fused] [--json]
+        [--top 20]
 """
 
 from __future__ import annotations
@@ -52,11 +59,40 @@ from repro.cluster.controller import make_controller  # noqa: E402
 PHASES = ("partition_s", "batch_s", "allocate_s", "conserve_s", "measure_s")
 
 
+def _level_summary(sim, topo) -> list[dict]:
+    """Per-tree-level aggregate of the last round's domain accounting:
+    domain count, total draw, total (finite) cap, worst utilization and
+    how many caps bind (>= 99.9% utilized) at each depth."""
+    if topo is None or not sim.last_domain_draw:
+        return []
+    levels: dict[int, dict] = {}
+    for i, dom in enumerate(topo.domains):
+        d = int(topo.depth[i])
+        lv = levels.setdefault(d, {
+            "level": d, "domains": 0, "draw_w": 0.0, "cap_w": 0.0,
+            "max_util": 0.0, "binding": 0,
+        })
+        draw = float(sim.last_domain_draw.get(dom.name, 0.0))
+        cap = float(sim.last_domain_caps.get(dom.name, float("inf")))
+        lv["domains"] += 1
+        lv["draw_w"] += draw
+        if cap < 1e17:  # finite (constraining) cap
+            lv["cap_w"] += cap
+            util = draw / cap if cap > 0 else 0.0
+            lv["max_util"] = max(lv["max_util"], util)
+            lv["binding"] += util >= 0.999
+    return [levels[k] for k in sorted(levels)]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, default=10000)
     ap.add_argument("--racks", type=int, default=16,
                     help="0 = flat (no topology)")
+    ap.add_argument("--depth", type=int, default=0,
+                    help="N >= 3: use an N-level uniform tree (fan-out 4 "
+                    "per level) instead of the two-level rack topology, "
+                    "and print a per-level breakdown")
     ap.add_argument("--churn", type=float, default=0.01,
                     help="per-round churn fraction (0 = event-free)")
     ap.add_argument("--rounds", type=int, default=6)
@@ -76,11 +112,16 @@ def main() -> None:
     system, apps, surfs = get_suite("system1-a100")
     n = args.nodes
     budget = _budget(n)
-    topo = (
-        _topology(system, apps, surfs, n, args.racks, budget)
-        if args.racks > 0
-        else None
-    )
+    if args.depth >= 3:
+        from benchmarks.hier_alloc import _deep_topology
+
+        topo = _deep_topology(
+            system, apps, surfs, n, (4,) * (args.depth - 1), budget
+        )
+    elif args.racks > 0:
+        topo = _topology(system, apps, surfs, n, args.racks, budget)
+    else:
+        topo = None
     policy = args.policy or ("ecoshift_hier" if topo is not None else "ecoshift")
     sim = _sim(system, apps, surfs, n, topology=topo)
     ctrl = make_controller(
@@ -115,7 +156,8 @@ def main() -> None:
         header = "round  total_ms  " + "  ".join(p[:-2] for p in PHASES)
         if args.fused:
             header += "  device_ms  solver"
-        print(f"{policy} n={n} racks={args.racks} churn={args.churn:.1%} "
+        print(f"{policy} n={n} racks={args.racks} depth={args.depth} "
+              f"churn={args.churn:.1%} "
               f"incremental={not args.from_scratch} fused={args.fused}")
         print(header)
     for r in range(args.rounds):
@@ -123,6 +165,7 @@ def main() -> None:
         prof = sim.last_round_profile
         device_s = float(prof.get("alloc_device_s", 0.0))
         solver = str(prof.get("alloc_solver", "")) or "-"
+        fallback = str(prof.get("alloc_fallback_reason", ""))
         rounds.append({
             "round": r,
             "total_ms": total * 1e3,
@@ -131,6 +174,7 @@ def main() -> None:
             "alloc_host_ms": (float(prof.get("allocate_s", 0.0)) - device_s)
             * 1e3,
             "alloc_solver": solver,
+            "alloc_fallback_reason": fallback,
         })
         if not args.json:
             cols = "  ".join(
@@ -139,17 +183,30 @@ def main() -> None:
             row = f"{r:5d}  {total * 1e3:8.1f}  {cols}"
             if args.fused:
                 row += f"  {device_s * 1e3:9.2f}  {solver}"
+                if fallback:
+                    row += f" ({fallback})"
             print(row)
+
+    levels = _level_summary(sim, topo)
+    if not args.json and levels:
+        print("\nlevel  domains     draw_w      cap_w  max_util  binding")
+        for lv in levels:
+            cap = f"{lv['cap_w']:10.0f}" if lv["cap_w"] else "       inf"
+            print(f"{lv['level']:5d}  {lv['domains']:7d}  "
+                  f"{lv['draw_w']:9.0f}  {cap}  "
+                  f"{lv['max_util']:8.3f}  {lv['binding']:7d}")
 
     if args.json:
         out = {
             "policy": policy,
             "nodes": n,
             "racks": args.racks,
+            "depth": args.depth,
             "churn": args.churn,
             "incremental": not args.from_scratch,
             "fused": args.fused,
             "rounds": rounds,
+            "levels": levels,
         }
         if args.fused:
             out["fused_stats"] = dataclasses.asdict(ctrl.fused_stats())
