@@ -486,13 +486,16 @@ class EcoShiftController(_OptionCachingController):
         #: False re-collapses and re-solves from scratch every round (the
         #: PR-4-style baseline the incremental_alloc bench compares against)
         self.incremental = cfg.incremental
-        #: device-resident fused rounds (DESIGN.md §14): keep option banks
-        #: resident on device and run the whole warm-round decision
-        #: pipeline as one jitted Pallas program, falling back to the host
-        #: sparse path on structure changes.  Requires ``incremental`` and
-        #: ``solver='sparse'`` — otherwise silently ignored.
+        #: device-resident fused rounds (DESIGN.md §14/§17): keep option
+        #: banks resident on device and run the whole warm-round decision
+        #: pipeline as one jitted Pallas program.  Structure churn stays
+        #: fused — rows patch or compact in place under the capacity-slack
+        #: layout; only off-lattice keys / oversized grids / empty or
+        #: infeasible rounds route to the host sparse path.  Requires
+        #: ``incremental`` and ``solver='sparse'`` — otherwise silently
+        #: ignored.
         self.fused = cfg.fused
-        #: resident device banks + shape signature for the fused rounds
+        #: resident device banks + capacity-slack layout for fused rounds
         self._fused_state = mckp.FusedState()
         #: 'fused' | 'host' — which path produced the last solution
         self.last_solver: str | None = None
@@ -601,6 +604,13 @@ class EcoShiftController(_OptionCachingController):
     def fused_stats(self) -> FusedRoundStats:
         """Snapshot of the device-resident round counters."""
         return FusedRoundStats(**self._fused_state.stats)
+
+    def fused_segments(self) -> dict:
+        """Last fused round's wall-clock split (seconds): prep_s /
+        patch_s / compact_s / dispatch_s / backtrack_s / assembly_s —
+        the attribution table behind ``tools/profile_round.py --churn``.
+        Empty until a fused round has been attempted."""
+        return dict(self._fused_state.last_segments)
 
     def _try_fused_grouped(self, groups, budget) -> mckp.MCKPSolution | None:
         """One fused-round attempt; returns None to use the host path."""

@@ -157,15 +157,18 @@ def _device_patch_fn():
 class DeviceView:
     """Device-resident mirror of the hot :class:`NodeTable` columns.
 
-    The fused steady-state round (DESIGN.md §14) keeps its decision
+    The fused steady-state round (DESIGN.md §14/§17) keeps its decision
     pipeline on device; this view gives the engine the matching residency
     for the numeric cluster state: ``caps``/``alive``/``slowdown``/
     ``domain_id`` live as jax device arrays (float64 preserved), and
     :meth:`refresh` syncs them against the table's dirty-row log — one
-    donated row scatter per changed column in steady state, a full
-    re-upload only on growth or an unprovable delta.  Counters
-    (``uploads_full`` / ``uploads_rows``) expose the churn boundary to
-    profiling tools.
+    donated row scatter per changed column in steady state.  Growth is
+    O(growth), not O(cluster): the resident prefix is reused as-is on
+    device and only the appended tail uploads (``extends`` counts these
+    repacks, mirroring the fused banks' compaction story).  A full
+    re-upload happens only on an unprovable delta or when more than half
+    the table moved.  Counters (``uploads_full`` / ``uploads_rows`` /
+    ``extends``) expose the churn boundary to profiling tools.
     """
 
     _COLS = ("caps", "alive", "slowdown", "domain_id")
@@ -176,6 +179,7 @@ class DeviceView:
         self._n = -1
         self.uploads_full = 0
         self.uploads_rows = 0
+        self.extends = 0
         self.caps = None
         self.alive = None
         self.slowdown = None
@@ -188,25 +192,34 @@ class DeviceView:
         t = self._table
         if t.version == self.version and self._n == len(t):
             return self
-        dirty = (
-            t.dirty_since(self.version)
-            if self._n == len(t) and self.version >= 0
-            else None
-        )
+        dirty = t.dirty_since(self.version) if self.version >= 0 else None
         with enable_x64():
             # patching more than half the table costs more dispatches than
-            # one bulk upload; growth always re-uploads (shapes changed)
+            # one bulk upload
             if dirty is None or len(dirty) > max(1, len(t) // 2):
                 for c in self._COLS:
                     setattr(self, c, jnp.asarray(getattr(t, c)))
                 self.uploads_full += 1
-            elif len(dirty):
-                rows = jnp.asarray(dirty)
-                patch = _device_patch_fn()
-                for c in self._COLS:
-                    vals = jnp.asarray(getattr(t, c)[dirty])
-                    setattr(self, c, patch(getattr(self, c), rows, vals))
-                self.uploads_rows += int(len(dirty))
+            else:
+                if len(t) > self._n:
+                    # device-side extend (rows are append-only): keep the
+                    # resident prefix, upload only the appended tail
+                    for c in self._COLS:
+                        tail = jnp.asarray(getattr(t, c)[self._n:])
+                        setattr(
+                            self, c,
+                            jnp.concatenate([getattr(self, c), tail]),
+                        )
+                    self.extends += 1
+                    self.uploads_rows += len(t) - self._n
+                    dirty = dirty[dirty < self._n]
+                if len(dirty):
+                    rows = jnp.asarray(dirty)
+                    patch = _device_patch_fn()
+                    for c in self._COLS:
+                        vals = jnp.asarray(getattr(t, c)[dirty])
+                        setattr(self, c, patch(getattr(self, c), rows, vals))
+                    self.uploads_rows += int(len(dirty))
         self.version = t.version
         self._n = len(t)
         return self
@@ -1373,6 +1386,15 @@ class ClusterSim:
         prof["alloc_fallback_reason"] = (
             getattr(controller, "last_fallback_reason", "") or ""
         )
+        # resident-bank sync counters (DESIGN.md §17): cumulative cold
+        # rebuilds / device compactions and the last round's slack
+        # occupancy, so scenario tooling can prove churn stayed O(churn)
+        fstats_fn = getattr(controller, "fused_stats", None)
+        if fstats_fn is not None:
+            fstats = fstats_fn()
+            prof["alloc_fused_rebuilds"] = fstats.rebuilds
+            prof["alloc_fused_compactions"] = fstats.compactions
+            prof["alloc_fused_slack_utilization"] = fstats.slack_utilization
 
         tp = _time.perf_counter()
         if self.topology is not None:

@@ -1657,23 +1657,32 @@ class FusedState:
     shared integer micro-watt lattice + float64 values) as *resident jax
     device arrays*, the host-side per-row content signatures that drive
     delta patching, and the reversed per-stage key arrays the host
-    assembly maps device backpointers through.  The churn-boundary
-    contract (DESIGN.md §14):
+    assembly maps device backpointers through.  Banks use
+    **capacity-slack layouts** (DESIGN.md §17): padded dims are quantized
+    tiers (pow2 options/grids, identity-row stage padding) that only ever
+    grow, so membership/structure churn inside the slack is pure row
+    content.  The churn-boundary contract (DESIGN.md §14/§17):
 
-     * same shape + same row signatures   -> zero upload, straight to the
+     * same layout + same row signatures  -> zero upload, straight to the
        jitted pipeline;
-     * same shape, k rows changed         -> one donated scatter of the k
-       rebuilt rows (O(churn) upload);
-     * shape/topology/layout changed      -> the caller falls back to the
-       host path for this round while the banks rebuild (fused resumes
-       next round).
+     * same layout, k rows changed        -> one donated scatter of the k
+       rebuilt rows (O(churn) upload) — this now includes class
+       add/remove/split/merge, pitch changes and leaf-name permutations
+       that used to be shape changes;
+     * layout changed (leaf set, pad tier growth, topology edit) ->
+       **device-side compaction**: a jitted gather repacks every clean
+       row into the new geometry and only dirty rows upload; the round
+       still runs fused (O(churn), same round — no host fallback).
 
-    ``last_key``/``last_solution`` short-circuit the host assembly when
-    the device decision vector is unchanged round-over-round.
+    Only the cold start (no resident banks) builds banks on the host and
+    uploads them whole (``stats['rebuilds']``).  ``last_key``/
+    ``last_solution`` short-circuit the host assembly when the device
+    decision vector is unchanged round-over-round.
     """
 
     def __init__(self):
-        self.shape: tuple | None = None  # static pipeline shape + names
+        self.shape: tuple | None = None  # capacity-slack layout signature
+        self.names: tuple | None = None  # per-leaf names (compaction map)
         self.row_sigs: list | None = None  # [L][S] per-row content sigs
         self.kb_dev = None  # [S, L, K] int32 device bank (global lattice)
         self.vb_dev = None  # [S, L, K] float64 device bank
@@ -1685,17 +1694,24 @@ class FusedState:
         self._leaf_ints: dict = {}
         #: row sig -> (kb_glob desc, vals desc, keys desc)
         self._row_cache: dict = {}
+        #: last round's wall-clock split: prep/patch/compact/dispatch/
+        #: backtrack/assembly seconds (tools/profile_round.py --churn)
+        self.last_segments: dict = {}
         self.stats: dict = {
             "rounds": 0,
             "fallbacks": 0,
+            "rebuilds": 0,
+            "compactions": 0,
             "row_uploads": 0,
             "short_circuits": 0,
+            "slack_utilization": 0.0,
             "device_s": 0.0,
             "fallback_reason": "",
         }
 
     def clear(self) -> None:
         self.shape = None
+        self.names = None
         self.row_sigs = None
         self.kb_dev = None
         self.vb_dev = None
@@ -1705,6 +1721,7 @@ class FusedState:
         self.last_solution = None
         self._leaf_ints.clear()
         self._row_cache.clear()
+        self.last_segments = {}
 
 
 @functools.cache
@@ -2066,11 +2083,16 @@ def _fused_run(
     'leaf_root' (hierarchical root that is itself a leaf) or 'tree'
     (arbitrary-depth domain tree: ``tree_sig`` is the nested signature
     over spec indices and ``doms`` the post-order (name, eff) list of
-    internal domains, root last).  Returns None to route the caller to
-    the host path — on off-lattice keys, oversized grids, or a structure
-    change against the resident banks (which are rebuilt so the *next*
-    round runs fused again); ``fstate.stats['fallback_reason']`` records
-    why.
+    internal domains, root last).
+
+    Structure churn never routes to the host (DESIGN.md §17): content
+    changes (class add/remove/split/merge, pitch moves, headroom drift)
+    patch rows in place under the unchanged capacity-slack layout, and
+    layout changes (leaf set, pad-tier growth, topology edits) repack the
+    resident banks by device-side compaction — either way the fused
+    pipeline produces this round's allocation.  Returns None only for
+    off-lattice keys, oversized grids, empty rounds or an infeasible
+    root; ``fstate.stats['fallback_reason']`` records which.
     """
     import time
 
@@ -2079,8 +2101,14 @@ def _fused_run(
     import jax.numpy as jnp
 
     stats = fstate.stats
+    seg = fstate.last_segments = {
+        "prep_s": 0.0, "patch_s": 0.0, "compact_s": 0.0,
+        "dispatch_s": 0.0, "backtrack_s": 0.0, "assembly_s": 0.0,
+    }
+    t_seg = time.perf_counter()
     L = len(specs)
     if L == 0:
+        stats["fallbacks"] += 1
         stats["fallback_reason"] = "empty"
         return None
 
@@ -2088,6 +2116,7 @@ def _fused_run(
     for spec in specs:
         pr = _fused_leaf_rows(spec, fstate)
         if pr is None:
+            stats["fallbacks"] += 1
             stats["fallback_reason"] = "off_lattice"
             return None
         prepped.append(pr)
@@ -2113,6 +2142,7 @@ def _fused_run(
             mult = 1 if all_zero else g_l // g
             td = tmax_host * mult
             if td + 1 > _FUSED_MAX_NB:
+                stats["fallbacks"] += 1
                 stats["fallback_reason"] = "grid_overflow"
                 return None
             tmax_dev[li] = td
@@ -2137,6 +2167,7 @@ def _fused_run(
             if c is None:
                 ub = int((eff_d + 1e-9) * 1e6 // g) + 1
                 if ub + 1 > 4 * _FUSED_MAX_NB:
+                    stats["fallbacks"] += 1
                     stats["fallback_reason"] = "grid_overflow"
                     return None
                 ks = (
@@ -2156,50 +2187,101 @@ def _fused_run(
         nbt_needed = max(nb_needed, max(support.values()) + 1)
 
     if k_max > _FUSED_MAX_OPTS:
+        stats["fallbacks"] += 1
         stats["fallback_reason"] = "grid_overflow"
         return None
     nb_pad = _pow2_at_least(nb_needed, 16)
     nbt_pad = _pow2_at_least(nbt_needed, 16) if use_tree else nb_pad
     if max(nb_pad, nbt_pad) > _FUSED_MAX_NB:
+        stats["fallbacks"] += 1
         stats["fallback_reason"] = "grid_overflow"
         return None
     s_pad = max(1, -(-s_max // 8) * 8)
     k_pad = _pow2_at_least(max(k_max, 1), 4)
 
     names = tuple(name for name, *_ in specs)
+    dom_names = tuple(dn for dn, _ in doms)
     # sticky pads: padding up is always exact (identity stages, -inf
     # option tails, masked grid tops), so never *shrink* the resident
-    # shape — otherwise budget drift across a pow2 boundary would flap
-    # between rebuild-fallback rounds and recompiles
-    if fstate.shape is not None:
-        pk, pL, ps, pkk, pnb, pnbt = fstate.shape[:6]
-        if (pk, pL) == (kind, L):
-            s_pad = max(s_pad, ps)
-            k_pad = max(k_pad, pkk)
-            nb_pad = max(nb_pad, pnb)
-            nbt_pad = max(nbt_pad, pnbt) if use_tree else nb_pad
+    # tiers while the solver kind matches — churn across a pow2 boundary
+    # must not flap between compactions and recompiles, and keeping tiers
+    # across leaf-count changes means compaction never truncates content
+    if fstate.shape is not None and fstate.shape[0] == kind:
+        _pk, _pL, ps, pkk, pnb, pnbt = fstate.shape[:6]
+        s_pad = max(s_pad, ps)
+        k_pad = max(k_pad, pkk)
+        nb_pad = max(nb_pad, pnb)
+        nbt_pad = max(nbt_pad, pnbt) if use_tree else nb_pad
     nbt_pad = max(nbt_pad, nb_pad)
-    # per-leaf class-digest sets: a *new class layout* (new behaviour
-    # class appearing/vanishing in a leaf) is a structure change ->
-    # host-path round + bank rebuild.  Sorted, because the canonical
-    # class order is by min member name: membership churn can permute
-    # classes without changing the set, and a permutation is just row
-    # content the delta-patch path re-uploads.  Multiplicity drift keeps
-    # digests stable and stays on the delta-patch path.
-    digests = tuple(
-        tuple(sorted(e[0] for e in spec[2].layout)) for spec in specs
-    )
-    dom_names = tuple(dn for dn, _ in doms)
-    shape = (
-        kind, L, s_pad, k_pad, nb_pad, nbt_pad, g, names, digests,
-        tree_sig, dom_names,
+    # capacity-slack layout signature (DESIGN.md §17): only what the
+    # jitted pipeline is specialized on — kind, leaf count, padded tiers
+    # and the static tree schedule.  Everything else (global pitch g,
+    # leaf names, class digests/layouts, option rows) is *content*: the
+    # per-row signatures below move it through the delta-patch or
+    # compaction path under an unchanged layout, with no re-jit and no
+    # host round.  Row signatures fold in the leaf->global lattice
+    # multiplier, so a pitch change re-uploads exactly the rows whose
+    # device image (kb * mult) it moved.
+    layout = (kind, L, s_pad, k_pad, nb_pad, nbt_pad, tree_sig)
+    stats["slack_utilization"] = max(
+        s_max / s_pad,
+        k_max / k_pad,
+        nb_needed / nb_pad,
+        (nbt_needed / nbt_pad) if use_tree else 0.0,
     )
 
-    structure_changed = fstate.shape is not None and fstate.shape != shape
-    rebuild = fstate.shape is None or structure_changed
+    bank_shape = (s_pad, Lp, k_pad)
+    rebuild = fstate.shape is None
+    compact = not rebuild and (
+        fstate.shape != layout or tuple(fstate.kb_dev.shape) != bank_shape
+    )
+    if compact and (
+        fstate.shape[0] != kind
+        or len(set(names)) != len(names)
+        or len(set(fstate.names or ())) != len(fstate.names or ())
+    ):
+        # unmappable resident state (different solver kind, ambiguous
+        # leaf identities): cold host rebuild — still a fused round
+        rebuild, compact = True, False
 
     with jax.experimental.enable_x64():
+
+        def upload_rows(entries):
+            # entries: (s, li, kb_glob | None, vb | None); None = identity.
+            # The scatter batch pads to a pow2 tier by *repeating the
+            # first entry* (duplicate index, identical row: the set is
+            # value-deterministic) — the jitted scatter then sees a few
+            # quantized shapes instead of recompiling per churn count.
+            patch = _fused_patch_fn()
+            m = len(entries)
+            mp = _pow2_at_least(m, 8)
+            s_np = np.empty(mp, dtype=np.int32)
+            l_np = np.empty(mp, dtype=np.int32)
+            kb_rows = np.zeros((mp, k_pad), dtype=np.int32)
+            vb_rows = np.full((mp, k_pad), -np.inf)
+            for i, (s, li, kbg, vb) in enumerate(entries):
+                s_np[i] = s
+                l_np[i] = li
+                if kbg is None:
+                    vb_rows[i, 0] = 0.0
+                else:
+                    kb_rows[i, : len(kbg)] = kbg
+                    vb_rows[i, : len(vb)] = vb
+            s_np[m:] = s_np[0]
+            l_np[m:] = l_np[0]
+            kb_rows[m:] = kb_rows[0]
+            vb_rows[m:] = vb_rows[0]
+            si, lj = jnp.asarray(s_np), jnp.asarray(l_np)
+            fstate.kb_dev = patch(fstate.kb_dev, si, lj, jnp.asarray(kb_rows))
+            fstate.vb_dev = patch(fstate.vb_dev, si, lj, jnp.asarray(vb_rows))
+            stats["row_uploads"] += m
+            fstate.last_key = None
+
+        seg["prep_s"] = time.perf_counter() - t_seg
+        t_seg = time.perf_counter()
         if rebuild:
+            # cold start (or unmappable state): host-built banks, one
+            # full upload — the only non-O(churn) sync point left
             kb_np = np.zeros((s_pad, Lp, k_pad), dtype=np.int32)
             vb_np = np.full((s_pad, Lp, k_pad), -np.inf)
             vb_np[:, :, 0] = 0.0  # identity padding stages/rows: spend 0, +0.0
@@ -2212,64 +2294,100 @@ def _fused_run(
                     kb_np[s, li, :n] = kb * mult
                     vb_np[s, li, :n] = vb
                     vb_np[s, li, n:] = -np.inf
-                    row_sigs[li][s] = sig
+                    row_sigs[li][s] = (sig, mult)
                     keys_desc[li][s] = keys
             fstate.kb_dev = jnp.asarray(kb_np)
             fstate.vb_dev = jnp.asarray(vb_np)
             fstate.row_sigs = row_sigs
             fstate.keys_desc = keys_desc
-            fstate.shape = shape
+            fstate.shape = layout
+            fstate.names = names
             fstate.g = g
             fstate.last_key = None
             fstate.last_solution = None
-            if structure_changed:
-                # contract: layout/topology changes run the host path
-                # this round; the rebuilt banks resume fused next one
-                stats["fallbacks"] += 1
-                stats["fallback_reason"] = "structure_change"
-                return None
+            stats["rebuilds"] += 1
+            seg["patch_s"] += time.perf_counter() - t_seg
+        elif compact:
+            # device-side compaction (DESIGN.md §17): the layout moved
+            # (leaf set / pad tier / topology), so repack every row whose
+            # content signature survived via one jitted gather out of the
+            # old banks — clean subtrees keep their rows bit-for-bit with
+            # zero upload — and scatter only the dirty rows after
+            from repro.kernels import ops as _kops
+
+            old_pos = {nm: i for i, nm in enumerate(fstate.names or ())}
+            o_s_pad = int(fstate.kb_dev.shape[0])
+            src_s = np.full((s_pad, Lp), -1, dtype=np.int32)
+            src_l = np.full((s_pad, Lp), -1, dtype=np.int32)
+            row_sigs = [[None] * s_pad for _ in range(L)]
+            keys_desc = [[None] * s_pad for _ in range(L)]
+            dirty: list[tuple] = []
+            for li, (g_l, tmax_host, rows, all_zero) in enumerate(prepped):
+                mult = 1 if all_zero else g_l // g
+                oli = old_pos.get(names[li])
+                for s in range(s_pad):
+                    if s < len(rows):
+                        kb, vb, keys, sig = rows[s]
+                        esig = (sig, mult)
+                    else:
+                        kb = vb = keys = None
+                        esig = None
+                    row_sigs[li][s] = esig
+                    keys_desc[li][s] = keys
+                    if esig is None:
+                        continue  # identity rows come from the init
+                    if (
+                        oli is not None
+                        and s < o_s_pad
+                        and fstate.row_sigs[oli][s] == esig
+                    ):
+                        src_s[s, li] = s
+                        src_l[s, li] = oli
+                    else:
+                        dirty.append((s, li, kb * mult, vb))
+            fstate.kb_dev, fstate.vb_dev = _kops.bank_compact(
+                fstate.kb_dev, fstate.vb_dev,
+                jnp.asarray(src_s), jnp.asarray(src_l), k_pad=k_pad,
+            )
+            fstate.row_sigs = row_sigs
+            fstate.keys_desc = keys_desc
+            fstate.shape = layout
+            fstate.names = names
+            fstate.g = g
+            fstate.last_key = None
+            fstate.last_solution = None
+            stats["compactions"] += 1
+            seg["compact_s"] += time.perf_counter() - t_seg
+            t_seg = time.perf_counter()
+            if dirty:
+                upload_rows(dirty)
+            seg["patch_s"] += time.perf_counter() - t_seg
         else:
             # delta patch: upload only the rows whose content signature
-            # moved (class churn / headroom drift), via donated scatter
-            s_idx: list[int] = []
-            l_idx: list[int] = []
-            patch_kb: list[np.ndarray] = []
-            patch_vb: list[np.ndarray] = []
+            # moved (class churn / pitch moves / headroom drift), via
+            # donated scatter
+            entries: list[tuple] = []
             for li, (g_l, tmax_host, rows, all_zero) in enumerate(prepped):
                 mult = 1 if all_zero else g_l // g
                 for s in range(s_pad):
                     if s < len(rows):
                         kb, vb, keys, sig = rows[s]
+                        esig = (sig, mult)
                     else:
                         kb = vb = keys = None
-                        sig = None
-                    if fstate.row_sigs[li][s] == sig:
+                        esig = None
+                    if fstate.row_sigs[li][s] == esig:
                         continue
-                    kbr = np.zeros(k_pad, dtype=np.int32)
-                    vbr = np.full(k_pad, -np.inf)
-                    if kb is None:
-                        vbr[0] = 0.0
-                    else:
-                        kbr[: len(kb)] = kb * mult
-                        vbr[: len(vb)] = vb
-                    s_idx.append(s)
-                    l_idx.append(li)
-                    patch_kb.append(kbr)
-                    patch_vb.append(vbr)
-                    fstate.row_sigs[li][s] = sig
+                    entries.append(
+                        (s, li, None if kb is None else kb * mult, vb)
+                    )
+                    fstate.row_sigs[li][s] = esig
                     fstate.keys_desc[li][s] = keys
-            if s_idx:
-                patch = _fused_patch_fn()
-                si = jnp.asarray(np.asarray(s_idx, dtype=np.int32))
-                lj = jnp.asarray(np.asarray(l_idx, dtype=np.int32))
-                fstate.kb_dev = patch(
-                    fstate.kb_dev, si, lj, jnp.asarray(np.stack(patch_kb))
-                )
-                fstate.vb_dev = patch(
-                    fstate.vb_dev, si, lj, jnp.asarray(np.stack(patch_vb))
-                )
-                fstate.stats["row_uploads"] += len(s_idx)
-                fstate.last_key = None
+            if entries:
+                upload_rows(entries)
+            fstate.names = names
+            fstate.g = g
+            seg["patch_s"] += time.perf_counter() - t_seg
 
         tree_static = None
         if use_tree:
@@ -2289,10 +2407,13 @@ def _fused_run(
             )
         )
         stats["device_s"] += time.perf_counter() - t0
+        seg["dispatch_s"] += time.perf_counter() - t0
         stats["rounds"] += 1
 
+    t_seg = time.perf_counter()
     if not np.isfinite(float(out[3])):
         # no feasible root state: keep the host path authoritative
+        stats["fallbacks"] += 1
         stats["fallback_reason"] = "no_feasible_root"
         return None
     stats["fallback_reason"] = ""
@@ -2309,14 +2430,22 @@ def _fused_run(
         )
         leaf_meta.append((tok, plan.key))
 
+    # layout no longer pins pitch / leaf names / class layouts (they are
+    # patchable content now), so the short-circuit key carries them
+    # explicitly alongside the row signatures
     dec_key = (
-        shape,
+        layout,
+        g,
+        names,
+        dom_names,
         tuple(tuple(rs) for rs in fstate.row_sigs),
         tuple(leaf_meta),
         t_root,
         t_leaf.tobytes(),
         js.tobytes(),
     )
+    seg["backtrack_s"] += time.perf_counter() - t_seg
+    t_seg = time.perf_counter()
     if dec_key == fstate.last_key and fstate.last_solution is not None:
         # unchanged device decision vector: the previous solution is the
         # bit-identical answer — skip the host assembly entirely
@@ -2374,6 +2503,7 @@ def _fused_run(
     )
     fstate.last_key = dec_key
     fstate.last_solution = sol
+    seg["assembly_s"] += time.perf_counter() - t_seg
     return sol
 
 
@@ -2397,7 +2527,10 @@ def solve_grouped_fused(
     """Fused device-resident form of :func:`solve_sparse_grouped`.
 
     Returns the bit-for-bit identical solution, or None to fall back to
-    the host path (off-lattice keys, oversized grids, structure change).
+    the host path (off-lattice keys, oversized grids, empty rounds,
+    infeasible roots).  Group/class churn is *not* a fallback: it
+    patches or compacts the resident banks and solves fused in the same
+    call (DESIGN.md §17).
     """
     plan = _leaf_plan(groups, plan_cache)
     curves_, curve_keys = _class_curves(
@@ -2426,9 +2559,11 @@ def solve_hierarchical_fused(
     curves — shared caches), lowering it to a static combine schedule
     plus a dynamic per-domain cap-cut vector, then runs the whole
     decision pipeline on device (DESIGN.md §16).  Returns None to fall
-    back to the host path: off-lattice keys, oversized grids, or a
-    structure change (new class layouts, topology edits) against the
-    resident banks — ``fstate.stats['fallback_reason']`` says which.
+    back to the host path: off-lattice keys, oversized grids, empty
+    rounds or an infeasible root — ``fstate.stats['fallback_reason']``
+    says which.  Structure changes (new class layouts, membership churn,
+    topology edits) are served fused in the same round by row patching
+    or device-side compaction of the resident banks (DESIGN.md §17).
     """
     eff_root = _domain_eff(root, float(budget))
     if not root.children:

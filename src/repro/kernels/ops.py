@@ -37,6 +37,44 @@ def leaf_shard_mesh(n_devices: int):
     return Mesh(np.asarray(jax.devices()[:n_devices]), ("leaves",))
 
 
+@functools.partial(jax.jit, static_argnames=("k_pad",))
+def bank_compact(kb_old, vb_old, src_s, src_l, *, k_pad: int):
+    """Device-side compaction of the fused round's resident option banks.
+
+    When the bank *layout* changes (leaf set, padded dims, topology — see
+    DESIGN.md §17) the surviving rows are repacked on device instead of
+    rebuilt on the host: ``src_s``/``src_l`` are ``[S_new, L_new]`` int32
+    gather maps into the old ``[S_old, L_old, K_old]`` banks (-1 marks a
+    row with no clean source — it is initialized to the identity row
+    ``kb = 0 / vb = [0, -inf, ...]`` and, if it carries real content, the
+    caller scatters it afterwards via the donated row patch).  The option
+    axis pads (or truncates) to ``k_pad``; a clean row's tail beyond its
+    own option count is identity padding by construction, so both
+    directions are exact.  Returns the new ``[S_new, L_new, k_pad]``
+    (kb, vb) banks.  Pure gather/select — no values are recomputed, so a
+    gathered row is bitwise the row a host rebuild would upload.
+    """
+    import jax.numpy as jnp
+
+    valid = src_s >= 0
+    ss = jnp.where(valid, src_s, 0)
+    ll = jnp.where(valid, src_l, 0)
+    kb_g = kb_old[ss, ll]  # [S_new, L_new, K_old]
+    vb_g = vb_old[ss, ll]
+    k_old = kb_old.shape[-1]
+    if k_pad > k_old:
+        pad = ((0, 0), (0, 0), (0, k_pad - k_old))
+        kb_g = jnp.pad(kb_g, pad)
+        vb_g = jnp.pad(vb_g, pad, constant_values=-jnp.inf)
+    elif k_pad < k_old:
+        kb_g = kb_g[..., :k_pad]
+        vb_g = vb_g[..., :k_pad]
+    kb_id = jnp.zeros_like(kb_g)
+    vb_id = jnp.full_like(vb_g, -jnp.inf).at[..., 0].set(0.0)
+    m = valid[..., None]
+    return jnp.where(m, kb_g, kb_id), jnp.where(m, vb_g, vb_id)
+
+
 def maxplus_conv(dp: jax.Array, f: jax.Array, *, block_b: int = 256):
     """(max,+)-convolution DP stage.  Returns (out, argmax_k)."""
     return _mckp_dp.maxplus_conv_pallas(

@@ -228,7 +228,10 @@ def test_fused_fallback_reasons():
     assert out is None
     assert fstate.stats["fallback_reason"] == "grid_overflow"
 
-    # structure change against resident banks
+    # structure change against resident banks is NOT a fallback
+    # (DESIGN.md §17): the differently-shaped tree compacts or patches
+    # the banks and solves fused in the same call, bit-for-bit with the
+    # host solver
     rng = np.random.default_rng(7)
     tree_a, _ = _random_deep_tree(rng, 500.0)
     tree_b, _ = _random_deep_tree(rng, 500.0)
@@ -242,9 +245,14 @@ def test_fused_fallback_reasons():
     out = mckp.solve_hierarchical_fused(
         tree_b, 500.0, state=mckp.HierState(), fstate=fstate
     )
-    assert out is None
-    assert fstate.stats["fallback_reason"] == "structure_change"
-    assert fstate.stats["fallbacks"] == 1
+    assert out is not None
+    assert fstate.stats["fallbacks"] == 0
+    assert fstate.stats["rebuilds"] == 1  # cold start only
+    host = mckp.solve_hierarchical(tree_b, 500.0)
+    assert out.picks == host.picks
+    assert out.total_value == host.total_value
+    assert out.spent == host.spent
+    assert out.domain_spent == host.domain_spent
 
 
 # ---------------------------------------------------------------------------

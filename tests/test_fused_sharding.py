@@ -67,6 +67,32 @@ for seed in range(6):
         assert sol.spent == host.spent
         assert sol.domain_spent == host.domain_spent
 
+# warm-state structure change under sharding (DESIGN.md §17): a second,
+# differently-shaped tree against the *same* FusedState must repack the
+# resident banks by device-side compaction — no host fallback — and stay
+# bit-for-bit with the host solver
+rng = np.random.default_rng(7777)
+budget = 500.0
+root_a, _ = _random_deep_tree(rng, budget, unconstrained_internal=False)
+root_b, _ = _random_deep_tree(rng, budget, unconstrained_internal=True)
+fstate = mckp.FusedState()
+sa = mckp.solve_hierarchical_fused(
+    root_a, budget, state=mckp.HierState(), fstate=fstate
+)
+assert sa is not None, fstate.stats["fallback_reason"]
+sb = mckp.solve_hierarchical_fused(
+    root_b, budget, state=mckp.HierState(), fstate=fstate
+)
+assert sb is not None, fstate.stats["fallback_reason"]
+assert fstate.stats["fallbacks"] == 0, fstate.stats
+assert fstate.stats["rebuilds"] == 1, fstate.stats  # cold start only
+assert fstate.stats["compactions"] >= 1, fstate.stats
+hb = mckp.solve_hierarchical(root_b, budget)
+assert sb.picks == hb.picks
+assert sb.total_value == hb.total_value
+assert sb.spent == hb.spent
+assert sb.domain_spent == hb.domain_spent
+
 print("SHARDED_PARITY_OK")
 """
 

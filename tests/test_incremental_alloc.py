@@ -20,7 +20,7 @@ except ImportError:  # image without hypothesis: property tests skip
 from repro.cluster import ClusterSim, PowerTopology, scenario as sc
 from repro.cluster.controller import make_controller
 from repro.cluster.sim import NodeTable
-from repro.core import mckp, surfaces, types
+from repro.core import curves, mckp, surfaces, types
 
 
 @pytest.fixture(scope="module")
@@ -633,9 +633,10 @@ def test_fused_flat_parity(suite, churn, seed):
     )
     stats = ctrl.fused_stats()
     assert stats.attempts > 0
-    if churn == 0.0:
-        # stable structure: every attempted round stays on device
-        assert stats.fallbacks == 0
+    # structure churn is a fused fast path now (DESIGN.md §17): every
+    # attempted round stays on device at every churn level
+    assert stats.fallbacks == 0
+    assert stats.rebuilds == 1  # cold start only
 
 
 @pytest.mark.parametrize("churn", [0.0, 0.01, 0.10])
@@ -647,8 +648,8 @@ def test_fused_hier_parity(suite, churn, seed):
     )
     stats = ctrl.fused_stats()
     assert stats.attempts > 0
-    if churn == 0.0:
-        assert stats.fallbacks == 0
+    assert stats.fallbacks == 0
+    assert stats.rebuilds == 1
 
 
 @hypothesis.given(seed=st.integers(0, 2**31 - 1))
@@ -662,9 +663,10 @@ def test_fused_parity_property(seed):
 
 
 @pytest.mark.parametrize("hier", [False, True])
-def test_fused_fallback_transition(suite, hier):
-    """A mid-run class-layout change demotes exactly one round to the host
-    path (fused -> host -> fused), with parity maintained throughout."""
+def test_fused_structure_change_stays_fused(suite, hier):
+    """A mid-run class-layout change is served fused *in the same round*
+    (DESIGN.md §17): no host fallback, parity maintained throughout, and
+    the churn is visible only as row uploads against the resident banks."""
     system, apps, surfs = suite
     n = 40
     policy = "ecoshift_hier" if hier else "ecoshift"
@@ -700,9 +702,11 @@ def test_fused_fallback_transition(suite, hier):
     round_(0)
     round_(1)
     assert fused_ctrl.last_solver == "fused"
+    stats_before = fused_ctrl.fused_stats()
+    assert stats_before.rebuilds == 1  # the cold start, nothing else
     # vaporize one whole receiver behaviour class: its digest vanishes
-    # from the class layout, so the fused round must fall back to the
-    # host path and rebuild its banks
+    # from the class layout — historically a structure_change host
+    # fallback, now pure row content patched under the same bank layout
     t = fused_sim.table
     _, recv, _ = fused_sim.partition_rows()
     gids = t.base_gid[recv]
@@ -711,13 +715,115 @@ def test_fused_fallback_transition(suite, hier):
         int(t.node_ids[i]) for i in recv[gids == smallest]
     )
     round_(2, events=[sc.NodeFailure(round=2, node_ids=doomed)])
-    assert fused_ctrl.last_solver == "host"
-    assert fused_ctrl.fused_stats().fallbacks >= 1
-    # structure is warm again: the next round resumes on device
+    assert fused_ctrl.last_solver == "fused"
+    stats_after = fused_ctrl.fused_stats()
+    assert stats_after.fallbacks == stats_before.fallbacks
+    assert stats_after.rebuilds == 1  # still only the cold start
+    assert stats_after.row_uploads > stats_before.row_uploads
+    assert 0.0 < stats_after.slack_utilization <= 1.0
     round_(3)
     assert fused_ctrl.last_solver == "fused"
     round_(4)
     assert fused_ctrl.last_solver == "fused"
+
+
+def _toy_groups(n_classes, *, k=3, prefix="cls", cost0=25.0):
+    """n behaviour classes of one member each, lattice-friendly costs."""
+    out = []
+    for g in range(n_classes):
+        costs = cost0 * np.arange(1, k + 1) + 25.0 * g
+        values = np.linspace(0.05, 0.4, k) + 0.01 * g
+        caps = np.stack([100.0 + costs, np.full(k, 100.0)], axis=-1)
+        table = curves.OptionTable(
+            name=f"{prefix}{g}",
+            costs=np.concatenate([[0.0], costs]),
+            values=np.concatenate([[0.0], values]),
+            caps=np.concatenate([[[100.0, 100.0]], caps], axis=0),
+        )
+        out.append(
+            mckp.GroupedOptions(table=table, members=(f"{prefix}{g}n0",))
+        )
+    return out
+
+
+def _fused_vs_host(groups, budget, fstate):
+    sol = mckp.solve_grouped_fused(groups, budget, fstate=fstate)
+    assert sol is not None
+    ref = mckp.solve_sparse_grouped(groups, budget)
+    assert sol.picks == ref.picks
+    assert sol.spent == ref.spent and sol.total_value == ref.total_value
+    return sol
+
+
+def test_fused_compaction_on_slack_exhaustion():
+    """Growing the class count past the padded stage tier triggers a
+    device-side compaction — not a host rebuild, not a fallback — and the
+    compacted solve stays bit-for-bit with the host solver."""
+    fstate = mckp.FusedState()
+    _fused_vs_host(_toy_groups(2), 900.0, fstate)
+    assert fstate.stats["rebuilds"] == 1
+    assert fstate.stats["compactions"] == 0
+    # 2 classes fit the s_pad=8 tier; 11 classes exhaust it -> repack
+    _fused_vs_host(_toy_groups(11), 900.0, fstate)
+    assert fstate.stats["rebuilds"] == 1  # still only the cold start
+    assert fstate.stats["compactions"] == 1
+    assert fstate.stats["fallbacks"] == 0
+    # shrinking back stays under the sticky (never-shrinking) tier: the
+    # vacated rows mask to identity via delta patch, no second compaction
+    _fused_vs_host(_toy_groups(3), 900.0, fstate)
+    assert fstate.stats["compactions"] == 1
+    assert fstate.stats["fallbacks"] == 0
+    assert 0.0 < fstate.stats["slack_utilization"] <= 1.0
+
+
+def test_fused_off_lattice_fallback_and_resume():
+    """A cap-key that does not round-trip through the micro-watt lattice
+    pins ``fallback_reason='off_lattice'``; the next clean round resumes
+    fused against the same warm state."""
+    fstate = mckp.FusedState()
+    good = _toy_groups(2)
+    _fused_vs_host(good, 900.0, fstate)
+    n0 = fstate.stats["fallbacks"]
+    # float64 micro-watt round-trip fails for this magnitude: the curve
+    # key is off-lattice, so the fused path must hand the round to host
+    bad_cost = 175111078930.00565
+    bad = good + _toy_groups(1, prefix="bad", cost0=bad_cost)
+    sol = mckp.solve_grouped_fused(bad, 2.0 * bad_cost, fstate=fstate)
+    assert sol is None
+    assert fstate.stats["fallback_reason"] == "off_lattice"
+    assert fstate.stats["fallbacks"] == n0 + 1
+    resumed = _fused_vs_host(good, 900.0, fstate)
+    assert resumed is not None
+    assert fstate.stats["fallback_reason"] == ""
+    assert fstate.stats["fallbacks"] == n0 + 1
+
+
+def test_fused_grid_overflow_fallback_and_resume():
+    """Near-identical costs collapse the lattice pitch to ~1 uW, blowing
+    the device grid bound: ``fallback_reason='grid_overflow'``, then the
+    next clean round resumes fused."""
+    fstate = mckp.FusedState()
+    good = _toy_groups(2)
+    _fused_vs_host(good, 900.0, fstate)
+    n0 = fstate.stats["fallbacks"]
+    costs = np.array([25.0, 25.000001])  # gcd pitch: 1 micro-watt
+    table = curves.OptionTable(
+        name="dense",
+        costs=np.concatenate([[0.0], costs]),
+        values=np.array([0.0, 0.1, 0.2]),
+        caps=np.concatenate(
+            [[[100.0, 100.0]], np.stack([100.0 + costs, 100.0 + 0 * costs], axis=-1)],
+            axis=0,
+        ),
+    )
+    bad = [mckp.GroupedOptions(table=table, members=("densen0",))]
+    sol = mckp.solve_grouped_fused(bad, 100.0, fstate=fstate)
+    assert sol is None
+    assert fstate.stats["fallback_reason"] == "grid_overflow"
+    assert fstate.stats["fallbacks"] == n0 + 1
+    _fused_vs_host(good, 900.0, fstate)
+    assert fstate.stats["fallback_reason"] == ""
+    assert fstate.stats["fallbacks"] == n0 + 1
 
 
 # ---------------------------------------------------------------------------
@@ -746,17 +852,35 @@ class TestDeviceView:
                 np.asarray(getattr(sim.table, col)),
             )
 
-    def test_growth_forces_full_upload(self, suite):
+    def test_growth_extends_on_device(self, suite):
+        """Arrivals no longer force a full host re-upload: the resident
+        prefix is reused on device and only the appended tail uploads."""
         system, apps, surfs = suite
         sim = ClusterSim.build(system, apps, surfs, n_nodes=16, seed=0)
         view = sim.table.device_view()
-        full0 = view.uploads_full
+        full0, rows0 = view.uploads_full, view.uploads_rows
         sim.apply_events([
             sc.NodeArrival(round=1, app=apps[0], caps=(150.0, 150.0)),
         ])
         view = sim.table.device_view()
-        assert view.uploads_full == full0 + 1  # shapes changed
+        assert view.uploads_full == full0  # extended, not rebuilt
+        assert view.extends == 1
+        assert view.uploads_rows >= rows0 + 1
         assert len(np.asarray(view.alive)) == len(sim.table)
+        for col in ("caps", "alive", "slowdown", "domain_id"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(view, col)),
+                np.asarray(getattr(sim.table, col)),
+            )
+        # growth mixed with same-round mutations of resident rows: the
+        # below-prefix dirty rows scatter, the tail extends, still exact
+        sim.apply_events([
+            sc.NodeArrival(round=2, app=apps[1], caps=(150.0, 150.0)),
+            sc.StragglerOnset(round=2, node_id=3, slowdown=1.7),
+        ])
+        view = sim.table.device_view()
+        assert view.uploads_full == full0
+        assert view.extends == 2
         for col in ("caps", "alive", "slowdown", "domain_id"):
             np.testing.assert_array_equal(
                 np.asarray(getattr(view, col)),

@@ -17,7 +17,7 @@ fi
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
-echo "== cluster.sim smoke scenario (CPU interpret mode, incl. online prediction + 1k scaling + 4-rack hier tiers) =="
+echo "== cluster.sim smoke scenario (CPU interpret mode, incl. online prediction + 1k scaling + 4-rack hier + fused-churn tiers) =="
 python tools/smoke_scenario.py
 
 echo "== cluster scaling bench (fast tiers; regression guard vs committed JSON) =="
@@ -31,11 +31,11 @@ python -m benchmarks.hier_alloc --fast \
 echo "== kernel parity (CPU interpret mode: Pallas kernels vs references) =="
 python -m pytest -x -q tests/test_kernels.py
 
-echo "== multi-device sharding smoke (4 virtual CPU devices: sharded == single-device == host, bitwise) =="
+echo "== multi-device sharding smoke (4 virtual CPU devices: sharded == single-device == host, bitwise, incl. warm-state structure change via device compaction) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=4" \
   python -m pytest -x -q tests/test_fused_sharding.py
 
-echo "== incremental allocation bench (fast tiers; parity + regression guard vs committed JSON; incl. fused warm re-solve) =="
+echo "== incremental allocation bench (fast tiers; parity + regression guard vs committed JSON; incl. fused warm re-solve + fused-churn zero-fallback cases) =="
 python -m benchmarks.incremental_alloc --fast --fused \
   --check BENCH_incremental_alloc.json --out BENCH_incremental_alloc.json
 

@@ -12,9 +12,16 @@ the engine's phase timings (``ClusterSim.last_round_profile``):
 With ``--fused`` the controller runs the device-resident fused round
 (DESIGN.md §14) and each row also shows the device/host split of the
 allocate phase (``alloc_device_s`` — seconds inside the jitted pipeline —
-plus which solver produced the round).  ``--json`` emits the whole run as
+plus which solver produced the round).  With ``--fused --churn > 0`` the
+allocate phase of each structure-changing round further breaks into the
+fused segments (DESIGN.md §17): ``prep`` (host row prep + layout),
+``patch`` (donated dirty-row scatter), ``compact`` (device-side bank
+repack), ``dispatch`` (the jitted pipeline), ``backtrack`` (decision
+readback) and ``assembly`` (host pick assembly) — so a churn regression
+is attributable to one segment.  ``--json`` emits the whole run as
 one JSON object on stdout (per-round phase timings in ms, device-vs-host
-split, fused-state counters) for tooling; the human table is suppressed.
+split, fused segments, fused-state counters) for tooling; the human
+table is suppressed.
 
 plus a cProfile top-N of one steady-state round, so future perf PRs can
 see exactly where round time goes before touching anything.
@@ -57,6 +64,12 @@ from benchmarks.incremental_alloc import (  # noqa: E402
 from repro.cluster.controller import make_controller  # noqa: E402
 
 PHASES = ("partition_s", "batch_s", "allocate_s", "conserve_s", "measure_s")
+
+#: fused allocate-phase segments (DESIGN.md §17), in execution order
+SEGMENTS = (
+    "prep_s", "patch_s", "compact_s", "dispatch_s", "backtrack_s",
+    "assembly_s",
+)
 
 
 def _level_summary(sim, topo) -> list[dict]:
@@ -151,6 +164,7 @@ def main() -> None:
         sim.run_round(ctrl, budget=budget, round_index=r)
         return time.perf_counter() - t0
 
+    show_segments = args.fused and args.churn > 0
     rounds: list[dict] = []
     if not args.json:
         header = "round  total_ms  " + "  ".join(p[:-2] for p in PHASES)
@@ -160,12 +174,15 @@ def main() -> None:
               f"churn={args.churn:.1%} "
               f"incremental={not args.from_scratch} fused={args.fused}")
         print(header)
+        if show_segments:
+            print("       segments: " + "  ".join(s[:-2] for s in SEGMENTS))
     for r in range(args.rounds):
         total = one_round(r)
         prof = sim.last_round_profile
         device_s = float(prof.get("alloc_device_s", 0.0))
         solver = str(prof.get("alloc_solver", "")) or "-"
         fallback = str(prof.get("alloc_fallback_reason", ""))
+        segments = ctrl.fused_segments() if args.fused else {}
         rounds.append({
             "round": r,
             "total_ms": total * 1e3,
@@ -175,6 +192,25 @@ def main() -> None:
             * 1e3,
             "alloc_solver": solver,
             "alloc_fallback_reason": fallback,
+            **(
+                {
+                    "segments_ms": {
+                        s[:-2]: float(segments.get(s, 0.0)) * 1e3
+                        for s in SEGMENTS
+                    },
+                    "alloc_fused_rebuilds": prof.get(
+                        "alloc_fused_rebuilds", 0
+                    ),
+                    "alloc_fused_compactions": prof.get(
+                        "alloc_fused_compactions", 0
+                    ),
+                    "alloc_fused_slack_utilization": prof.get(
+                        "alloc_fused_slack_utilization", 0.0
+                    ),
+                }
+                if args.fused
+                else {}
+            ),
         })
         if not args.json:
             cols = "  ".join(
@@ -186,6 +222,12 @@ def main() -> None:
                 if fallback:
                     row += f" ({fallback})"
             print(row)
+            if show_segments and segments:
+                seg_cols = "  ".join(
+                    f"{s[:-2]}={float(segments.get(s, 0.0)) * 1e3:.1f}"
+                    for s in SEGMENTS
+                )
+                print(f"       {seg_cols}")
 
     levels = _level_summary(sim, topo)
     if not args.json and levels:

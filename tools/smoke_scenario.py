@@ -14,11 +14,16 @@ the from-scratch controller bit-for-bit every round and beat it decisively
 on steady-state rounds, DESIGN.md §13), the **receding-horizon MPC tier**
 (a CO2-day scenario: per-round budget compliance, strictly better
 perf-per-CO2 than myopic, and horizon=1 bit-for-bit parity,
-DESIGN.md §15), and exercises the
+DESIGN.md §15), the **fused-churn tier** (1k nodes under a 4-rack
+topology through the device-resident fused controller while mixed
+structure-changing events land: bit-for-bit parity with the host
+incremental controller every round and zero post-warmup fallbacks —
+structure churn must be absorbed by capacity-slack row patches and
+device-side bank compaction, DESIGN.md §17), and exercises the
 online-prediction path: a cold-start arrival (no pretrained surface)
 converging under the ``ecoshift_online`` controller within a handful of
 telemetry rounds.  Exits nonzero on any regression; hard wall-clock
-budget < 60 s.
+budget < 90 s.
 
     PYTHONPATH=src python tools/smoke_scenario.py
 """
@@ -42,7 +47,7 @@ from repro.core import ncf, surfaces, types
 from repro.core.allocator import EcoShiftAllocator
 
 #: hard wall-clock budget for the whole smoke (shared CI runners)
-BUDGET_S = 60.0
+BUDGET_S = 90.0
 
 #: wall-clock guard for the 1k-node scaling tier alone
 SCALING_BUDGET_S = 15.0
@@ -55,6 +60,10 @@ INCR_BUDGET_S = 15.0
 
 #: wall-clock guard for the receding-horizon (MPC) tier alone
 MPC_BUDGET_S = 15.0
+
+#: wall-clock guard for the fused-churn tier alone (first rounds pay the
+#: jitted-pipeline compiles; steady churn rounds are milliseconds)
+FUSED_CHURN_BUDGET_S = 30.0
 
 
 def scaling_smoke(system, apps, surfs) -> None:
@@ -263,6 +272,84 @@ def mpc_smoke(system, apps, surfs) -> None:
     )
 
 
+def fused_churn_smoke(system, apps, surfs) -> None:
+    """Fused-under-churn tier (DESIGN.md §17): 1k nodes, 4 racks, mixed
+    structure-changing events (straggler / phase change / failure /
+    arrival) through the device-resident fused controller.  Every round
+    must match the host incremental controller bit-for-bit, and after the
+    cold-start warmup there must be zero host fallbacks — structure churn
+    is served fused by capacity-slack row patches and device compaction,
+    never by the retired ``structure_change`` fallback."""
+    n, n_racks = 1000, 4
+    t0 = time.perf_counter()
+    topo = PowerTopology.uniform_racks(n, n_racks, rack_cap=70000.0)
+    pair = []
+    for kw in ({"fused": True}, {}):
+        sim = ClusterSim.build(
+            system, apps, surfs, n_nodes=n, seed=0,
+            initial_caps=(150.0, 150.0), topology=topo,
+        )
+        ctrl = make_controller("ecoshift_hier", system, **kw)
+        pair.append((sim, ctrl))
+    fused_ctrl = pair[0][1]
+    scen_events = {
+        2: [types_scenario.StragglerOnset(round=2, node_id=500, slowdown=1.7)],
+        3: [types_scenario.PhaseChange(
+            round=3, node_id=123, surface_id=apps[1].name)],
+        4: [types_scenario.NodeFailure(round=4, node_ids=(7, 8, 9))],
+        5: [types_scenario.NodeArrival(
+            round=5, app=apps[0], domain="rack1", caps=(150.0, 150.0))],
+        6: [
+            types_scenario.NodeFailure(round=6, node_ids=(42,)),
+            types_scenario.PhaseChange(
+                round=6, node_id=321, surface_id=apps[2].name),
+        ],
+    }
+    warmup_fallbacks = 0
+    for r in range(8):
+        allocs = []
+        for sim, ctrl in pair:
+            ev = scen_events.get(r, [])
+            if ev:
+                touched = sim.apply_events(ev)
+                ctrl.invalidate(touched)
+            res = sim.run_round(
+                ctrl, budget=2000.0 - 25.0 * r, round_index=r
+            )
+            allocs.append(res)
+        a, b = allocs
+        assert dict(a.allocation.caps) == dict(b.allocation.caps), (
+            f"fused != host at round {r}"
+        )
+        assert a.allocation.spent == b.allocation.spent
+        if r == 1:
+            warmup_fallbacks = fused_ctrl.fused_stats().fallbacks
+    stats = fused_ctrl.fused_stats()
+    assert stats.fallbacks - warmup_fallbacks == 0, (
+        f"structure-changing rounds fell back to host: "
+        f"{stats.fallbacks - warmup_fallbacks} post-warmup fallbacks "
+        f"(last reason: {stats.fallback_reason!r})"
+    )
+    assert stats.rebuilds == 1, (
+        f"resident banks were host-rebuilt {stats.rebuilds} times "
+        f"(only the cold start may rebuild)"
+    )
+    prof = pair[0][0].last_round_profile
+    assert prof["alloc_fused_rebuilds"] == stats.rebuilds
+    elapsed = time.perf_counter() - t0
+    assert elapsed < FUSED_CHURN_BUDGET_S, (
+        f"fused-churn tier took {elapsed:.1f} s "
+        f"(guard {FUSED_CHURN_BUDGET_S} s)"
+    )
+    print(
+        f"fusedchurn {n} nodes x {n_racks} racks x 8 rounds in "
+        f"{elapsed:.1f} s, parity OK, 0 post-warmup fallbacks, "
+        f"rebuilds={stats.rebuilds} compactions={stats.compactions} "
+        f"row_uploads={stats.row_uploads} "
+        f"slack={stats.slack_utilization:.2f}"
+    )
+
+
 def online_prediction_smoke(system, apps, surfs) -> None:
     """Cold-start arrival through the telemetry-driven prediction loop."""
     train = [a for a in apps if a.sclass in "CGB"][:8]
@@ -371,6 +458,8 @@ def main() -> None:
     incremental_smoke(system, apps, surfs)
 
     mpc_smoke(system, apps, surfs)
+
+    fused_churn_smoke(system, apps, surfs)
 
     online_prediction_smoke(system, apps, surfs)
 
