@@ -21,6 +21,7 @@ def main() -> None:
         budget_horizon,
         cluster_scaling,
         dp_scaling,
+        fault_storm,
         hier_alloc,
         incremental_alloc,
         fig1_heatmaps,
@@ -53,6 +54,7 @@ def main() -> None:
         ("hier_alloc", hier_alloc.run, True),
         ("incremental_alloc", incremental_alloc.run, True),
         ("budget_horizon", budget_horizon.run, True),
+        ("fault_storm", fault_storm.run, True),
         ("roofline", roofline_report.run, False),
         ("pod_power", pod_power_allocation.run, True),
         ("straggler", straggler_response.run, True),

@@ -1,12 +1,17 @@
 """Stateful, vectorized cluster control loop (EcoShift §5.4, multi-round).
 
-Five layers:
+Six layers:
 
  * ``budget``     — composable :class:`BudgetProvider` sources (constant,
                     trace replay, scaled/min composition, step overrides)
                     plus the shipped day-scale CO2/price/solar fixtures;
  * ``scenario``   — declarative event timelines (budget/price traces, node
                     arrivals/failures, straggler onsets, phase changes);
+ * ``faults``     — declarative seeded fault injection (telemetry drops /
+                    corruption, actuation NACK/partial/delay, controller
+                    crash+restore) resolved by the engine's PowerGuard
+                    watchdog and the controllers' self-healing hooks
+                    (DESIGN.md §18);
  * ``predictor``  — the telemetry-driven online prediction subsystem
                     (observation buffers, batched NCF online fits,
                     tolerance-gated surface refresh);
@@ -48,6 +53,20 @@ from repro.cluster.predictor import (  # noqa: F401
     TelemetryBatch,
     TelemetryRecord,
 )
+from repro.cluster.faults import (  # noqa: F401
+    ActuationDelay,
+    ActuationNack,
+    ActuationPartial,
+    ActuationReport,
+    ControllerCrash,
+    FaultInjector,
+    TelemetryCorrupt,
+    TelemetryDelay,
+    TelemetryDrop,
+    TelemetryStale,
+    fault_storm,
+    validate_faults,
+)
 from repro.cluster.sim import (  # noqa: F401
     ClusterSim,
     NodeState,
@@ -58,5 +77,7 @@ from repro.cluster.sim import (  # noqa: F401
 from repro.cluster.controller import (  # noqa: F401
     Controller,
     ControllerConfig,
+    load_snapshot,
     make_controller,
+    save_snapshot,
 )

@@ -91,6 +91,42 @@ class Controller:
     def reset(self) -> None:
         self.invalidate()
 
+    # -- fault-tolerance hooks (DESIGN.md §18) -------------------------------
+
+    def notify_actuation(self, report) -> None:
+        """Engine hook after a faulted round's actuation settles
+        (:class:`repro.cluster.faults.ActuationReport`).  DP controllers
+        pin NACKed receivers at their last-confirmed caps with bounded
+        retry backoff; the base class ignores it."""
+
+    def snapshot(self) -> dict:
+        """Serializable warm-state checkpoint (plain python/numpy values).
+
+        The contract (certified by tests/test_faults.py): a controller
+        that is ``crash_reset()`` then ``restore(snapshot)``-ed produces
+        **bit-for-bit** the allocations of the uninterrupted run.  Warm
+        caches are *not* serialized — every incremental/fused path is
+        already certified bit-for-bit equal to its from-scratch solve, so
+        only state that changes *results* (pins, online-learned predictor
+        state) needs to survive; caches and resident banks rebuild cold.
+        """
+        return {"policy": self.policy}
+
+    def restore(self, state: Mapping) -> None:
+        """Adopt a :meth:`snapshot` (see there for the bit-for-bit
+        contract).  Drops any warm caches accumulated since — restore is
+        self-contained and valid on a warm controller."""
+        if state.get("policy") != self.policy:
+            raise ValueError(
+                f"snapshot of policy {state.get('policy')!r} cannot restore "
+                f"a {self.policy!r} controller"
+            )
+
+    def crash_reset(self) -> None:
+        """Simulate a controller process crash: all warm state is gone.
+        (Restore from a snapshot afterwards for checkpointed failover.)"""
+        self.reset()
+
 
 class _StatelessController(Controller):
     """Wraps a pure policy function; nothing carries across rounds."""
@@ -161,6 +197,18 @@ class ControllerConfig:
     plan_levels: int = 64
     #: allowance-lattice cells of the horizon DP
     plan_grid: int = 2048
+    #: LRU bounds of the warm caches (None = the class defaults, e.g.
+    #: ``_OptionCachingController.MAX_GROUP_TABLES``).  Long-running
+    #: serving deployments tune memory here; any bound >= 1 is
+    #: bit-for-bit safe — caches are pure accelerators (evictions
+    #: re-compute, never change results; tests/test_faults.py certifies
+    #: a bound of 1 end-to-end)
+    max_group_tables: int | None = None
+    max_agg_curves: int | None = None
+    max_picks: int | None = None
+    max_plans: int | None = None
+    max_allocations: int | None = None
+    max_frontiers: int | None = None
 
     def merged(self, **overrides) -> "ControllerConfig":
         """Copy with every non-None override applied — the legacy-kwarg
@@ -352,6 +400,13 @@ class _OptionCachingController(Controller):
     MAX_PLANS = 256
     MAX_ALLOCATIONS = 8
 
+    #: NACK retry policy (DESIGN.md §18): after this many consecutive
+    #: NACKs the controller stops re-commanding a receiver (pin holds
+    #: until an operator ``invalidate``/event touches it) ...
+    NACK_MAX_RETRIES = 4
+    #: ... and the exponential retry backoff is capped at this many rounds
+    NACK_MAX_BACKOFF = 8
+
     def __init__(self, system: SystemSpec):
         super().__init__(system)
         #: name -> (baseline, surface, table); surface compared by identity
@@ -372,6 +427,12 @@ class _OptionCachingController(Controller):
         self._alloc_cache: mckp.LRUCache = mckp.LRUCache(self.MAX_ALLOCATIONS)
         #: delta-maintained behaviour-class grouping (DESIGN.md §13)
         self._grouping = _GroupingState()
+        #: NACK pin book: name -> {"caps": (c, g) last-confirmed applied,
+        #: "fails": consecutive NACKs, "until": round the backoff expires}
+        self._pins: dict[str, dict] = {}
+        #: round of the latest actuation report (pins apply to the *next*
+        #: round's solve)
+        self._pin_round: int = -1
 
     def invalidate(self, names: Sequence[str] | None = None) -> None:
         if names is None:
@@ -383,9 +444,206 @@ class _OptionCachingController(Controller):
             self._plan_cache.clear()
             self._alloc_cache.clear()
             self._grouping.reset()
+            self._pins.clear()
+            self._pin_round = -1
         else:
             for n in names:
                 self._options.pop(n, None)
+                # an event touching a pinned node (failure, phase change)
+                # supersedes the pin — the next solve re-commands it
+                self._pins.pop(n, None)
+
+    def _apply_cache_bounds(self, cfg: ControllerConfig) -> None:
+        """Resize the warm caches per the config's LRU-bound overrides.
+        In place (``LRUCache.resize``) because downstream state — e.g.
+        ``mckp.HierState`` — holds references to the same cache objects."""
+        for cache, bound in (
+            (self._group_tables, cfg.max_group_tables),
+            (self._agg_curves, cfg.max_agg_curves),
+            (self._pick_cache, cfg.max_picks),
+            (self._plan_cache, cfg.max_plans),
+            (self._alloc_cache, cfg.max_allocations),
+        ):
+            if bound is not None:
+                cache.resize(bound)
+
+    # -- NACK pinning (DESIGN.md §18) ----------------------------------------
+
+    def notify_actuation(self, report) -> None:
+        """Pin NACKed receivers at their last-confirmed applied caps with
+        exponential retry backoff: the first NACK retries next round, the
+        k-th after ``min(2^(k-1), NACK_MAX_BACKOFF)`` rounds, and after
+        ``NACK_MAX_RETRIES`` consecutive NACKs the controller stops
+        re-commanding the receiver entirely (the pin holds until an event
+        or ``invalidate`` touches the node).  While pinned, a receiver's
+        commanded caps equal its applied caps, so the actuation layer acks
+        it trivially — an ack clears the pin only once the backoff window
+        has expired (``report.round >= until``), which is exactly the
+        retry firing and succeeding."""
+        r = int(report.round)
+        self._pin_round = r
+        for nm in report.nacked:
+            p = self._pins.get(nm)
+            fails = (p["fails"] if p is not None else 0) + 1
+            if fails >= self.NACK_MAX_RETRIES:
+                until = r + 10**9  # stop retrying: effectively forever
+            else:
+                until = r + min(2 ** (fails - 1), self.NACK_MAX_BACKOFF)
+            applied = report.applied.get(nm)
+            caps = (
+                (float(applied[0]), float(applied[1]))
+                if applied is not None
+                else p["caps"]
+            )
+            self._pins[nm] = {"caps": caps, "fails": fails, "until": until}
+        for nm in report.acked:
+            p = self._pins.get(nm)
+            if p is not None and r >= p["until"]:
+                del self._pins[nm]
+
+    def _active_pins(self) -> dict[str, tuple[float, float]]:
+        """Pins that constrain the *next* round's solve."""
+        if not self._pins:
+            return {}
+        nxt = self._pin_round + 1
+        return {
+            nm: p["caps"]
+            for nm, p in self._pins.items()
+            if nxt <= p["until"]
+        }
+
+    def _solve_pinned(
+        self,
+        batch: ReceiverBatch,
+        budget: float,
+        pins: Mapping[str, tuple[float, float]],
+        domain_extra=None,
+    ) -> Allocation:
+        """Pinned-class solve: NACKed receivers hold their last-confirmed
+        caps; everyone else solves over the *remaining* budget/headroom.
+
+        The pinned extra is fitted to the current constraints first —
+        proportionally derated to each domain's headroom
+        (``PowerTopology.derate_factors``) and to the total budget — so
+        the merged allocation always validates: a stuck actuator's
+        *physical* overdraw is PowerGuard's to claw back, but the
+        *commanded* allocation never plans a violation.  The free
+        receivers re-solve through the ordinary grouped/hierarchical path
+        on a standalone (seq=0) sub-batch, so headroom a pin doesn't use
+        is redistributed rather than stranded, and the delta grouping
+        state skips these rounds cleanly (it resyncs from the next
+        engine-sequenced batch)."""
+        names = batch.names
+        pinned_idx = [i for i, nm in enumerate(names) if nm in pins]
+        free_idx = [i for i, nm in enumerate(names) if nm not in pins]
+        base = np.asarray(batch.baselines, dtype=np.float64)
+        pbase = base[pinned_idx]
+        pcaps = np.array(
+            [pins[names[i]] for i in pinned_idx], dtype=np.float64
+        ).reshape(len(pinned_idx), 2)
+        # a pin never takes a receiver below its baseline allotment
+        pcaps = np.maximum(pcaps, pbase)
+        pextra = pcaps.sum(axis=1) - pbase.sum(axis=1)
+        topo = getattr(self, "topology", None)
+        dom = (
+            np.asarray(batch.domain_ids)[pinned_idx]
+            if batch.domain_ids is not None and len(pinned_idx)
+            else None
+        )
+        scale = np.ones(len(pinned_idx))
+        if domain_extra is not None and dom is not None and len(pinned_idx):
+            leaf = np.zeros(len(topo), dtype=np.float64)
+            leaf += np.bincount(dom, weights=pextra, minlength=len(topo))
+            spend = topo.aggregate_leaves(leaf)
+            scale = topo.derate_factors(
+                spend, np.asarray(domain_extra, dtype=np.float64)
+            )[dom]
+        tot = float((pextra * scale).sum())
+        if tot > budget + 1e-12 and tot > 0:
+            scale = scale * (float(budget) / tot)
+            tot = float((pextra * scale).sum())
+        pcaps = pbase + scale[:, None] * (pcaps - pbase)
+        pextra = pextra * scale
+
+        free_budget = max(0.0, float(budget) - tot)
+        free_extra = None
+        if domain_extra is not None:
+            free_extra = np.asarray(domain_extra, dtype=np.float64).copy()
+            if dom is not None and len(pinned_idx):
+                leaf = np.zeros(len(topo), dtype=np.float64)
+                leaf += np.bincount(dom, weights=pextra, minlength=len(topo))
+                free_extra = np.clip(
+                    free_extra - topo.aggregate_leaves(leaf), 0.0, None
+                )
+        free = None
+        if free_idx:
+            sub = ReceiverBatch(
+                names=[names[i] for i in free_idx],
+                surface_ids=[batch.surface_ids[i] for i in free_idx],
+                baselines=base[free_idx],
+                surfaces=[batch.surfaces[i] for i in free_idx],
+                domain_ids=(
+                    np.asarray(batch.domain_ids)[free_idx]
+                    if batch.domain_ids is not None
+                    else None
+                ),
+                seq=0,
+            )
+            if domain_extra is not None:
+                free = self.allocate_hierarchical(
+                    sub, free_budget, free_extra, _skip_pins=True
+                )
+            else:
+                free = self.allocate_grouped(sub, free_budget, _skip_pins=True)
+        caps = dict(free.caps) if free is not None else {}
+        for k, i in enumerate(pinned_idx):
+            caps[names[i]] = (float(pcaps[k, 0]), float(pcaps[k, 1]))
+        pinned_spent = float(pextra.sum())
+        if domain_extra is not None:
+            ds = dict(getattr(self, "last_domain_spent", None) or {})
+            if dom is not None and len(pinned_idx):
+                leaf = np.zeros(len(topo), dtype=np.float64)
+                leaf += np.bincount(dom, weights=pextra, minlength=len(topo))
+                for dn, w in zip(topo.names, topo.aggregate_leaves(leaf)):
+                    if w:
+                        ds[dn] = ds.get(dn, 0.0) + float(w)
+            self.last_domain_spent = ds
+        self.last_solver = "pinned"
+        return Allocation(
+            caps=caps,
+            spent=(free.spent if free is not None else 0.0) + pinned_spent,
+            predicted_improvement=(
+                free.predicted_improvement if free is not None else 0.0
+            ),
+        )
+
+    # -- snapshot / restore (DESIGN.md §18) ----------------------------------
+
+    def snapshot(self) -> dict:
+        snap = super().snapshot()
+        snap["pins"] = {
+            nm: {
+                "caps": [float(p["caps"][0]), float(p["caps"][1])],
+                "fails": int(p["fails"]),
+                "until": int(p["until"]),
+            }
+            for nm, p in self._pins.items()
+        }
+        snap["pin_round"] = int(self._pin_round)
+        return snap
+
+    def restore(self, state: Mapping) -> None:
+        super().restore(state)
+        self.invalidate(None)  # restore is self-contained on a warm ctrl
+        self._pins = {
+            nm: {
+                "caps": (float(p["caps"][0]), float(p["caps"][1])),
+                "fails": int(p["fails"]),
+                "until": int(p["until"]),
+            }
+            for nm, p in state.get("pins", {}).items()
+        }
+        self._pin_round = int(state.get("pin_round", -1))
 
     @property
     def cached_tables(self) -> int:
@@ -522,12 +780,35 @@ class EcoShiftController(_OptionCachingController):
         self.last_planned_budget: float | None = None
         #: full per-round spend plan behind last_planned_budget
         self.last_plan: tuple | None = None
+        self._apply_cache_bounds(cfg)
 
     def invalidate(self, names: Sequence[str] | None = None) -> None:
         super().invalidate(names)
         if names is None:
             self._fused_state.clear()
             self._frontier_lru.clear()
+
+    def snapshot(self) -> dict:
+        # fused banks / HierState / frontiers are rebuilt cold after a
+        # restore (bit-for-bit certified vs warm); only the predictor's
+        # online-learned state changes allocations and must serialize
+        snap = super().snapshot()
+        pred = getattr(self, "predictor", None)
+        if pred is not None:
+            snap["predictor"] = pred.state_dict()
+        return snap
+
+    def restore(self, state: Mapping) -> None:
+        super().restore(state)
+        pred = getattr(self, "predictor", None)
+        if pred is not None and "predictor" in state:
+            pred.load_state_dict(state["predictor"])
+
+    def crash_reset(self) -> None:
+        super().crash_reset()
+        pred = getattr(self, "predictor", None)
+        if pred is not None:
+            pred.wipe()
 
     # -- receding-horizon planning (DESIGN.md §15) ---------------------------
 
@@ -654,7 +935,9 @@ class EcoShiftController(_OptionCachingController):
         """Sync the persistent grouping with a batch (delta or rebuild)."""
         self._grouping.sync(batch, leaf_ids, self._group_table)
 
-    def allocate_grouped(self, batch: ReceiverBatch, budget: float) -> Allocation:
+    def allocate_grouped(
+        self, batch: ReceiverBatch, budget: float, _skip_pins: bool = False
+    ) -> Allocation:
         """Group-collapsed round: receivers sharing (surface identity,
         baseline) solve as one multiplicity-m DP super-stage — parity with
         :meth:`allocate` is certified by tests/test_grouped_alloc.py.
@@ -665,6 +948,12 @@ class EcoShiftController(_OptionCachingController):
         a round whose classes and budget are unchanged returns the cached
         Allocation outright — bit-for-bit what a from-scratch solve
         produces (tests/test_incremental_alloc.py)."""
+        if not _skip_pins and self._pins:
+            pins = self._active_pins()
+            present = set(batch.names)
+            pins = {nm: c for nm, c in pins.items() if nm in present}
+            if pins:
+                return self._solve_pinned(batch, budget, pins)
         incremental = (
             self.incremental
             and self.solver == "sparse"
@@ -812,6 +1101,8 @@ class EcoShiftHierController(EcoShiftController):
         #: persistent hierarchical warm state: frontier aggregation tree
         #: combines, pick multisets, leaf solutions, merged-class plans —
         #: all content-keyed and LRU-bounded (mckp.HierState)
+        if cfg.max_frontiers is not None:
+            self._frontiers.resize(cfg.max_frontiers)
         self._hier_state = mckp.HierState(
             curve_cache=self._agg_curves,
             frontier_cache=self._frontiers,
@@ -882,6 +1173,7 @@ class EcoShiftHierController(EcoShiftController):
         batch: ReceiverBatch,
         budget: float,
         domain_extra: np.ndarray,
+        _skip_pins: bool = False,
     ) -> Allocation:
         """One topology-aware round: per-domain capped frontiers + the
         upper-level budget-split DP through the frontier aggregation tree.
@@ -899,6 +1191,15 @@ class EcoShiftHierController(EcoShiftController):
         if batch.domain_ids is None:
             raise ValueError("receiver batch carries no domain ids")
         batch = self._served_batch(batch)
+        if not _skip_pins and self._pins:
+            pins = self._active_pins()
+            present = set(batch.names)
+            pins = {nm: c for nm, c in pins.items() if nm in present}
+            if pins:
+                self.last_domain_spent = {}
+                return self._solve_pinned(
+                    batch, budget, pins, domain_extra=domain_extra
+                )
         incremental = (
             self.incremental
             and self.solver == "sparse"
@@ -1030,12 +1331,16 @@ class EcoShiftOnlineController(EcoShiftController):
         }
         return super().allocate(receivers, baselines, budget, seen)
 
-    def allocate_grouped(self, batch: ReceiverBatch, budget: float):
+    def allocate_grouped(
+        self, batch: ReceiverBatch, budget: float, _skip_pins: bool = False
+    ):
         served = [
             self.predictor.surface_for(name, sid)
             for name, sid in zip(batch.names, batch.surface_ids)
         ]
-        return super().allocate_grouped(_served_replace(batch, served), budget)
+        return super().allocate_grouped(
+            _served_replace(batch, served), budget, _skip_pins=_skip_pins
+        )
 
     def ingest_telemetry(self, records) -> None:
         self.predictor.observe(records)
@@ -1064,6 +1369,7 @@ class OracleController(_OptionCachingController):
         self.config = cfg
         #: None = auto (brute force iff <= 10 receivers, like run_round)
         self.exhaustive = cfg.exhaustive
+        self._apply_cache_bounds(cfg)
 
     def allocate(self, receivers, baselines, budget, surfaces):
         options = self._options_for(receivers, baselines, surfaces)
@@ -1079,7 +1385,15 @@ class OracleController(_OptionCachingController):
             sol, baselines, budget, self.system.grid
         )
 
-    def allocate_grouped(self, batch: ReceiverBatch, budget: float) -> Allocation:
+    def allocate_grouped(
+        self, batch: ReceiverBatch, budget: float, _skip_pins: bool = False
+    ) -> Allocation:
+        if not _skip_pins and self._pins:
+            pins = self._active_pins()
+            present = set(batch.names)
+            pins = {nm: c for nm, c in pins.items() if nm in present}
+            if pins:
+                return self._solve_pinned(batch, budget, pins)
         groups = self._grouped_options_for(batch)
         exhaustive = (
             len(batch) <= 10 if self.exhaustive is None else self.exhaustive
@@ -1099,3 +1413,80 @@ class OracleController(_OptionCachingController):
 def make_controller(policy: str, system: SystemSpec, **kwargs) -> Controller:
     """Instantiate a registered controller by policy name."""
     return policies_mod.get_controller(policy, system, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot persistence (DESIGN.md §18)
+# ---------------------------------------------------------------------------
+
+
+def _pack(obj):
+    """Encode a snapshot tree for msgpack: ndarrays as tagged
+    dtype/shape/bytes, tuples and non-str-keyed dicts as tagged lists
+    (msgpack has neither).  Inverse of :func:`_unpack`; numpy float64 and
+    msgpack doubles round-trip exactly, so file round-trips keep the
+    bit-for-bit restore contract."""
+    if isinstance(obj, np.ndarray):
+        return {
+            "__nd__": True,
+            "dtype": str(obj.dtype),
+            "shape": list(obj.shape),
+            "data": obj.tobytes(),
+        }
+    if isinstance(obj, (np.floating, np.integer, np.bool_)):
+        return obj.item()
+    if isinstance(obj, tuple):
+        return {"__tup__": [_pack(v) for v in obj]}
+    if isinstance(obj, list):
+        return [_pack(v) for v in obj]
+    if isinstance(obj, dict):
+        if all(isinstance(k, str) for k in obj):
+            return {k: _pack(v) for k, v in obj.items()}
+        return {"__map__": [[_pack(k), _pack(v)] for k, v in obj.items()]}
+    return obj
+
+
+def _unpack(obj):
+    if isinstance(obj, dict):
+        if obj.get("__nd__"):
+            return (
+                np.frombuffer(obj["data"], dtype=obj["dtype"])
+                .reshape(obj["shape"])
+                .copy()
+            )
+        if "__tup__" in obj:
+            return tuple(_unpack(v) for v in obj["__tup__"])
+        if "__map__" in obj:
+            return {_unpack(k): _unpack(v) for k, v in obj["__map__"]}
+        return {k: _unpack(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_unpack(v) for v in obj]
+    return obj
+
+
+def save_snapshot(path: str, snap: Mapping) -> None:
+    """Persist a ``Controller.snapshot()`` crash-safely.
+
+    Same atomic-write discipline as ``repro.train.checkpoint``: write to a
+    sibling temp file, flush + fsync, then ``os.replace`` — a crash
+    mid-write leaves the previous snapshot intact, never a torn file."""
+    import os
+
+    import msgpack
+
+    blob = msgpack.packb(_pack(dict(snap)), use_bin_type=True)
+    tmp = f"{path}.tmp"
+    with open(tmp, "wb") as f:
+        f.write(blob)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def load_snapshot(path: str) -> dict:
+    """Read a snapshot written by :func:`save_snapshot` (feed the result
+    to ``Controller.restore``)."""
+    import msgpack
+
+    with open(path, "rb") as f:
+        return _unpack(msgpack.unpackb(f.read(), raw=False))

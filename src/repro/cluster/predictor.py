@@ -145,6 +145,15 @@ class OnlinePredictorConfig:
     err_ema: float = 0.5
     #: per-(app, instance) observation buffer bound (distinct cells)
     max_cells: int = 64
+    #: physical-plausibility bound on one record's runtime ratio: reject
+    #: records where t_allocated / t_baseline (either direction) exceeds
+    #: this — cap changes on this hardware never slow/speed a job 10x, so
+    #: such a record is a broken meter, not a measurement
+    max_slowdown: float = 10.0
+    #: rejected records from one instance before it is quarantined
+    quarantine_after: int = 3
+    #: rounds a quarantined instance's telemetry is dropped wholesale
+    quarantine_rounds: int = 32
 
 
 class OnlinePredictor:
@@ -188,6 +197,20 @@ class OnlinePredictor:
         self.last_moves: dict[str, float] = {}
         self.n_refits = 0
         self._prior: TabulatedSurface | None = None
+        #: robust-ingest counters (DESIGN.md §18): records rejected as
+        #: non-finite / non-positive / physically impossible, and records
+        #: dropped because their instance is quarantined
+        self.n_rejected = 0
+        self.n_quarantine_dropped = 0
+        #: instance -> consecutive-corruption count since last quarantine
+        self._corrupt: dict[str, int] = {}
+        #: instance -> round its quarantine expires
+        self._quarantined_until: dict[str, int] = {}
+        #: construction-time artifacts a crash wipe restores to (the
+        #: offline model and offline-seeded surfaces survive a process
+        #: crash on disk; everything learned online does not)
+        self._initial_ncf = predictor
+        self._seeded: dict[str, TabulatedSurface] = {}
 
     # -- surface source ------------------------------------------------------
 
@@ -233,6 +256,7 @@ class OnlinePredictor:
         """Adopt offline-predicted surfaces as the served starting point
         (apps not listed stay cold-start)."""
         self.surfaces.update(predicted)
+        self._seeded.update(predicted)
 
     def surface_for(self, instance: str, surface_id: str) -> PowerSurface:
         """Served surface for one receiver instance (prior when cold)."""
@@ -259,6 +283,39 @@ class OnlinePredictor:
         slot[0] += t
         slot[1] += 1
 
+    def _record_ok(self, t0: float, t1: float) -> bool:
+        """Physical plausibility of one record's runtimes: finite, strictly
+        positive, and within ``max_slowdown`` of each other in either
+        direction (a cap change can't make a job 1000x slower — that's a
+        broken meter)."""
+        if not (np.isfinite(t0) and np.isfinite(t1)):
+            return False
+        if t0 <= 0.0 or t1 <= 0.0:
+            return False
+        m = self.cfg.max_slowdown
+        return t1 <= m * t0 and t0 <= m * t1
+
+    def _admit(self, instance: str, rnd: int, t0: float, t1: float) -> bool:
+        """Gate one record into the buffers: quarantined instances are
+        dropped wholesale, implausible records are rejected and counted,
+        and ``quarantine_after`` rejections quarantine the instance for
+        ``quarantine_rounds`` rounds (a meter that keeps lying gets
+        unplugged instead of re-probed every round)."""
+        q = self._quarantined_until.get(instance)
+        if q is not None and rnd < q:
+            self.n_quarantine_dropped += 1
+            return False
+        if self._record_ok(t0, t1):
+            return True
+        self.n_rejected += 1
+        c = self._corrupt.get(instance, 0) + 1
+        if c >= self.cfg.quarantine_after:
+            self._quarantined_until[instance] = rnd + self.cfg.quarantine_rounds
+            self._corrupt[instance] = 0
+        else:
+            self._corrupt[instance] = c
+        return False
+
     def observe(self, records: "Iterable[TelemetryRecord] | TelemetryBatch") -> None:
         """Ingest one round of telemetry: buffer both measurement points of
         every record and update the per-app prediction-error EMA.
@@ -270,6 +327,8 @@ class OnlinePredictor:
             self._observe_batch(records)
             return
         for r in records:
+            if not self._admit(r.instance, r.round, r.t_baseline, r.t_allocated):
+                continue
             self._app_of_instance[r.instance] = r.base_app
             self._push(r.base_app, r.instance, r.baseline_caps, r.t_baseline)
             self._push(r.base_app, r.instance, r.allocated_caps, r.t_allocated)
@@ -313,9 +372,18 @@ class OnlinePredictor:
         bc, bg = snap_cols(batch.baseline_caps)
         ac, ag = snap_cols(batch.allocated_caps)
         max_cells = self.cfg.max_cells
+        use = np.zeros(n, dtype=bool)
         for i in range(n):
-            app = strings[batch.app_gids[i]]
             inst = strings[batch.inst_gids[i]]
+            if not self._admit(
+                inst,
+                batch.round,
+                float(batch.t_baseline[i]),
+                float(batch.t_allocated[i]),
+            ):
+                continue
+            use[i] = True
+            app = strings[batch.app_gids[i]]
             self._app_of_instance[inst] = app
             buf = self._buffers.setdefault((app, inst), {})
             for cell, t in (
@@ -330,6 +398,8 @@ class OnlinePredictor:
 
         by_app: dict[int, list[int]] = {}
         for i in range(n):
+            if not use[i]:
+                continue
             by_app.setdefault(int(batch.app_gids[i]), []).append(i)
         a = self.cfg.err_ema
         for gid, idx in by_app.items():
@@ -420,3 +490,118 @@ class OnlinePredictor:
             # freshly re-accumulated error should trigger another fit
             self.prediction_error[app] = 0.0
         return changed
+
+    # -- crash / restore (DESIGN.md §18) --------------------------------------
+
+    @staticmethod
+    def _encode_surface(s: TabulatedSurface) -> dict:
+        return {
+            "cpu_levels": np.asarray(s.cpu_levels),
+            "gpu_levels": np.asarray(s.gpu_levels),
+            "table": np.asarray(s.table),
+            "natural_cpu": float(s.natural_cpu),
+            "natural_gpu": float(s.natural_gpu),
+        }
+
+    @staticmethod
+    def _decode_surface(d: dict) -> TabulatedSurface:
+        return TabulatedSurface(
+            cpu_levels=np.asarray(d["cpu_levels"]),
+            gpu_levels=np.asarray(d["gpu_levels"]),
+            table=np.asarray(d["table"]),
+            natural_cpu=float(d["natural_cpu"]),
+            natural_gpu=float(d["natural_gpu"]),
+        )
+
+    @staticmethod
+    def _tree_np(x):
+        """Copy a param pytree to host numpy (dict/tuple structure kept)."""
+        if isinstance(x, dict):
+            return {k: OnlinePredictor._tree_np(v) for k, v in x.items()}
+        if isinstance(x, tuple):
+            return tuple(OnlinePredictor._tree_np(v) for v in x)
+        if isinstance(x, list):
+            return [OnlinePredictor._tree_np(v) for v in x]
+        return np.asarray(x)
+
+    def state_dict(self) -> dict:
+        """Everything learned online, as plain numpy/python values.
+
+        Buffers and cell keys are list-encoded (msgpack has no tuple keys);
+        the wrapped NCF serializes params/app_index/cfg_feats (its frozen
+        system/config come from the live replacement process).  The lazy
+        ``_prior`` is derived state and is recomputed on demand after load.
+        """
+        return {
+            "buffers": [
+                [app, inst, [[list(c), s, n] for c, (s, n) in buf.items()]]
+                for (app, inst), buf in self._buffers.items()
+            ],
+            "app_of_instance": dict(self._app_of_instance),
+            "dirty": sorted(self._dirty),
+            "surfaces": {
+                a: self._encode_surface(s) for a, s in self.surfaces.items()
+            },
+            "prediction_error": dict(self.prediction_error),
+            "last_moves": dict(self.last_moves),
+            "n_refits": int(self.n_refits),
+            "n_rejected": int(self.n_rejected),
+            "n_quarantine_dropped": int(self.n_quarantine_dropped),
+            "corrupt": dict(self._corrupt),
+            "quarantined_until": dict(self._quarantined_until),
+            "ncf": {
+                "params": self._tree_np(self.ncf.params),
+                "app_index": dict(self.ncf.app_index),
+                "cfg_feats": np.asarray(self.ncf.cfg_feats),
+            },
+        }
+
+    def load_state_dict(self, state: Mapping) -> None:
+        self._buffers = {
+            (app, inst): {
+                (float(c[0]), float(c[1])): [float(s), int(n)]
+                for c, s, n in cells
+            }
+            for app, inst, cells in state["buffers"]
+        }
+        self._app_of_instance = dict(state["app_of_instance"])
+        self._dirty = set(state["dirty"])
+        self.surfaces = {
+            a: self._decode_surface(d) for a, d in state["surfaces"].items()
+        }
+        self.prediction_error = dict(state["prediction_error"])
+        self.last_moves = dict(state["last_moves"])
+        self.n_refits = int(state["n_refits"])
+        self.n_rejected = int(state["n_rejected"])
+        self.n_quarantine_dropped = int(state["n_quarantine_dropped"])
+        self._corrupt = {k: int(v) for k, v in state["corrupt"].items()}
+        self._quarantined_until = {
+            k: int(v) for k, v in state["quarantined_until"].items()
+        }
+        self.ncf = NCFPredictor(
+            system=self.system,
+            cfg=self.ncf.cfg,
+            params=state["ncf"]["params"],
+            app_index=dict(state["ncf"]["app_index"]),
+            cfg_feats=np.asarray(state["ncf"]["cfg_feats"]),
+        )
+        self._prior = None
+
+    def wipe(self) -> None:
+        """Simulate a process crash: everything learned online is gone;
+        only construction-time artifacts (the offline-trained NCF and the
+        offline-seeded surfaces — both on disk in a real deployment)
+        survive."""
+        self.ncf = self._initial_ncf
+        self._buffers = {}
+        self._app_of_instance = {}
+        self._dirty = set()
+        self.surfaces = dict(self._seeded)
+        self.prediction_error = {}
+        self.last_moves = {}
+        self.n_refits = 0
+        self.n_rejected = 0
+        self.n_quarantine_dropped = 0
+        self._corrupt = {}
+        self._quarantined_until = {}
+        self._prior = None

@@ -188,6 +188,9 @@ class Scenario:
     #: optional grid CO2-intensity signal (gCO2eq/kWh) — the receding-
     #: horizon allocator's preferred weight feed; normalized provider
     carbon: object = None
+    #: fault-injection events (repro.cluster.faults) — telemetry /
+    #: actuation / controller faults the engine resolves per round
+    faults: tuple = ()
 
     def __post_init__(self):
         # normalize every signal field to a provider exactly once;
@@ -318,6 +321,26 @@ class Scenario:
         ``cap`` watts from ``round`` on."""
         return self.with_event(
             DomainCapChange(round=round, domain=domain, cap=cap)
+        )
+
+    def with_faults(self, faults: Sequence) -> "Scenario":
+        """Attach fault-injection events (``repro.cluster.faults``):
+        telemetry drops/delays/corruption/stale repeats, actuation
+        NACK/partial/delayed application, controller crashes.  Validated
+        at build time; the engine resolves them per round (DESIGN.md §18)."""
+        from repro.cluster import faults as faults_mod
+
+        faults = tuple(faults)
+        faults_mod.validate_faults(faults, self.n_rounds)
+        return dataclasses.replace(self, faults=self.faults + faults)
+
+    def with_fault_storm(self, seed: int = 0, **rates) -> "Scenario":
+        """Attach a seeded randomized fault storm (see
+        :func:`repro.cluster.faults.fault_storm` for the rate kwargs)."""
+        from repro.cluster import faults as faults_mod
+
+        return self.with_faults(
+            faults_mod.fault_storm(self.n_rounds, seed, **rates)
         )
 
     def with_budget_provider(self, provider) -> "Scenario":

@@ -445,6 +445,17 @@ class RoundRecord:
     #: per-domain draw / cap watts this round (topology sims only)
     domain_draw: dict | None = None
     domain_caps: dict | None = None
+    #: PowerGuard columns (fault-injected runs, DESIGN.md §18): worst
+    #: pre-derate cap excursion in watts, total watts the emergency derate
+    #: clawed back, and the domains that excursed this round
+    overdraw_w: float = 0.0
+    derate_w: float = 0.0
+    excursion_domains: tuple = ()
+    #: receivers whose applied caps deviated from the command (NACK /
+    #: partial / delayed actuation, or a PowerGuard derate)
+    nacked: tuple = ()
+    #: telemetry fault kinds applied to this round's batch
+    telemetry_faults: tuple = ()
 
     @property
     def avg_improvement(self) -> float:
@@ -545,6 +556,14 @@ class ClusterSim:
         #: per-domain draw/cap observed by the latest topology round
         self.last_domain_draw: dict[str, float] | None = None
         self.last_domain_caps: dict[str, float] | None = None
+        #: actuator registers (fault-injected runs): name -> (c, g) caps
+        #: physically applied last round (absent = at table baseline), and
+        #: name -> command queued by a one-round delayed application
+        self._applied_caps: dict[str, tuple[float, float]] = {}
+        self._pending_cmds: dict[str, tuple[float, float]] = {}
+        #: ActuationReport / PowerGuard stats of the latest faulted round
+        self.last_actuation: object | None = None
+        self.last_guard: dict | None = None
         if topology is not None:
             self.attach_topology(topology)
 
@@ -874,7 +893,14 @@ class ClusterSim:
                     self.topology.index[event.domain], event.round, event.cap
                 )
             else:
-                raise TypeError(f"unknown event {event!r}")
+                known = ", ".join(
+                    c.__name__ for c in scenario_mod.Event.__args__
+                )
+                raise TypeError(
+                    f"unknown event type {type(event).__name__!r}: {event!r} "
+                    f"(expected one of: {known}; fault events attach via "
+                    f"Scenario.with_faults, not the event timeline)"
+                )
         rows = (
             np.unique(np.concatenate(dirty))
             if dirty
@@ -1301,6 +1327,151 @@ class ClusterSim:
                     f"(allocated {spend[i]:.3f} W > {extra[i]:.3f} W headroom)"
                 )
 
+    def _actuate_and_guard(
+        self,
+        recv_rows: np.ndarray,
+        names: Sequence[str],
+        base: np.ndarray,
+        new: np.ndarray,
+        budget: float,
+        round_index: int,
+        headroom,
+        injector,
+    ):
+        """Resolve actuation faults, then run the PowerGuard watchdog.
+
+        **Actuation** replays this round's commanded caps through the
+        per-receiver actuator registers: a NACKed receiver keeps its
+        previously applied caps, a partial application moves only a
+        fraction of the way from them, a delayed command lands *next*
+        round (displacing that round's own command).  **PowerGuard** is
+        the firmware-level safety net below the control-plane RPC channel:
+        it checks the *applied* (post-fault) per-domain draw against the
+        topology caps — and the cluster total against the round budget —
+        and claws any overdraw back with the proportional emergency
+        derate of ``PowerTopology.derate_factors``.  The derate lands
+        within the same round, so a stuck actuator causes at most a
+        sub-round excursion; registers settle on the post-derate caps, so
+        the stuck state itself is safe from the next round on (DESIGN.md
+        §18).
+
+        Returns ``(applied, report, guard)``: the settled [n, 2] caps that
+        measurement (and therefore telemetry) sees, the
+        :class:`~repro.cluster.faults.ActuationReport` for the controller,
+        and the PowerGuard stats dict (overdraw/derate/excursions).
+        """
+        from repro.cluster import faults as faults_mod
+
+        t = self.table
+        node_ids = t.node_ids[recv_rows]
+        applied = new.copy()
+        plan = injector.actuation_plan(round_index, list(names), node_ids)
+        pend = self._pending_cmds
+        for i, nm in enumerate(names):
+            reg = self._applied_caps.get(nm)
+            prev = np.asarray(reg, dtype=np.float64) if reg is not None else base[i]
+            cmd = new[i]
+            queued = pend.pop(nm, None)
+            if queued is not None:
+                # last round's delayed command lands now, displacing this
+                # round's own command for this receiver
+                cmd = np.asarray(queued, dtype=np.float64)
+            kind, param = plan.get(nm, (None, 0.0))
+            if kind == "nack":
+                applied[i] = prev
+            elif kind == "partial":
+                applied[i] = prev + param * (cmd - prev)
+            elif kind == "delay":
+                pend[nm] = (float(new[i, 0]), float(new[i, 1]))
+                applied[i] = prev
+            else:
+                applied[i] = cmd
+
+        # -- PowerGuard: settle the applied caps under every power cap ----
+        guard = {
+            "overdraw_w": 0.0,
+            "derate_w": 0.0,
+            "excursion_domains": (),
+        }
+        extra_node = (
+            applied.sum(axis=1) - base.sum(axis=1)
+            if len(names)
+            else np.zeros(0)
+        )
+        excursions: list[str] = []
+        worst = 0.0
+        pre_total = float(extra_node.sum()) if len(names) else 0.0
+        if self.topology is not None and len(names):
+            topo = self.topology
+            leaf = np.zeros(len(topo), dtype=np.float64)
+            leaf += np.bincount(
+                t.domain_id[recv_rows], weights=extra_node, minlength=len(topo)
+            )
+            spend = topo.aggregate_leaves(leaf)
+            allowed, committed, caps = headroom
+            over = spend - allowed
+            hot = np.flatnonzero(over > 1e-9)
+            if hot.size:
+                worst = float(over[hot].max())
+                excursions.extend(topo.names[int(i)] for i in hot)
+                factors = topo.derate_factors(spend, allowed)
+                f_leaf = factors[t.domain_id[recv_rows]]
+                applied = base + f_leaf[:, None] * (applied - base)
+                extra_node = applied.sum(axis=1) - base.sum(axis=1)
+        if len(names):
+            tot = float(extra_node.sum())
+            if tot > budget + 1e-9:
+                worst = max(worst, tot - budget)
+                if not excursions:
+                    excursions.append("__budget__")
+                scale = budget / tot if tot > 0 else 0.0
+                applied = base + scale * (applied - base)
+                extra_node = applied.sum(axis=1) - base.sum(axis=1)
+            guard["derate_w"] = max(0.0, pre_total - float(extra_node.sum()))
+        guard["overdraw_w"] = worst
+        guard["excursion_domains"] = tuple(excursions)
+        if self.topology is not None and len(names):
+            # settled per-domain draw overwrites the commanded accounting
+            topo = self.topology
+            leaf = np.zeros(len(topo), dtype=np.float64)
+            leaf += np.bincount(
+                t.domain_id[recv_rows], weights=extra_node, minlength=len(topo)
+            )
+            spend = topo.aggregate_leaves(leaf)
+            _, committed, caps = headroom
+            self.last_domain_draw = dict(
+                zip(topo.names, (committed + spend).tolist())
+            )
+
+        # -- settle registers + report ------------------------------------
+        acked: list[str] = []
+        nacked: list[str] = []
+        applied_map: dict[str, tuple[float, float]] = {}
+        for i, nm in enumerate(names):
+            a = (float(applied[i, 0]), float(applied[i, 1]))
+            self._applied_caps[nm] = a
+            if (
+                abs(a[0] - new[i, 0]) <= 1e-9
+                and abs(a[1] - new[i, 1]) <= 1e-9
+            ):
+                acked.append(nm)
+            else:
+                nacked.append(nm)
+                applied_map[nm] = a
+        # non-receivers revert to baseline caps: drop their registers so a
+        # later receiver round starts from the table baseline again
+        cur = set(names)
+        for nm in [k for k in self._applied_caps if k not in cur]:
+            del self._applied_caps[nm]
+            self._pending_cmds.pop(nm, None)
+        report = faults_mod.ActuationReport(
+            round=round_index,
+            acked=tuple(acked),
+            nacked=tuple(nacked),
+            applied=applied_map,
+        )
+        return applied, report, guard
+
     def run_round(
         self,
         controller,
@@ -1311,6 +1482,7 @@ class ClusterSim:
         round_index: int = 0,
         use_loop_measurement: bool = False,
         _recv_rows: np.ndarray | None = None,
+        _fault_injector=None,
     ) -> EmulationResult:
         """One redistribution round under a stateful controller.
 
@@ -1404,6 +1576,24 @@ class ClusterSim:
             )
         prof["conserve_s"] = _time.perf_counter() - tp
 
+        # -- actuation + PowerGuard (fault-injected runs, DESIGN.md §18) --
+        tp = _time.perf_counter()
+        self.last_actuation = None
+        self.last_guard = None
+        applied: np.ndarray | None = None
+        if _fault_injector is not None and names is not None:
+            cmd = self._alloc_caps_array(alloc, names)
+            applied, report, guard = self._actuate_and_guard(
+                recv_rows, names, base, cmd, b, round_index,
+                headroom, _fault_injector,
+            )
+            self.last_actuation = report
+            self.last_guard = guard
+            notify = getattr(controller, "notify_actuation", None)
+            if notify is not None:
+                notify(report)
+        prof["actuate_s"] = _time.perf_counter() - tp
+
         tp = _time.perf_counter()
         rng = self.round_rng(controller.policy, round_index)
         if use_loop_measurement:
@@ -1411,7 +1601,11 @@ class ClusterSim:
             improvements = self.measure_improvements_loop(recv_nodes, alloc, rng)
             self.last_telemetry = ()
         else:
-            new = self._alloc_caps_array(alloc, names)
+            new = (
+                applied
+                if applied is not None
+                else self._alloc_caps_array(alloc, names)
+            )
             t0, t1, imp = self._measure_rows(recv_rows, base, new, rng)
             improvements = dict(zip(names, imp.tolist()))
             self.last_telemetry = TelemetryBatch(
@@ -1463,6 +1657,15 @@ class ClusterSim:
                 raise ValueError(
                     "scenario topology differs from the sim's attached one"
                 )
+        injector = None
+        if getattr(scenario, "faults", ()):
+            from repro.cluster import faults as faults_mod
+
+            injector = faults_mod.FaultInjector(scenario.faults)
+            # fresh actuator state per run: registers model the physical
+            # caps of *this* run's actuation channel
+            self._applied_caps.clear()
+            self._pending_cmds.clear()
         records: list[RoundRecord] = []
         # receding-horizon controllers get a per-round budget outlook: the
         # provider-backed cap forecast plus the CO2 (or price) weight
@@ -1472,6 +1675,11 @@ class ClusterSim:
             controller, "set_budget_outlook"
         )
         for r in range(scenario.n_rounds):
+            if injector is not None:
+                # controller crashes fire at round start, before the round's
+                # events and solve — the replacement process (restored or
+                # cold) must handle everything the round throws at it
+                injector.maybe_crash(r, controller)
             events = scenario.events_at(r)
             touched = self.apply_events(events) if events else []
             if touched:
@@ -1504,7 +1712,14 @@ class ClusterSim:
                 policy_surfaces=seen,
                 round_index=r,
                 _recv_rows=recv_rows,
+                _fault_injector=injector,
             )
+            if injector is not None:
+                delivered, tkinds = injector.deliver(r, self.last_telemetry)
+            else:
+                delivered, tkinds = [self.last_telemetry], ()
+            guard = self.last_guard or {}
+            report = self.last_actuation
             records.append(
                 RoundRecord(
                     round=r,
@@ -1517,7 +1732,17 @@ class ClusterSim:
                     telemetry=self.last_telemetry,
                     domain_draw=self.last_domain_draw,
                     domain_caps=self.last_domain_caps,
+                    overdraw_w=float(guard.get("overdraw_w", 0.0)),
+                    derate_w=float(guard.get("derate_w", 0.0)),
+                    excursion_domains=tuple(
+                        guard.get("excursion_domains", ())
+                    ),
+                    nacked=tuple(report.nacked) if report is not None else (),
+                    telemetry_faults=tkinds,
                 )
             )
-            controller.ingest_telemetry(self.last_telemetry)
+            for tb in delivered:
+                controller.ingest_telemetry(tb)
+            if injector is not None:
+                injector.end_round(r, controller)
         return SimResult(policy=controller.policy, records=records)

@@ -111,6 +111,16 @@ class LRUCache(MutableMapping):
     def clear(self):
         self._d.clear()
 
+    def resize(self, maxsize: int) -> None:
+        """Shrink or grow the bound in place, evicting coldest entries as
+        needed.  In-place matters: solver state (e.g. ``HierState``) holds
+        references to the same cache objects, so resizing must not rebind."""
+        if maxsize < 1:
+            raise ValueError("maxsize must be >= 1")
+        self.maxsize = maxsize
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
 
 @dataclasses.dataclass
 class MCKPSolution:

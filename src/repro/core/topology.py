@@ -241,6 +241,32 @@ class PowerTopology:
             out[self.parent[i]] += out[i]
         return out
 
+    def derate_factors(
+        self, spend: np.ndarray, allowed: np.ndarray
+    ) -> np.ndarray:
+        """Per-domain effective derate factor clawing spend back under caps.
+
+        ``spend``/``allowed`` are preorder-indexed per-domain totals (spend
+        already aggregated up the tree).  A domain's own factor is
+        ``min(1, allowed/spend)``; the *effective* factor also honours every
+        ancestor (a rack inside an over-drawn room must derate too), so one
+        preorder pass takes ``min(own, parent_effective)`` — parents precede
+        children in preorder.  Scaling each leaf's spend by its effective
+        factor guarantees every domain's total lands at or under ``allowed``
+        (spend aggregates linearly, and factors only shrink down the tree).
+        """
+        spend = np.asarray(spend, dtype=np.float64)
+        allowed = np.asarray(allowed, dtype=np.float64)
+        with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+            own = np.where(
+                spend > allowed, np.divide(allowed, np.maximum(spend, 1e-300)), 1.0
+            )
+        own = np.clip(np.where(np.isfinite(own), own, 1.0), 0.0, 1.0)
+        eff = own.copy()
+        for i in range(1, len(self.domains)):
+            eff[i] = min(eff[i], eff[self.parent[i]])
+        return eff
+
     # -- builders ------------------------------------------------------------
 
     @staticmethod

@@ -146,6 +146,14 @@ class Allocation:
         return tot
 
 
+#: canonical set of ``FusedRoundStats.fallback_reason`` values ("" = no
+#: fallback).  Docs (DESIGN.md §17) and the emitting code in ``core/mckp.py``
+#: are drift-guarded against this set in ``tests/test_faults.py``.
+FUSED_FALLBACK_REASONS = frozenset(
+    {"off_lattice", "grid_overflow", "no_feasible_root", "empty"}
+)
+
+
 @dataclasses.dataclass(frozen=True)
 class FusedRoundStats:
     """Counters of the device-resident fused round path (DESIGN.md §14/§17).

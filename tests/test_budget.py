@@ -224,6 +224,29 @@ class TestScenarioIntegration:
             new.budget_at(r) for r in range(6)
         ]
 
+    def test_with_budget_engine_parity_bit_for_bit(self, suite):
+        """The deprecation shim must be a pure alias: a full engine run
+        under ``with_budget(trace)`` equals ``with_budget_provider``."""
+        system, apps, surfs = suite
+        trace = [900.0, 600.0, 1200.0, 750.0]
+
+        def _run(scen):
+            sim = ClusterSim.build(system, apps, surfs, n_nodes=16, seed=2)
+            return sim.run(scen, make_controller("ecoshift", system))
+
+        with pytest.warns(DeprecationWarning):
+            old = _run(sc.Scenario(n_rounds=4).with_budget(trace))
+        new = _run(
+            sc.Scenario(n_rounds=4).with_budget_provider(
+                bm.TraceReplayProvider(trace)
+            )
+        )
+        for a, b in zip(old.records, new.records):
+            assert dict(a.result.allocation.caps) == dict(
+                b.result.allocation.caps
+            )
+            assert a.result.improvements == b.result.improvements
+
     def test_with_budget_provider_no_warning(self):
         with warnings.catch_warnings():
             warnings.simplefilter("error")

@@ -1,0 +1,694 @@
+"""Fault-injection + self-healing tests (DESIGN.md §18).
+
+Certifies the robustness contracts:
+ * fault events validate at build time (``Scenario.with_faults``) and
+   storms are bit-reproducible from their seed;
+ * actuation faults have exact semantics — NACK keeps the previously
+   applied caps, partial application interpolates from them, delayed
+   commands land next round displacing that round's own command;
+ * the PowerGuard watchdog keeps the *settled* draw under every domain
+   cap and the round budget in the same round the excursion appears
+   (a stuck actuator causes at most a sub-round excursion);
+ * NACKed receivers are pinned at their last-confirmed caps with
+   exponential backoff, and the freed headroom is redistributed;
+ * ``Controller.snapshot()/restore()`` (and the msgpack file round-trip)
+   is bit-for-bit: a crash-restored controller replays the uninterrupted
+   run exactly; a cold crash (no restore) reconverges in K = 0 rounds on
+   a clean channel because warm caches are pure accelerators;
+ * bounded warm caches (``ControllerConfig.max_*``) never change results;
+ * the ``fallback_reason`` enum is drift-guarded across code and docs.
+"""
+
+import re
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterSim, PowerTopology, Scenario
+from repro.cluster.controller import (
+    ControllerConfig,
+    load_snapshot,
+    make_controller,
+    save_snapshot,
+)
+from repro.cluster.faults import (
+    ActuationDelay,
+    ActuationNack,
+    ActuationPartial,
+    ActuationReport,
+    ControllerCrash,
+    FaultInjector,
+    TelemetryCorrupt,
+    TelemetryDelay,
+    TelemetryDrop,
+    TelemetryStale,
+    corrupt_batch,
+    fault_storm,
+    validate_faults,
+)
+from repro.cluster.predictor import TelemetryBatch
+from repro.core import surfaces, types
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def suite():
+    system = types.SYSTEM_1
+    apps, surfs = surfaces.build_paper_suite(system)
+    return system, apps, surfs
+
+
+def _sim(suite, n_nodes=24, seed=3):
+    system, apps, surfs = suite
+    return ClusterSim.build(system, apps, surfs, n_nodes=n_nodes, seed=seed)
+
+
+def _applied_caps(record):
+    """name -> settled (cpu, gpu) caps the measurement actually saw."""
+    return {
+        t.instance: tuple(np.asarray(t.allocated_caps).tolist())
+        for t in record.telemetry
+    }
+
+
+def _caps_equal(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        assert tuple(a[k]) == tuple(b[k]), k
+
+
+# ---------------------------------------------------------------------------
+# Build-time validation + storm determinism
+# ---------------------------------------------------------------------------
+
+
+class TestValidation:
+    def test_unknown_event_type_fails_fast(self):
+        with pytest.raises(TypeError, match="object"):
+            validate_faults([object()], 4)
+
+    def test_scenario_event_is_not_a_fault(self, suite):
+        # a scenario Event on the fault channel names the offender too
+        from repro.cluster.scenario import NodeFailure
+
+        with pytest.raises(TypeError, match="NodeFailure"):
+            Scenario.constant(4).with_faults([NodeFailure(round=1, node_ids=(0,))])
+
+    def test_round_range(self):
+        with pytest.raises(ValueError, match="outside"):
+            validate_faults([TelemetryDrop(round=9)], 4)
+
+    def test_bad_corrupt_mode_and_fraction(self):
+        with pytest.raises(ValueError, match="mode"):
+            validate_faults([TelemetryCorrupt(round=0, mode="zap")], 4)
+        with pytest.raises(ValueError, match="fraction"):
+            validate_faults([TelemetryCorrupt(round=0, fraction=0.0)], 4)
+
+    def test_actuation_must_target_something(self):
+        with pytest.raises(ValueError, match="targets"):
+            validate_faults([ActuationNack(round=0)], 4)
+
+    def test_with_faults_composes(self):
+        a = TelemetryDrop(round=1)
+        b = ActuationNack(round=2, fraction=0.5)
+        sc = Scenario.constant(4).with_faults([a]).with_faults([b])
+        assert sc.faults == (a, b)
+
+    def test_storm_is_seed_deterministic(self):
+        kw = dict(
+            telemetry_drop=0.2, telemetry_corrupt=0.4, telemetry_stale=0.2,
+            actuation_nack=0.4, actuation_partial=0.3, actuation_delay=0.3,
+            crash_rounds=(5,),
+        )
+        assert fault_storm(20, 7, **kw) == fault_storm(20, 7, **kw)
+        assert fault_storm(20, 7, **kw) != fault_storm(20, 8, **kw)
+
+    def test_storm_events_validate(self):
+        sc = Scenario.constant(16).with_fault_storm(
+            seed=0, telemetry_corrupt=0.5, actuation_nack=0.5,
+            crash_rounds=(8,),
+        )
+        assert any(isinstance(e, ControllerCrash) for e in sc.faults)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry channel: corruption + delivery routing
+# ---------------------------------------------------------------------------
+
+
+def _tiny_batch(round=0, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    strings = tuple(f"i{j}" for j in range(n)) + ("app",)
+    t0 = rng.uniform(50.0, 80.0, n)
+    t1 = t0 * rng.uniform(0.6, 0.9, n)
+    return TelemetryBatch(
+        round=round,
+        inst_gids=np.arange(n),
+        app_gids=np.full(n, n),
+        strings=strings,
+        baseline_caps=np.full((n, 2), 100.0),
+        allocated_caps=np.full((n, 2), 120.0),
+        t_baseline=t0,
+        t_allocated=t1,
+        improvement=(t0 - t1) / t0,
+    )
+
+
+class TestTelemetryFaults:
+    @pytest.mark.parametrize("mode", ["nan", "inf", "outlier", "negative"])
+    def test_corrupt_modes(self, mode):
+        batch = _tiny_batch()
+        orig_t0 = batch.t_baseline.copy()
+        orig_t1 = batch.t_allocated.copy()
+        out = corrupt_batch(
+            batch, TelemetryCorrupt(round=0, fraction=0.5, mode=mode, seed=1)
+        )
+        # copy-on-write: the true measurement arrays are never mutated
+        assert np.array_equal(batch.t_baseline, orig_t0)
+        assert np.array_equal(batch.t_allocated, orig_t1)
+        bad = ~(
+            np.isfinite(out.t_baseline)
+            & np.isfinite(out.t_allocated)
+            & (out.t_allocated > 0)
+            & (out.t_allocated < out.t_baseline * 1e2)
+        )
+        assert bad.sum() == 4  # fraction=0.5 of 8
+        # corruption is internally consistent: improvement recomputed
+        ok = ~bad
+        assert np.array_equal(
+            out.improvement[ok],
+            (out.t_baseline[ok] - out.t_allocated[ok]) / out.t_baseline[ok],
+        )
+
+    def test_drop_and_delay_routing(self):
+        inj = FaultInjector(
+            [TelemetryDrop(round=0), TelemetryDelay(round=1, rounds=1)]
+        )
+        b0, b1, b2 = (_tiny_batch(round=r) for r in range(3))
+        out, kinds = inj.deliver(0, b0)
+        assert out == [] and kinds == ("drop",)
+        out, kinds = inj.deliver(1, b1)
+        assert out == [] and kinds == ("delay",)
+        out, kinds = inj.deliver(2, b2)
+        assert out == [b1, b2] and kinds == ("delayed_delivery",)
+
+    def test_stale_repeat_displaces_current(self):
+        inj = FaultInjector([TelemetryStale(round=2, age=1)])
+        b0, b1, b2 = (_tiny_batch(round=r) for r in range(3))
+        assert inj.deliver(0, b0) == ([b0], ())
+        assert inj.deliver(1, b1) == ([b1], ())
+        out, kinds = inj.deliver(2, b2)
+        assert out == [b1] and kinds == ("stale",)
+
+
+# ---------------------------------------------------------------------------
+# Actuation channel semantics (pure controller: no pinning feedback)
+# ---------------------------------------------------------------------------
+
+
+class TestActuationSemantics:
+    def test_nack_keeps_previously_applied_caps(self, suite):
+        sim = _sim(suite)
+        sc = Scenario(2, budget=[700.0, 1500.0]).with_faults(
+            [ActuationNack(round=1, fraction=1.0, seed=1)]
+        )
+        res = sim.run(sc, make_controller("dps", suite[0]))
+        a0, a1 = (_applied_caps(r) for r in res.records)
+        _caps_equal(a1, a0)  # every receiver kept round 0's applied caps
+        assert set(res.records[1].nacked)  # and the deviation was reported
+        # the command itself did move (budget doubled)
+        cmd1 = res.records[1].result.allocation.caps
+        assert any(tuple(cmd1[k]) != a1[k] for k in a1)
+
+    def test_partial_interpolates_from_applied(self, suite):
+        sim = _sim(suite)
+        frac = 0.25
+        sc = Scenario(2, budget=[700.0, 1500.0]).with_faults(
+            [ActuationPartial(round=1, fraction=1.0, applied_fraction=frac)]
+        )
+        res = sim.run(sc, make_controller("dps", suite[0]))
+        a0, a1 = (_applied_caps(r) for r in res.records)
+        cmd1 = res.records[1].result.allocation.caps
+        for k, prev in a0.items():
+            want = tuple(
+                p + frac * (c - p) for p, c in zip(prev, cmd1[k])
+            )
+            assert a1[k] == pytest.approx(want, abs=1e-9)
+
+    def test_delay_lands_next_round_displacing_its_command(self, suite):
+        sim = _sim(suite)
+        sc = Scenario(3, budget=[700.0, 1000.0, 1500.0]).with_faults(
+            [ActuationDelay(round=1, fraction=1.0)]
+        )
+        res = sim.run(sc, make_controller("dps", suite[0]))
+        a0, a1, a2 = (_applied_caps(r) for r in res.records)
+        cmd1 = res.records[1].result.allocation.caps
+        _caps_equal(a1, a0)  # nothing landed in the delayed round
+        # the delayed round-1 command displaced round 2's own command
+        for k in a2:
+            assert a2[k] == pytest.approx(tuple(cmd1[k]), abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# PowerGuard watchdog
+# ---------------------------------------------------------------------------
+
+
+BUDGETS = [
+    1400.0, 700.0, 1200.0, 500.0, 1400.0, 900.0,
+    1300.0, 550.0, 1400.0, 650.0, 1200.0, 1400.0,
+]
+
+
+class TestPowerGuard:
+    def test_budget_never_exceeded_by_settled_draw(self, suite):
+        sim = _sim(suite)
+        sc = Scenario(12, budget=BUDGETS).with_fault_storm(
+            seed=5, telemetry_corrupt=0.4, actuation_nack=0.5,
+            actuation_partial=0.3, node_fraction=0.5,
+        )
+        res = sim.run(sc, make_controller("dps", suite[0]))
+        saw_excursion = False
+        for rec in res.records:
+            extra = sum(
+                float(np.sum(t.allocated_caps) - np.sum(t.baseline_caps))
+                for t in rec.telemetry
+            )
+            budget = rec.result.budget
+            assert extra <= budget + 1e-6, (rec.round, extra, budget)
+            if rec.overdraw_w > 0:
+                saw_excursion = True
+                assert rec.derate_w > 0  # clawed back in the same round
+        assert saw_excursion  # a shrinking budget under NACKs must trip it
+
+    def test_domain_caps_hold_under_storm(self, suite):
+        system, apps, surfs = suite
+        sim = ClusterSim.build(system, apps, surfs, n_nodes=24, seed=3)
+        committed = float(sim.table.caps.sum())
+        topo = PowerTopology.uniform_racks(
+            24, 3, rack_cap=committed / 3 + 450.0
+        )
+        sc = (
+            Scenario(12, budget=BUDGETS)
+            .with_topology(topo)
+            .with_fault_storm(
+                seed=9, telemetry_corrupt=0.3, actuation_nack=0.5,
+                actuation_partial=0.3, actuation_delay=0.3,
+                telemetry_drop=0.1, telemetry_stale=0.2, node_fraction=0.4,
+            )
+        )
+        res = sim.run(sc, make_controller("ecoshift_hier", system))
+        assert any(rec.nacked for rec in res.records)
+        for rec in res.records:
+            for d, w in rec.domain_draw.items():
+                assert w <= rec.domain_caps[d] + 1e-6, (rec.round, d)
+
+    def test_forced_domain_excursion_settles_same_round(self, suite):
+        system, apps, surfs = suite
+        sim = ClusterSim.build(system, apps, surfs, n_nodes=24, seed=3)
+        topo = PowerTopology.uniform_racks(24, 3, rack_cap=1e6)
+        # per-rack committed baseline draw (uniform node baselines)
+        committed0 = float(sim.table.caps.sum()) / 3
+        # round 2: rack0's cap collapses to committed + 50 W of headroom
+        # while every node NACKs and keeps its round-1 caps -> the stuck
+        # draw exceeds the new cap and PowerGuard must claw it back now
+        sc = (
+            Scenario(4, budget=900.0)
+            .with_topology(topo)
+            .with_domain_cap(2, "rack0", committed0 + 50.0)
+            .with_faults([ActuationNack(round=2, fraction=1.0)])
+        )
+        res = sim.run(sc, make_controller("ecoshift_hier", system))
+        rec = res.records[2]
+        assert "rack0" in rec.excursion_domains
+        assert rec.overdraw_w > 0
+        for r in res.records[2:]:
+            for d, w in r.domain_draw.items():
+                assert w <= r.domain_caps[d] + 1e-6, (r.round, d)
+
+
+# ---------------------------------------------------------------------------
+# NACK pinning + backoff + headroom redistribution
+# ---------------------------------------------------------------------------
+
+
+class TestPinning:
+    def test_nacked_receiver_pinned_at_confirmed_caps(self, suite):
+        system, _, _ = suite
+        sim = _sim(suite)
+        budgets = [1400.0, 700.0, 700.0, 700.0]
+        sc = Scenario(4, budget=budgets).with_faults(
+            [ActuationNack(round=1, fraction=0.3, seed=2)]
+        )
+        ctrl = make_controller("ecoshift", system)
+        res = sim.run(sc, ctrl)
+        nacked = res.records[1].nacked
+        assert nacked
+        a1 = _applied_caps(res.records[1])
+        cmd2 = res.records[2].result.allocation.caps
+        # round 2 re-commands the stuck receivers at their confirmed caps
+        for nm in nacked:
+            assert cmd2[nm] == pytest.approx(a1[nm], abs=1e-9)
+        # ... while the freed headroom still goes to work: the commanded
+        # allocation spends (close to) the full budget
+        assert res.records[2].result.allocation.spent >= 700.0 * 0.95
+
+    def test_ack_clears_pin_after_backoff(self, suite):
+        system, _, _ = suite
+        sim = _sim(suite)
+        budgets = [1400.0, 700.0, 700.0, 700.0, 700.0]
+        faulted = Scenario(5, budget=budgets).with_faults(
+            [ActuationNack(round=1, fraction=0.3, seed=2)]
+        )
+        clean = Scenario(5, budget=budgets)
+        res_f = sim.run(faulted, make_controller("ecoshift", system))
+        res_c = sim.run(clean, make_controller("ecoshift", system))
+        # one NACK backs off for one round; after the round-2 ACK the pin
+        # clears and round 3 on is identical to the never-faulted run
+        for rf, rc in zip(res_f.records[3:], res_c.records[3:]):
+            _caps_equal(
+                rf.result.allocation.caps, rc.result.allocation.caps
+            )
+
+    def test_retry_exhaustion_pins_permanently(self, suite):
+        system, _, _ = suite
+        ctrl = make_controller("ecoshift", system)
+        caps = {"stuck": (150.0, 200.0)}
+        for r in range(ctrl.NACK_MAX_RETRIES):
+            ctrl.notify_actuation(
+                ActuationReport(
+                    round=r, acked=(), nacked=("stuck",), applied=caps
+                )
+            )
+        pin = ctrl._pins["stuck"]
+        assert pin["fails"] == ctrl.NACK_MAX_RETRIES
+        # an ACK long after the horizon still cannot clear it
+        ctrl.notify_actuation(
+            ActuationReport(round=10_000, acked=("stuck",), nacked=(), applied={})
+        )
+        assert "stuck" in ctrl._pins
+
+    def test_invalidate_drops_pins(self, suite):
+        system, _, _ = suite
+        ctrl = make_controller("ecoshift", system)
+        ctrl.notify_actuation(
+            ActuationReport(
+                round=0, acked=(), nacked=("a", "b"),
+                applied={"a": (100.0, 100.0), "b": (100.0, 100.0)},
+            )
+        )
+        ctrl.invalidate(["a"])
+        assert "a" not in ctrl._pins and "b" in ctrl._pins
+        ctrl.invalidate(None)
+        assert not ctrl._pins
+
+
+# ---------------------------------------------------------------------------
+# Crash / snapshot / restore
+# ---------------------------------------------------------------------------
+
+
+class TestCrashRestore:
+    @pytest.mark.parametrize("policy", ["ecoshift", "ecoshift_hier"])
+    def test_restored_run_is_bit_for_bit(self, suite, policy):
+        system, apps, surfs = suite
+        budgets = BUDGETS[:8]
+        topo = (
+            PowerTopology.uniform_racks(24, 3, rack_cap=1e6)
+            if policy == "ecoshift_hier"
+            else None
+        )
+
+        def _run(crash):
+            sim = ClusterSim.build(system, apps, surfs, n_nodes=24, seed=3)
+            sc = Scenario(8, budget=budgets)
+            if topo is not None:
+                sc = sc.with_topology(topo)
+            if crash:
+                sc = sc.with_faults([ControllerCrash(round=4, restore=True)])
+            return sim.run(sc, make_controller(policy, system))
+
+        ref, crashed = _run(False), _run(True)
+        for a, b in zip(ref.records, crashed.records):
+            _caps_equal(a.result.allocation.caps, b.result.allocation.caps)
+            assert a.result.improvements == b.result.improvements
+
+    def test_cold_crash_reconverges_immediately_on_clean_channel(self, suite):
+        # K = 0 (DESIGN.md §18): warm caches are pure accelerators, so a
+        # non-restored crash replays the clean run exactly from the very
+        # next solve — only pins / online-learned state need the snapshot
+        system, apps, surfs = suite
+
+        def _run(crash):
+            sim = ClusterSim.build(system, apps, surfs, n_nodes=24, seed=3)
+            sc = Scenario(6, budget=BUDGETS[:6])
+            if crash:
+                sc = sc.with_faults([ControllerCrash(round=3, restore=False)])
+            return sim.run(sc, make_controller("ecoshift", system))
+
+        ref, crashed = _run(False), _run(True)
+        for a, b in zip(ref.records, crashed.records):
+            _caps_equal(a.result.allocation.caps, b.result.allocation.caps)
+
+    def test_snapshot_file_roundtrip_bit_for_bit(self, suite, tmp_path):
+        system, _, _ = suite
+        sim = _sim(suite)
+        budgets = [1400.0, 700.0, 700.0, 700.0, 700.0, 700.0]
+        ctrl = make_controller("ecoshift", system)
+        # warm the controller into a pinned state, then checkpoint it
+        for r in range(3):
+            sim.run_round(ctrl, budget=budgets[r], round_index=r)
+        ctrl.notify_actuation(
+            ActuationReport(
+                round=2, acked=(), nacked=("pinned",),
+                applied={"pinned": (140.0, 180.0)},
+            )
+        )
+        path = tmp_path / "ctrl.snap"
+        save_snapshot(path, ctrl.snapshot())
+        restored = make_controller("ecoshift", system)
+        restored.restore(load_snapshot(path))
+        assert restored._pins == ctrl._pins
+        assert restored._pin_round == ctrl._pin_round
+        for r in range(3, 6):
+            a = sim.run_round(ctrl, budget=budgets[r], round_index=r)
+            b = sim.run_round(restored, budget=budgets[r], round_index=r)
+            _caps_equal(a.allocation.caps, b.allocation.caps)
+
+    def test_snapshot_pack_format_roundtrips_arrays(self, tmp_path):
+        snap = {
+            "policy": "ecoshift",
+            "arr": np.arange(6, dtype=np.float64).reshape(2, 3),
+            "tup": (1, 2.5, "x"),
+            "intkeys": {(0.5, 1.5): [3.0, 2]},
+            "nested": {"a": np.array([1.0, np.inf, -1.0])},
+        }
+        path = tmp_path / "fmt.snap"
+        save_snapshot(path, snap)
+        out = load_snapshot(path)
+        assert out["policy"] == "ecoshift"
+        assert np.array_equal(out["arr"], snap["arr"])
+        assert out["arr"].dtype == np.float64
+        assert out["tup"] == (1, 2.5, "x")
+        assert out["intkeys"] == {(0.5, 1.5): [3.0, 2]}
+        assert np.array_equal(out["nested"]["a"], snap["nested"]["a"])
+
+    def test_restore_rejects_policy_mismatch(self, suite):
+        system, _, _ = suite
+        ctrl = make_controller("ecoshift", system)
+        with pytest.raises(ValueError, match="policy"):
+            ctrl.restore({"policy": "dps", "pins": {}, "pin_round": -1})
+
+
+# ---------------------------------------------------------------------------
+# Storm end-to-end: everything at once, invariants hold
+# ---------------------------------------------------------------------------
+
+
+class TestFaultStormEndToEnd:
+    def test_full_storm_with_crash_keeps_every_invariant(self, suite):
+        system, apps, surfs = suite
+        sim = ClusterSim.build(system, apps, surfs, n_nodes=24, seed=3)
+        committed = float(sim.table.caps.sum())
+        topo = PowerTopology.uniform_racks(
+            24, 3, rack_cap=committed / 3 + 450.0
+        )
+        sc = (
+            Scenario(14, budget=(BUDGETS + BUDGETS)[:14])
+            .with_topology(topo)
+            .with_fault_storm(
+                seed=11, telemetry_drop=0.15, telemetry_delay=0.2,
+                telemetry_corrupt=0.35, telemetry_stale=0.15,
+                actuation_nack=0.4, actuation_partial=0.25,
+                actuation_delay=0.25, node_fraction=0.35,
+                crash_rounds=(5, 10),
+            )
+        )
+        res = sim.run(sc, make_controller("ecoshift_hier", system))
+        assert res.n_rounds == 14
+        for rec in res.records:
+            for d, w in rec.domain_draw.items():
+                assert w <= rec.domain_caps[d] + 1e-6, (rec.round, d)
+            for t in rec.telemetry:
+                assert np.all(np.isfinite(np.asarray(t.allocated_caps)))
+
+
+class TestDeepTreeFusedStorm:
+    """Storms over the deep-tree + fused configurations: fused == host
+    bit-for-bit under faults, every level capped, ≤1-round excursions."""
+
+    @staticmethod
+    def _deep_topology(system, apps, surfs, n):
+        """4-level uniform_tree with binding caps: committed draw plus
+        headroom tightening toward the leaves (root unconstrained)."""
+        from repro.core.topology import PowerDomain
+
+        probe = ClusterSim.build(
+            system, apps, surfs, n_nodes=n, seed=0,
+            initial_caps=(150.0, 150.0),
+            topology=PowerTopology.uniform_tree(n, (2, 2), [1e15] * 3),
+        )
+        _, committed, _ = probe.domain_headroom(0)
+        topo0 = probe.topology
+
+        def recap(dom, depth):
+            i = topo0.index[dom.name]
+            cap = 1e18 if depth == 0 else float(committed[i]) + 500.0 / depth
+            return PowerDomain(
+                name=dom.name, cap=cap, nodes=dom.nodes,
+                children=tuple(recap(c, depth + 1) for c in dom.children),
+            )
+
+        return PowerTopology(recap(topo0.domains[0], 0), n_nodes=n)
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_fused_matches_host_under_storm(self, suite, seed):
+        system, apps, surfs = suite
+        n = 48
+        topo = self._deep_topology(system, apps, surfs, n)
+        budgets = [
+            2000.0, 900.0, 1600.0, 700.0,
+            2000.0, 1100.0, 1800.0, 800.0,
+        ]
+        scen = (
+            Scenario(len(budgets), budget=budgets)
+            .with_topology(topo)
+            .with_fault_storm(
+                seed=40 + seed, telemetry_drop=0.1, telemetry_corrupt=0.3,
+                telemetry_stale=0.1, actuation_nack=0.35,
+                actuation_partial=0.25, actuation_delay=0.2,
+                node_fraction=0.3, crash_rounds=(3,),
+            )
+        )
+        traces = {}
+        for fused in (False, True):
+            sim = ClusterSim.build(
+                system, apps, surfs, n_nodes=n, seed=0,
+                initial_caps=(150.0, 150.0), topology=topo,
+            )
+            traces[fused] = sim.run(
+                scen, make_controller("ecoshift_hier", system, fused=fused)
+            )
+        host, fus = traces[False], traces[True]
+        for a, b in zip(host.records, fus.records):
+            assert dict(a.result.allocation.caps) == dict(
+                b.result.allocation.caps
+            ), f"fused diverged from host at round {a.round}"
+        assert any(r.nacked for r in fus.records)
+        prev_over = False
+        for rec in fus.records:
+            for name, draw in rec.domain_draw.items():
+                assert draw <= rec.domain_caps[name] + 1e-6, (
+                    rec.round, name, draw, rec.domain_caps[name]
+                )
+            over = rec.overdraw_w > 0.0
+            # a pre-derate excursion is clawed back the round it appears,
+            # never carried into the next round's settled draw
+            if over:
+                assert rec.derate_w > 0.0, rec.round
+            assert not (over and prev_over), rec.round
+            prev_over = over
+
+
+# ---------------------------------------------------------------------------
+# apply_event fail-fast (satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestApplyEventsFailFast:
+    def test_unknown_event_names_the_class(self, suite):
+        sim = _sim(suite, n_nodes=8)
+        with pytest.raises(TypeError, match="object"):
+            sim.apply_events([object()])
+
+    def test_fault_event_on_timeline_points_to_with_faults(self, suite):
+        sim = _sim(suite, n_nodes=8)
+        with pytest.raises(TypeError, match="with_faults"):
+            sim.apply_events([TelemetryDrop(round=0)])
+
+
+# ---------------------------------------------------------------------------
+# Bounded warm caches (satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestCacheBounds:
+    @pytest.mark.parametrize("policy", ["ecoshift", "ecoshift_hier"])
+    def test_tiny_bounds_are_bit_for_bit(self, suite, policy):
+        system, apps, surfs = suite
+        tiny = ControllerConfig(
+            max_group_tables=1, max_agg_curves=1, max_picks=1,
+            max_plans=1, max_allocations=1, max_frontiers=1,
+        )
+        topo = (
+            PowerTopology.uniform_racks(24, 3, rack_cap=1e6)
+            if policy == "ecoshift_hier"
+            else None
+        )
+
+        def _run(cfg):
+            sim = ClusterSim.build(system, apps, surfs, n_nodes=24, seed=3)
+            sc = Scenario(6, budget=BUDGETS[:6])
+            if topo is not None:
+                sc = sc.with_topology(topo)
+            return sim.run(sc, make_controller(policy, system, config=cfg))
+
+        ref, bounded = _run(None), _run(tiny)
+        for a, b in zip(ref.records, bounded.records):
+            _caps_equal(a.result.allocation.caps, b.result.allocation.caps)
+
+    def test_resize_evicts_to_bound(self):
+        from repro.core.mckp import LRUCache
+
+        c = LRUCache(8)
+        for i in range(8):
+            c[i] = i
+        c.resize(2)
+        assert len(c) == 2 and c.maxsize == 2
+        assert c.get(7) == 7  # hottest entries survive
+        with pytest.raises(ValueError):
+            c.resize(0)
+
+
+# ---------------------------------------------------------------------------
+# Docs drift guard (satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestDocsDrift:
+    def test_fallback_reason_enum_matches_code_and_docs(self):
+        from repro.core import mckp
+
+        src = Path(mckp.__file__).read_text()
+        emitted = set(
+            re.findall(r'stats\["fallback_reason"\] = "(\w+)"', src)
+        )
+        assert emitted == types.FUSED_FALLBACK_REASONS
+        doc = types.FusedRoundStats.__doc__ or ""
+        field_doc = Path(types.__file__).read_text()
+        design = (REPO / "DESIGN.md").read_text()
+        for reason in types.FUSED_FALLBACK_REASONS:
+            assert f'"{reason}"' in field_doc, reason
+            assert f"`{reason}`" in design, reason

@@ -257,3 +257,153 @@ class TestColdStart:
         trace = sim.run(scen, "dps")
         assert trace.records[1].n_alive == 7
         assert sim.surfaces["novel.app"] is novel_surface
+
+
+# ---------------------------------------------------------------------------
+# Robust ingest (DESIGN.md §18): reject garbage, quarantine liars
+# ---------------------------------------------------------------------------
+
+
+def _rec(instance, app, t0, t1, round=0):
+    from repro.cluster import TelemetryRecord
+
+    return TelemetryRecord(
+        round=round,
+        instance=instance,
+        base_app=app,
+        baseline_caps=(150.0, 250.0),
+        allocated_caps=(165.0, 300.0),
+        t_baseline=t0,
+        t_allocated=t1,
+        improvement=(t0 - t1) / t0 if t0 else 0.0,
+    )
+
+
+class TestRobustIngest:
+    def _pred(self, trained, **kw):
+        _, _, _, _, alloc = trained
+        pred = OnlinePredictor(alloc.predictor, OnlinePredictorConfig(**kw))
+        pred.seed_surfaces(alloc.predicted)
+        return pred
+
+    def test_garbage_records_rejected_never_buffered(self, trained):
+        _, _, _, train, _ = trained
+        app = train[0].name
+        pred = self._pred(trained)
+        bad = [
+            _rec("x#0", app, np.nan, 50.0),
+            _rec("x#0", app, 60.0, np.inf),
+            _rec("x#0", app, 60.0, -5.0),
+            _rec("x#0", app, 0.0, 50.0),
+            _rec("x#0", app, 60.0, 60.0 * 1e3),  # impossible slowdown
+            _rec("x#0", app, 60.0 * 1e3, 60.0),  # impossible speedup
+        ]
+        pred.observe(bad)
+        # quarantine_after=3 (default): three rejections, then the meter
+        # is quarantined and the rest are dropped unexamined
+        assert pred.n_rejected == 3
+        assert pred.n_quarantine_dropped == len(bad) - 3
+        assert not pred._buffers and not pred._dirty
+
+    def test_mild_slowdown_still_accepted(self, trained):
+        _, _, _, train, _ = trained
+        app = train[0].name
+        pred = self._pred(trained)
+        pred.observe([_rec("x#0", app, 60.0, 120.0)])  # 2x: a straggler
+        assert pred.n_rejected == 0
+        assert (app, "x#0") in pred._buffers
+
+    def test_repeat_corruption_quarantines_the_meter(self, trained):
+        _, _, _, train, _ = trained
+        app = train[0].name
+        pred = self._pred(trained, quarantine_after=3, quarantine_rounds=5)
+        for r in range(3):
+            pred.observe([_rec("liar#0", app, np.nan, 50.0, round=r)])
+        assert pred.n_rejected == 3
+        # quarantined: even GOOD records from this meter are dropped now
+        pred.observe([_rec("liar#0", app, 60.0, 50.0, round=3)])
+        assert pred.n_quarantine_dropped == 1
+        assert not pred._buffers
+        # a different healthy meter is unaffected
+        pred.observe([_rec("honest#0", app, 60.0, 50.0, round=3)])
+        assert (app, "honest#0") in pred._buffers
+        # after the quarantine window the meter is trusted again
+        pred.observe([_rec("liar#0", app, 60.0, 50.0, round=2 + 5 + 1)])
+        assert (app, "liar#0") in pred._buffers
+
+    def test_batch_ingest_matches_record_loop_under_corruption(self, trained):
+        from repro.cluster.faults import TelemetryCorrupt, corrupt_batch
+
+        system, apps, surfs, train, _ = trained
+        sim = ClusterSim.build(system, train, surfs, n_nodes=12, seed=0)
+        sim.run_round(make_controller("dps", system), budget=900.0)
+        batch = corrupt_batch(
+            sim.last_telemetry,
+            TelemetryCorrupt(round=0, fraction=0.4, mode="nan", seed=7),
+        )
+        p_batch, p_loop = self._pred(trained), self._pred(trained)
+        p_batch.observe(batch)
+        p_loop.observe(list(batch))
+        assert p_batch.n_rejected == p_loop.n_rejected > 0
+        assert p_batch._buffers == p_loop._buffers
+        assert p_batch._corrupt == p_loop._corrupt
+        assert p_batch.prediction_error == p_loop.prediction_error
+
+    def test_refit_never_runs_on_rejected_records(self, trained):
+        _, _, _, train, _ = trained
+        app = train[0].name
+        pred = self._pred(trained, err_threshold=0.0, min_cells=1)
+        for r in range(8):
+            pred.observe([_rec("x#0", app, np.nan, 50.0, round=r)])
+        pred.refresh()
+        assert pred.n_refits == 0
+
+
+# ---------------------------------------------------------------------------
+# Snapshot state (DESIGN.md §18): state_dict / load_state_dict / wipe
+# ---------------------------------------------------------------------------
+
+
+class TestPredictorState:
+    def _pred(self, trained):
+        _, _, _, _, alloc = trained
+        pred = OnlinePredictor(alloc.predictor, OnlinePredictorConfig())
+        pred.seed_surfaces(alloc.predicted)
+        return pred
+
+    def _warm(self, trained, pred):
+        system, apps, surfs, train, _ = trained
+        sim = ClusterSim.build(system, train, surfs, n_nodes=10, seed=3)
+        ctrl = make_controller("ecoshift_online", system, predictor=pred)
+        sim.run(Scenario(3, budget=(500.0, 750.0, 1000.0)), ctrl)
+
+    def test_state_roundtrip_bit_for_bit(self, trained):
+        pred = self._pred(trained)
+        self._warm(trained, pred)
+        state = pred.state_dict()
+        clone = self._pred(trained)
+        clone.load_state_dict(state)
+        assert clone._buffers == pred._buffers
+        assert clone._app_of_instance == pred._app_of_instance
+        assert clone.prediction_error == pred.prediction_error
+        assert clone.n_refits == pred.n_refits
+        for app, surf in pred.surfaces.items():
+            got = clone.surfaces[app]
+            assert np.array_equal(
+                np.asarray(got.table), np.asarray(surf.table)
+            ), app
+
+    def test_wipe_returns_to_seeded_cold_state(self, trained):
+        pred = self._pred(trained)
+        fresh = self._pred(trained)
+        self._warm(trained, pred)
+        assert pred._buffers
+        pred.wipe()
+        assert not pred._buffers and not pred._dirty
+        assert pred.n_refits == 0 and pred.n_rejected == 0
+        assert set(pred.surfaces) == set(fresh.surfaces)
+        for app in fresh.surfaces:
+            assert pred.surfaces[app] is fresh.surfaces[app] or np.array_equal(
+                np.asarray(pred.surfaces[app].table),
+                np.asarray(fresh.surfaces[app].table),
+            )

@@ -7,6 +7,13 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+echo "== repo hygiene (no committed bytecode) =="
+if [ -n "$(git ls-files '*.pyc' '__pycache__')" ]; then
+  echo "ERROR: compiled bytecode is committed:" >&2
+  git ls-files '*.pyc' '__pycache__' >&2
+  exit 1
+fi
+
 if command -v ruff >/dev/null 2>&1; then
   echo "== lint (ruff check) =="
   ruff check .
@@ -42,3 +49,7 @@ python -m benchmarks.incremental_alloc --fast --fused \
 echo "== budget horizon bench (fast day; compliance + MPC-beats-myopic + regression guard vs committed JSON) =="
 python -m benchmarks.budget_horizon --fast \
   --check BENCH_budget_horizon.json --out BENCH_budget_horizon.json
+
+echo "== fault storm bench (fast storm; chaos invariants + crash-restore bit-for-bit + regression guard vs committed JSON) =="
+python -m benchmarks.fault_storm --fast \
+  --check BENCH_fault_storm.json --out BENCH_fault_storm.json

@@ -22,8 +22,13 @@ structure churn must be absorbed by capacity-slack row patches and
 device-side bank compaction, DESIGN.md §17), and exercises the
 online-prediction path: a cold-start arrival (no pretrained surface)
 converging under the ``ecoshift_online`` controller within a handful of
-telemetry rounds.  Exits nonzero on any regression; hard wall-clock
-budget < 90 s.
+telemetry rounds.  The **fault-storm tier** (DESIGN.md §18) drives a
+racked cluster through a heavy seeded storm (telemetry drops/corruption,
+actuation NACK/partial/delay, a mid-run controller crash+restore) and
+asserts the chaos invariants: settled draw under every domain cap and
+the budget each round, and the crash-restored run finishing without
+divergence from its own scheduled rounds.  Exits nonzero on any
+regression; hard wall-clock budget < 90 s.
 
     PYTHONPATH=src python tools/smoke_scenario.py
 """
@@ -64,6 +69,9 @@ MPC_BUDGET_S = 15.0
 #: wall-clock guard for the fused-churn tier alone (first rounds pay the
 #: jitted-pipeline compiles; steady churn rounds are milliseconds)
 FUSED_CHURN_BUDGET_S = 30.0
+
+#: wall-clock guard for the fault-storm tier alone
+FAULT_BUDGET_S = 15.0
 
 
 def scaling_smoke(system, apps, surfs) -> None:
@@ -350,6 +358,90 @@ def fused_churn_smoke(system, apps, surfs) -> None:
     )
 
 
+def fault_storm_smoke(system, apps, surfs) -> None:
+    """Chaos tier (DESIGN.md §18): a racked cluster under a heavy seeded
+    fault storm with a mid-run crash+restore.  PowerGuard must keep the
+    settled draw under every domain cap and the round budget, a restored
+    clean run must be bit-for-bit, and value must survive the storm."""
+    n, n_racks, n_rounds = 200, 4, 10
+    t0 = time.perf_counter()
+    probe = ClusterSim.build(
+        system, apps, surfs, n_nodes=n, seed=0, initial_caps=(150.0, 150.0),
+        topology=PowerTopology.uniform_racks(n, n_racks, rack_cap=1e15),
+    )
+    _, committed, _ = probe.domain_headroom(0)
+    topo = PowerTopology.uniform_racks(
+        n, n_racks, rack_cap=float(committed[1:].max()) + 400.0
+    )
+    budgets = [
+        1600.0, 800.0, 1400.0, 600.0, 1600.0,
+        1000.0, 1500.0, 700.0, 1600.0, 900.0,
+    ]
+    scen = (
+        Scenario(n_rounds, budget=budgets)
+        .with_topology(topo)
+        .with_fault_storm(
+            seed=13, telemetry_drop=0.15, telemetry_corrupt=0.35,
+            telemetry_stale=0.15, actuation_nack=0.4,
+            actuation_partial=0.25, actuation_delay=0.25,
+            node_fraction=0.3, crash_rounds=(n_rounds // 2,),
+        )
+    )
+    sim = ClusterSim.build(
+        system, apps, surfs, n_nodes=n, seed=0,
+        initial_caps=(150.0, 150.0), topology=topo,
+    )
+    trace = sim.run(scen, make_controller("ecoshift_hier", system))
+    assert trace.n_rounds == n_rounds
+    n_nack_rounds = sum(bool(r.nacked) for r in trace.records)
+    assert n_nack_rounds > 0, "storm produced no visible actuation faults"
+    for rec in trace.records:
+        extra = sum(
+            float(np.sum(t.allocated_caps) - np.sum(t.baseline_caps))
+            for t in rec.telemetry
+        )
+        assert extra <= rec.result.budget + 1e-6, (
+            f"round {rec.round}: settled draw {extra:.1f} W over budget "
+            f"{rec.result.budget:.1f} W"
+        )
+        for name, draw in rec.domain_draw.items():
+            assert draw <= rec.domain_caps[name] + 1e-6, (
+                f"round {rec.round}: {name} over cap after settlement"
+            )
+    # crash+restore on a clean channel replays the uninterrupted run
+    clean = Scenario(n_rounds, budget=budgets).with_topology(topo)
+    ref_sim = ClusterSim.build(
+        system, apps, surfs, n_nodes=n, seed=0,
+        initial_caps=(150.0, 150.0), topology=topo,
+    )
+    ref = ref_sim.run(clean, make_controller("ecoshift_hier", system))
+    crash_sim = ClusterSim.build(
+        system, apps, surfs, n_nodes=n, seed=0,
+        initial_caps=(150.0, 150.0), topology=topo,
+    )
+    from repro.cluster import ControllerCrash
+
+    crashed = crash_sim.run(
+        clean.with_faults([ControllerCrash(round=n_rounds // 2)]),
+        make_controller("ecoshift_hier", system),
+    )
+    for a, b in zip(ref.records, crashed.records):
+        assert dict(a.result.allocation.caps) == dict(
+            b.result.allocation.caps
+        ), f"crash-restored run diverged at round {a.round}"
+    elapsed = time.perf_counter() - t0
+    assert elapsed < FAULT_BUDGET_S, (
+        f"fault-storm tier took {elapsed:.1f} s (guard {FAULT_BUDGET_S} s)"
+    )
+    worst = max(r.overdraw_w for r in trace.records)
+    print(
+        f"faults    {n} nodes x {n_racks} racks x {n_rounds} rounds in "
+        f"{elapsed:.1f} s, {n_nack_rounds} NACK rounds, worst pre-derate "
+        f"excursion {worst:.0f} W (settled draw under every cap), "
+        f"crash+restore bit-for-bit"
+    )
+
+
 def online_prediction_smoke(system, apps, surfs) -> None:
     """Cold-start arrival through the telemetry-driven prediction loop."""
     train = [a for a in apps if a.sclass in "CGB"][:8]
@@ -460,6 +552,8 @@ def main() -> None:
     mpc_smoke(system, apps, surfs)
 
     fused_churn_smoke(system, apps, surfs)
+
+    fault_storm_smoke(system, apps, surfs)
 
     online_prediction_smoke(system, apps, surfs)
 
